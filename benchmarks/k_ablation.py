@@ -1,0 +1,42 @@
+"""Paper §5 ablation: k=2 vs k=3 (fixed) vs dynamic per-layer k.
+
+Reports SQNR and storage fraction per option — the accuracy/size trade the
+paper proposes as future work, implemented."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import compute_qparams, dequantize, quantize
+from repro.core.split import choose_k, split_quantize, sqnr_db
+
+
+def run() -> list[tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    w = rng.normal(0, 0.02, (1024, 1024)).astype(np.float32)
+    flat = w.reshape(-1)
+    idx = rng.choice(flat.size, 1024, replace=False)
+    flat[idx] = rng.normal(0, 0.3, 1024)
+    w = jnp.asarray(w)
+
+    rows = []
+    qp = compute_qparams(w, 4)
+    base = dequantize(quantize(w, qp), qp)
+    rows.append(("k_ablation/k1_sqnr_db", float(sqnr_db(w, base)),
+                 "baseline per-tensor, 4/32 size"))
+    for k in (2, 3, 4):
+        sq = split_quantize(w, 4, k=k)
+        rows.append((
+            f"k_ablation/k{k}_sqnr_db", float(sqnr_db(w, sq.dequantize())),
+            f"{k} planes, {k}*4/32={k*4/32:.3f} size "
+            f"(packed: {(4+2)/32:.3f})",
+        ))
+    kd = choose_k(w, 4, max_k=4)
+    rows.append(("k_ablation/dynamic_k", float(kd),
+                 "paper §5 dynamic-k heuristic choice"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,72 @@
+"""Render the roofline table from dry-run JSON records (deliverable g).
+
+Reads experiments/dryrun/*.json and emits CSV rows + a markdown table for
+EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def load_records(mesh: str | None = None) -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN_DIR.glob("*.json")):
+        r = json.loads(p.read_text())
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    for r in load_records():
+        tag = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append((tag, -1.0, f"skipped: {r['reason'][:60]}"))
+            continue
+        if r["status"] != "ok":
+            rows.append((tag, -2.0, f"ERROR {r.get('error','')[:60]}"))
+            continue
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        rows.append((
+            tag, t * 1e3,
+            f"bottleneck={r['bottleneck']} comp={r['t_compute_s']*1e3:.1f}ms "
+            f"mem={r['t_memory_s']*1e3:.1f}ms coll={r['t_collective_s']*1e3:.1f}ms "
+            f"useful={r['useful_fraction']:.2f} mfu_bound={r.get('mfu_bound',0):.3f} "
+            f"hbm/dev={r['per_device_peak_bytes']/2**30:.1f}GiB",
+        ))
+    return rows
+
+
+def markdown(mesh: str = "single") -> str:
+    recs = load_records()
+    hdr = ("| arch | shape | mesh | t_comp ms | t_mem ms | t_coll ms | "
+           "bottleneck | useful | MFU-bound | HBM/dev GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in recs:
+        if r["status"] == "skipped":
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | "
+                f"skipped (full attention @500k) | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ERROR |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']*1e3:.1f} | {r['t_memory_s']*1e3:.1f} | "
+            f"{r['t_collective_s']*1e3:.1f} | {r['bottleneck']} | "
+            f"{r['useful_fraction']:.2f} | {r.get('mfu_bound',0):.3f} | "
+            f"{r['per_device_peak_bytes']/2**30:.1f} |"
+        )
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(markdown())

@@ -1,0 +1,46 @@
+"""Benchmark harness — one module per paper table/figure + scale analyses.
+
+Prints ``name,value,derived`` CSV. Modules:
+  table1_accuracy  — paper Table 1 (INT2/4/8 × baseline/SplitQuantV2)
+  timing           — paper §4.3 running time (CPU-only preprocessing)
+  sqnr_sweep       — SplitQuantV2 gain across all 10 assigned archs
+  k_ablation       — paper §5 k=2/3/dynamic ablation
+  kernel_bench     — quantized-matmul path costs + bandwidth accounting
+  roofline_table   — dry-run roofline terms per (arch × shape × mesh)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    import benchmarks.k_ablation as k_ablation
+    import benchmarks.kernel_bench as kernel_bench
+    import benchmarks.roofline_table as roofline_table
+    import benchmarks.sqnr_sweep as sqnr_sweep
+    import benchmarks.table1_accuracy as table1_accuracy
+    import benchmarks.timing as timing
+
+    mods = [timing, sqnr_sweep, k_ablation, kernel_bench, roofline_table,
+            table1_accuracy]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    print("name,value,derived")
+    failed = 0
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        if only and only != name:
+            continue
+        try:
+            for row_name, value, derived in mod.run():
+                print(f"{row_name},{value},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f"{name}/ERROR,-1,{e!r}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

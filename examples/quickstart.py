@@ -1,0 +1,42 @@
+"""Quickstart: SplitQuantV2 in 30 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Splits a weight matrix with k-means (k=3), verifies exact FP function
+preservation (paper §4.1), quantizes to INT4 with and without the split,
+and prints the resolution gain (paper §4.2 at the weight level).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    split_error_stats, split_fp, split_quantize, split_quantize_packed,
+)
+
+rng = np.random.default_rng(0)
+w = rng.normal(0, 0.02, (512, 512)).astype(np.float32)
+w.reshape(-1)[rng.choice(w.size, 500, replace=False)] = rng.normal(0, 0.3, 500)
+w = jnp.asarray(w)
+x = jnp.asarray(rng.normal(size=(4, 512)).astype(np.float32))
+
+# 1. split into lower/middle/upper cluster layers — function preserved
+planes, info = split_fp(w, k=3)
+assert (np.asarray(planes.sum(0)) == np.asarray(w)).all()
+y_orig = x @ w
+y_split = sum(x @ planes[c] for c in range(3))
+print("max |y_split - y_orig| =", float(jnp.abs(y_split - y_orig).max()))
+print("cluster sizes:", np.asarray(info.counts))
+
+# 2. INT4: baseline linear quant vs SplitQuantV2
+stats = split_error_stats(w, bits=4)
+print(f"INT4 baseline SQNR   : {float(stats['sqnr_base_db']):.1f} dB")
+print(f"INT4 SplitQuantV2    : {float(stats['sqnr_split_db']):.1f} dB")
+
+# 3. storage: paper 3-plane (12 bit/wt) vs beyond-paper packed (6 bit/wt)
+sq = split_quantize(w, 4)
+psq = split_quantize_packed(w, 4)
+nbytes = lambda t: sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(t))
+print(f"fp32 {w.size*4} B | 3-plane {nbytes(sq)} B | packed {nbytes(psq)} B")
+assert (np.asarray(sq.dequantize()) == np.asarray(psq.dequantize())).all()
+print("packed layout is bit-identical to the paper's 3-plane layout")

@@ -1,0 +1,12 @@
+"""Serve a SplitQuantV2-INT4 model with batched requests (continuous
+batching-lite): the serving-side example.
+
+    PYTHONPATH=src python examples/serve_quantized.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main([
+        "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
+        "--batch", "4", "--prompt-len", "16", "--gen", "8",
+    ])

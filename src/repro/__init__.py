@@ -1,0 +1,2 @@
+"""repro — SplitQuantV2 as a production-grade JAX/TPU framework."""
+__version__ = "0.1.0"

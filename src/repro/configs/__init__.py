@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, MoEConfig, ShapeConfig, SSMConfig
+from repro.configs.shapes import ALL_SHAPES, SHAPES, applicable
+
+_MODULES = {
+    "zamba2-1.2b": "zamba2_1p2b",
+    "qwen3-0.6b": "qwen3_0p6b",
+    "gemma3-12b": "gemma3_12b",
+    "internlm2-20b": "internlm2_20b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "whisper-medium": "whisper_medium",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "llama4-scout-17b-a16e": "llama4_scout_17b",
+    "llama32-1b": "llama32_1b",   # the paper's model family
+}
+
+ASSIGNED_ARCHS: tuple[str, ...] = tuple(
+    n for n in _MODULES if n != "llama32-1b"
+)
+ALL_ARCHS: tuple[str, ...] = tuple(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig",
+    "ALL_SHAPES", "SHAPES", "applicable", "get_config",
+    "ASSIGNED_ARCHS", "ALL_ARCHS",
+]

@@ -1,0 +1,141 @@
+"""Architecture + shape configuration dataclasses.
+
+One ``ArchConfig`` per assigned architecture (``repro/configs/<id>.py``),
+plus the paper's own Llama-3.2-1B family. Configs are plain frozen
+dataclasses — hashable, so they ride through jit as static arguments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    n_shared: int = 0
+    d_expert: int = 0           # per-expert FFN width
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba2"        # "mamba2" | "rwkv6"
+    d_state: int = 64           # mamba2 state dim N
+    d_conv: int = 4             # causal conv width
+    expand: int = 2             # d_inner = expand * d_model
+    head_dim: int = 64          # SSM head dim P (mamba) / key dim (rwkv)
+    n_groups: int = 1           # B/C groups (mamba2)
+    chunk: int = 64             # chunked-scan block length
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None           # default d_model // n_heads
+    # attention flavor
+    attn_pattern: tuple[str, ...] = ("global",)  # cycled over layers
+    window: int = 0                       # sliding-window size (local)
+    attn_chunk: int = 0                   # chunked attention (llama4)
+    qk_norm: bool = False
+    rope_theta: float = 1e6
+    mrope: bool = False                   # qwen2-vl 3-D M-RoPE
+    mrope_sections: tuple[int, int, int] = (2, 1, 1)  # t:h:w freq split ratio
+    # mlp flavor
+    act: str = "silu"                     # silu | gelu | sqrelu
+    glu: bool = True
+    # mixture of experts
+    moe: MoEConfig | None = None
+    # state-space / linear-attention
+    ssm: SSMConfig | None = None
+    shared_attn_every: int = 0            # zamba2: shared block cadence
+    # encoder-decoder (whisper)
+    encdec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stub: None | "audio" | "patch"
+    frontend: str | None = None
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-5
+    remat_group: int = 1            # grouped activation checkpointing (train)
+    dtype: str = "bfloat16"               # compute/storage dtype at scale
+
+    def __post_init__(self):
+        if self.head_dim is None and self.n_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or 0
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for the long_500k cell (see DESIGN.md skip table)."""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        if not self.attn_pattern:
+            return False
+        # local/chunked patterns with at most sparse global layers
+        n_local = sum(p in ("local", "chunked") for p in self.attn_pattern)
+        return n_local >= len(self.attn_pattern) - 1 and n_local > 0
+
+    def layer_kinds(self) -> tuple[str, ...]:
+        """Per-layer attention kind, cycling attn_pattern over n_layers."""
+        pat = self.attn_pattern or ("global",)
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    def reduced(self) -> "ArchConfig":
+        """Small same-family config for CPU smoke tests."""
+        kw: dict = dict(
+            n_layers=min(self.n_layers, 4 if self.shared_attn_every else 3),
+            d_model=128,
+            d_ff=256,
+            vocab_size=512,
+            rope_theta=1e4,
+        )
+        if self.n_heads:
+            kw["n_heads"] = 4
+            kw["n_kv_heads"] = max(1, min(self.n_kv_heads, 2))
+            kw["head_dim"] = 32
+        if self.moe is not None:
+            # capacity_factor = E/k => capacity == token count: nothing ever
+            # drops at smoke scale, so prefill/decode/teacher-forced paths
+            # are bit-consistent (capacity dropping is exercised at prod
+            # scale via the dry-run and in test_moe_capacity_drops).
+            kw["moe"] = replace(
+                self.moe, n_experts=8, top_k=min(self.moe.top_k, 2),
+                d_expert=64, capacity_factor=8.0,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = replace(
+                self.ssm, d_state=16, head_dim=16, chunk=8,
+            )
+        if self.shared_attn_every:
+            kw["shared_attn_every"] = 2
+        if self.encdec:
+            kw["n_enc_layers"] = 2
+        if self.window:
+            kw["window"] = 16
+        if self.attn_chunk:
+            kw["attn_chunk"] = 16
+        kw["dtype"] = "float32"
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+    def reduced(self) -> "ShapeConfig":
+        return replace(
+            self, seq_len=min(self.seq_len, 32), global_batch=min(self.global_batch, 2)
+        )

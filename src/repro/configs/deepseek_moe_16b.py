@@ -1,0 +1,20 @@
+"""deepseek-moe-16b [moe] — 28L d_model=2048 16H (kv=16) vocab=102400,
+fine-grained MoE: 64 routed experts top-6 + 2 shared, d_expert=1408
+[arXiv:2401.06066; hf]. (Real model's dense layer 0 folded into the
+homogeneous MoE stack for scan-ability; see DESIGN.md.)"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab_size=102400,
+    moe=MoEConfig(n_experts=64, top_k=6, n_shared=2, d_expert=1408),
+    act="silu",
+    glu=True,
+)

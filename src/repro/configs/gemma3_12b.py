@@ -1,0 +1,22 @@
+"""gemma3-12b [dense] — 48L d_model=3840 16H (GQA kv=8) d_ff=15360
+vocab=262144, 5:1 local:global sliding-window attention, 128k context
+[hf:google/gemma-3-1b-pt; unverified]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=240,
+    d_ff=15360,
+    vocab_size=262144,
+    attn_pattern=("local",) * 5 + ("global",),
+    window=1024,
+    qk_norm=True,
+    act="gelu",
+    glu=True,
+    rope_theta=1e6,
+)

@@ -1,0 +1,19 @@
+"""llama-3.2-1b [dense] — the paper's own evaluation model family:
+16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256
+[arXiv:2407.21783]. Used by the paper-faithful reproduction pipeline."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama32-1b",
+    family="dense",
+    n_layers=16,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    act="silu",
+    glu=True,
+    rope_theta=5e5,
+)

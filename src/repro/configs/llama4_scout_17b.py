@@ -1,0 +1,23 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8) vocab=202048,
+MoE 16 routed experts top-1 + 1 shared (d_expert=8192), 3:1 chunked-local :
+global attention (chunk 8192), early-fusion multimodal (text path modeled)
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]."""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    remat_group=2,
+    vocab_size=202048,
+    moe=MoEConfig(n_experts=16, top_k=1, n_shared=1, d_expert=8192),
+    attn_pattern=("chunked", "chunked", "chunked", "global"),
+    attn_chunk=8192,
+    act="silu",
+    glu=True,
+)

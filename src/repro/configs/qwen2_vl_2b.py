@@ -1,0 +1,21 @@
+"""qwen2-vl-2b [vlm] — LM backbone only: 28L d_model=1536 12H (GQA kv=2)
+d_ff=8960 vocab=151936, M-RoPE (3-D positions); vision patch frontend
+STUBBED (input_specs provides precomputed patch embeddings)
+[arXiv:2409.12191; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    mrope=True,
+    frontend="patch",
+    act="silu",
+    glu=True,
+)

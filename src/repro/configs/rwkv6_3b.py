@@ -1,0 +1,19 @@
+"""rwkv6-3b [ssm] — Finch: 32L d_model=2560, attention-free, d_ff=8960
+vocab=65536, data-dependent per-channel decay [arXiv:2404.05892; hf].
+head size 64 -> 40 heads."""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=None,
+    d_ff=8960,
+    vocab_size=65536,
+    ssm=SSMConfig(kind="rwkv6", head_dim=64, chunk=32),
+    act="relu",   # rwkv channel-mix uses relu^2; handled in ssm.py
+    glu=False,
+)

@@ -1,0 +1,25 @@
+"""The four assigned input-shape cells (per-arch applicability in DESIGN.md).
+
+``train_*`` lowers ``train_step``; ``prefill_*`` lowers the batched prefill
+``serve_step``; ``decode_*`` / ``long_*`` lower the single-new-token decode
+``serve_step`` with a KV cache of ``seq_len``.
+"""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+TRAIN_4K = ShapeConfig("train_4k", seq_len=4096, global_batch=256, kind="train")
+PREFILL_32K = ShapeConfig("prefill_32k", seq_len=32768, global_batch=32, kind="prefill")
+DECODE_32K = ShapeConfig("decode_32k", seq_len=32768, global_batch=128, kind="decode")
+LONG_500K = ShapeConfig("long_500k", seq_len=524288, global_batch=1, kind="decode")
+
+ALL_SHAPES: tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def applicable(arch: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped). Only long_500k has skips (full-attention
+    archs; see DESIGN.md §Shape-cell skips)."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "pure full-attention arch: 500k decode needs sub-quadratic attention"
+    return True, ""

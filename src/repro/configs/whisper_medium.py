@@ -1,0 +1,22 @@
+"""whisper-medium [audio] — enc-dec, 24L each side, d_model=1024 16H (kv=16)
+d_ff=4096 vocab=51865, conv frontend STUBBED (input_specs provides
+precomputed frame embeddings) [arXiv:2212.04356; unverified]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    n_layers=24,
+    n_enc_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    encdec=True,
+    frontend="audio",
+    act="gelu",
+    glu=False,
+    rope_theta=1e4,
+)

@@ -1,0 +1,25 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention block.
+
+38L d_model=2048 32H (kv=32) d_ff=8192 vocab=32000 ssm_state=64
+[arXiv:2411.15242; hf]. The Zamba2 shared transformer block (one set of
+attention+MLP weights reused at a fixed cadence) is modeled with
+``shared_attn_every=6`` → 6 application points over 38 Mamba2 layers; each
+application point has its own KV cache (same weights, distinct activations).
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm=SSMConfig(kind="mamba2", d_state=64, expand=2, head_dim=64, chunk=64),
+    shared_attn_every=6,
+    act="gelu",
+    glu=True,
+)

@@ -1,0 +1,43 @@
+"""SplitQuantV2 core: k-means clustering, linear quantization, layer
+splitting, and the whole-model restructuring pass."""
+from repro.core.apply import QuantizedModel, quantize_model, restructure
+from repro.core.kmeans import kmeans1d, cluster_masks
+from repro.core.policy import QuantPolicy
+from repro.core.qlinear import (
+    linear,
+    qlinear,
+    splitq_linear_3pass,
+    splitq_linear_fused,
+    splitq_linear_packed,
+)
+# NOTE: the bare `quantize` function is intentionally NOT re-exported — it
+# would shadow the `repro.core.quantize` submodule attribute on the package.
+from repro.core.quantize import (
+    QParams,
+    QTensor,
+    compute_qparams,
+    dequantize,
+    fake_quant,
+    pack_codes,
+    quantize_tensor,
+    unpack_codes,
+)
+from repro.core.split import (
+    PackedSplitQTensor,
+    SplitQTensor,
+    split_error_stats,
+    split_fp,
+    split_quantize,
+    split_quantize_packed,
+    sqnr_db,
+)
+
+__all__ = [
+    "QuantizedModel", "quantize_model", "restructure", "kmeans1d",
+    "cluster_masks", "QuantPolicy", "linear", "qlinear",
+    "splitq_linear_3pass", "splitq_linear_fused", "splitq_linear_packed",
+    "QParams", "QTensor", "compute_qparams", "dequantize", "fake_quant",
+    "pack_codes", "quantize_tensor", "unpack_codes",
+    "PackedSplitQTensor", "SplitQTensor", "split_error_stats", "split_fp",
+    "split_quantize", "split_quantize_packed", "sqnr_db",
+]

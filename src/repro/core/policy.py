@@ -1,0 +1,44 @@
+"""Which parameters get split/quantized (paper §3 exclusions + safety adds).
+
+The paper excludes: embedding tables (lookup semantics, not matmul),
+normalization parameters (gamma/beta are calibration-critical 1-D vectors),
+activations (need calibration data — out of SplitQuantV2's scope). We add:
+MoE router matrices (tiny but routing-decisive), biases, and any rank<2
+parameter. Matching is by parameter *path* (all model-zoo params have
+stable, descriptive paths) plus rank, so the policy transfers to any pytree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Sequence
+
+EXCLUDE_SUBSTRINGS: tuple[str, ...] = (
+    "embed",       # embedding tables (paper §3)
+    "norm",        # all normalization params (paper §3)
+    "scale",       # qk-norm / per-channel scales
+    "bias",
+    "router",      # MoE gate — tiny, accuracy-critical
+    "conv",        # depthwise conv1d kernels (mamba2) / stub frontends
+    "a_log",       # mamba2 state decay
+    "dt_",         # mamba2 Δt projection params (1-D-ish, dynamics-critical)
+    "time_",       # rwkv6 time-mix μ / decay vectors
+    "pos",         # positional tables
+)
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    """Configuration of the restructuring pass."""
+
+    bits: int = 4
+    k: int = 3                      # paper fixes k=3; 2 is the §5 trade-off
+    split: bool = True              # False → plain linear-quant baseline
+    packed: bool = False            # beyond-paper 6-bit layout
+    min_size: int = 4096            # don't bother below this many elements
+    exclude: Sequence[str] = field(default_factory=lambda: EXCLUDE_SUBSTRINGS)
+
+    def wants(self, path: str, ndim: int, size: int) -> bool:
+        if ndim < 2 or size < self.min_size:
+            return False
+        p = path.lower()
+        return not any(s in p for s in self.exclude)

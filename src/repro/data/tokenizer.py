@@ -1,0 +1,25 @@
+"""Byte-level tokenizer for the end-to-end examples (no external vocab).
+
+ids 0..255 = raw bytes; 256 = BOS, 257 = EOS, 258 = PAD. Deterministic,
+reversible, dependency-free — enough to train/evaluate the small LMs the
+paper-reproduction pipeline quantizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+BOS, EOS, PAD = 256, 257, 258
+VOCAB = 259
+
+
+def encode(text: str, add_special: bool = True) -> np.ndarray:
+    b = np.frombuffer(text.encode("utf-8", errors="replace"), np.uint8)
+    ids = b.astype(np.int32)
+    if add_special:
+        ids = np.concatenate([[BOS], ids, [EOS]]).astype(np.int32)
+    return ids
+
+
+def decode(ids) -> str:
+    b = bytes(int(i) for i in ids if 0 <= int(i) < 256)
+    return b.decode("utf-8", errors="replace")

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for SplitQuantV2 deployment + preprocessing.
+
+Layout: <name>.py holds the pl.pallas_call + BlockSpec kernel, ops.py the
+jit'd public wrappers (padding, backend dispatch), ref.py the pure-jnp
+oracles used by the interpret-mode test sweeps.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,112 @@
+"""Flash attention (forward) Pallas kernel — TPU-native online-softmax SDPA.
+
+Why it exists here: the dry-run roofline shows every *_train/prefill cell is
+memory-bound, dominated by (B, H, Sq, Sk) score traffic (3-13 GB/device per
+layer-pass at 32k). Flash attention keeps score blocks in VMEM: HBM traffic
+collapses to Q + K + V + O. This kernel is the TPU implementation; in the
+XLA-level dry-run its effect is modeled by the ``fused:flash_attn`` region
+accounting in roofline/hlocost.py (CPU backend cannot lower Pallas, see
+DESIGN.md §Hardware adaptation).
+
+Tiling: grid (B*H, Sq/bq, Sk/bk) with the KV dim innermost (sequential on
+TPU): the (bq, hd) output tile + running (max, sum) live in VMEM scratch
+across the Sk sweep — the standard 2-pass-free online softmax.
+Supports causal masking + sliding window via absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, bq: int, bk: int, nk: int,
+):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)          # (bk, hd)
+    s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0
+    )
+    k_pos = kk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                        # (bq, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur)                     # (bq, bk)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype
+        )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (BH, Sq, hd)
+    k: jax.Array,  # (BH, Sk, hd)
+    v: jax.Array,  # (BH, Sk, hd)
+    causal: bool = True,
+    window: int = 0,
+    bq: int = 512,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nk = sk // bk
+    scale = hd ** -0.5
+    grid = (bh, sq // bq, nk)
+    return pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, window=window,
+            bq=bq, bk=bk, nk=nk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, kk: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, kk: (b, kk, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, kk: (b, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, kk: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,81 @@
+"""Pallas kernel for the 1-D k-means assign+reduce hot loop.
+
+One Lloyd iteration = nearest-centroid assignment + per-cluster (sum, count)
+reduction over every scalar weight. For a 20B-parameter model this pass
+touches 20B floats × iters, so it is the preprocessing hot spot (the paper's
+"2 CPU-minutes for 1B" budget lives here). The kernel streams value tiles
+through VMEM and accumulates k running (sum, count) pairs across the
+sequential TPU grid into a single output block — O(n) HBM reads, O(k)
+writes.
+
+k is static and tiny (=3), so assignment is a select chain on the VPU, not
+an argmin gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assign_reduce_kernel(x_ref, m_ref, c_ref, sums_ref, counts_ref, *, k: int):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    mask = m_ref[...].astype(jnp.float32)
+    # nearest centroid via select chain (k static, centroids sorted)
+    best_d = jnp.abs(x - c_ref[0, 0])
+    best_i = jnp.zeros(x.shape, jnp.int32)
+    for c in range(1, k):
+        d = jnp.abs(x - c_ref[c, 0])
+        take = d < best_d
+        best_d = jnp.where(take, d, best_d)
+        best_i = jnp.where(take, c, best_i)
+    for c in range(k):
+        sel = jnp.where((best_i == c), mask, 0.0)
+        sums_ref[c, 0] += jnp.sum(sel * x)
+        counts_ref[c, 0] += jnp.sum(sel)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "br", "bc", "interpret"))
+def kmeans_assign_reduce_pallas(
+    x2d: jax.Array,   # (R, C) values (flattened weights, padded)
+    mask: jax.Array,  # (R, C) 1.0 for real entries, 0.0 for padding
+    centroids: jax.Array,  # (k,)
+    k: int = 3,
+    br: int = 256,
+    bc: int = 512,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    r, c = x2d.shape
+    assert r % br == 0 and c % bc == 0
+    cents = centroids.reshape(k, 1).astype(jnp.float32)
+    grid = (r // br, c // bc)
+    sums, counts = pl.pallas_call(
+        functools.partial(_assign_reduce_kernel, k=k),
+        grid=(grid[0] * grid[1],),
+        in_specs=[
+            pl.BlockSpec(
+                (br, bc), lambda g, nc=grid[1]: (g // nc, g % nc)
+            ),
+            pl.BlockSpec(
+                (br, bc), lambda g, nc=grid[1]: (g // nc, g % nc)
+            ),
+            pl.BlockSpec((k, 1), lambda g: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, 1), lambda g: (0, 0)),
+            pl.BlockSpec((k, 1), lambda g: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d, mask, cents)
+    return sums[:, 0], counts[:, 0]

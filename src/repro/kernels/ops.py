@@ -1,0 +1,145 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: padding to block multiples (zero-padding K on the activation side
+is value-preserving; N/M padding is sliced off), backend dispatch (compiled
+Pallas on TPU, ``interpret=True`` elsewhere — this container is CPU, so
+tests exercise the interpreter path), and pytree-level entry points taking
+the core's SplitQTensor / PackedSplitQTensor containers directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import PackedSplitQTensor, SplitQTensor
+from repro.kernels import ref
+from repro.kernels.kmeans1d import kmeans_assign_reduce_pallas
+from repro.kernels.quant_matmul import quant_matmul_pallas
+from repro.kernels.quantize_pack import quantize_pack_pallas
+from repro.kernels.splitq_matmul import splitq_matmul_pallas
+from repro.kernels.splitq_packed import splitq_packed_matmul_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        x = jnp.pad(x, pads)
+    return x
+
+
+def quant_matmul(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    zero: jax.Array,
+    bits: int,
+    *,
+    block: tuple[int, int, int] = (128, 512, 128),
+) -> jax.Array:
+    """y = x @ dequant(W).  x: (..., K); w_packed: (K, N//per)."""
+    bm, bn, bk = block
+    per = 8 // bits
+    lead = x.shape[:-1]
+    m = int(jnp.prod(jnp.array(lead))) if lead else 1
+    k = x.shape[-1]
+    n = w_packed.shape[1] * per
+    x2 = _pad_to(x.reshape(m, k), (bm, bk))
+    wp = _pad_to(w_packed, (bk, bn // per))
+    y = quant_matmul_pallas(
+        x2, wp, jnp.asarray(scale), jnp.asarray(zero), bits,
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+    )
+    return y[:m, :n].reshape(*lead, n)
+
+
+def splitq_matmul(
+    x: jax.Array, sq: SplitQTensor, *, block: tuple[int, int, int] = (128, 512, 128)
+) -> jax.Array:
+    """Fused k-plane SplitQuantV2 matmul. x: (..., K); sq.shape == (K, N)."""
+    bm, bn, bk = block
+    per = 8 // sq.bits
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    k = x.shape[-1]
+    n = sq.shape[-1]
+    x2 = _pad_to(x.reshape(m, k), (bm, bk))
+    planes = _pad_to(sq.planes, (1, bk, bn // per))
+    y = splitq_matmul_pallas(
+        x2, planes, sq.scales, sq.zeros, sq.bits,
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+    )
+    return y[:m, :n].reshape(*lead, n)
+
+
+def splitq_packed_matmul(
+    x: jax.Array,
+    psq: PackedSplitQTensor,
+    *,
+    block: tuple[int, int, int] = (128, 512, 128),
+) -> jax.Array:
+    """6-bit packed SplitQuantV2 matmul. x: (..., K)."""
+    bm, bn, bk = block
+    per = 8 // psq.bits
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    k = x.shape[-1]
+    n = psq.shape[-1]
+    x2 = _pad_to(x.reshape(m, k), (bm, bk))
+    codes = _pad_to(psq.codes, (bk, bn // per))
+    cids = _pad_to(psq.cids, (bk, bn // 4))
+    y = splitq_packed_matmul_pallas(
+        x2, codes, cids, psq.scales, psq.zeros, psq.bits,
+        bm=bm, bn=bn, bk=bk, interpret=_interpret(),
+    )
+    return y[:m, :n].reshape(*lead, n)
+
+
+def quantize_pack(
+    w: jax.Array, scale: jax.Array, zero: jax.Array, bits: int,
+    *, block: tuple[int, int] = (256, 512),
+) -> jax.Array:
+    """Fused quantize+pack. w: (R, C) -> (R, C//per) int8, C padded entries
+    are quantized zeros (caller slices by logical shape)."""
+    br, bc = block
+    per = 8 // bits
+    r, c = w.shape
+    w2 = _pad_to(w, (br, bc))
+    out = quantize_pack_pallas(
+        w2, jnp.asarray(scale), jnp.asarray(zero), bits,
+        br=br, bc=bc, interpret=_interpret(),
+    )
+    return out[:r, : (c + per - 1) // per]
+
+
+def kmeans_assign_reduce(
+    x: jax.Array, centroids: jax.Array, *, block: tuple[int, int] = (256, 512)
+) -> tuple[jax.Array, jax.Array]:
+    """Per-cluster (sum, count) over all elements of x (any shape)."""
+    br, bc = block
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    cols = bc
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    x2 = jnp.pad(flat, (0, pad)).reshape(rows, cols)
+    mask = jnp.pad(jnp.ones((n,), jnp.float32), (0, pad)).reshape(rows, cols)
+    x2 = _pad_to(x2, (br, bc))
+    mask = _pad_to(mask, (br, bc))
+    return kmeans_assign_reduce_pallas(
+        x2, mask, centroids, k=centroids.shape[0],
+        br=br, bc=bc, interpret=_interpret(),
+    )
+
+
+# Re-export oracles for test convenience.
+oracle = ref

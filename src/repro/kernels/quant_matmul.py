@@ -1,0 +1,101 @@
+"""W4A16/W8A16/W2A16 dequant-in-VMEM matmul Pallas kernel.
+
+The baseline deployment kernel for linearly-quantized weights: packed int-b
+codes are streamed HBM→VMEM, unpacked + dequantized tile-by-tile in VMEM,
+and fed to the MXU as fp32/bf16 with an fp32 VMEM accumulator.
+
+Tiling: grid (M/bm, N/bn, K/bk), K innermost (sequential on TPU) so the
+(bm, bn) accumulator lives in a VMEM scratch across the K sweep. Block
+shapes default to MXU-aligned (128, 128, 512); the packed weight tile is
+(bk, bn/per) int8 — e.g. (128, 256) for int4 at bn=512, keeping the minor
+dim a multiple of 128 as the int8 VREG layout wants.
+
+Weight layout: codes packed along the last (N) axis, little-nibble-first —
+byte j of row i holds columns per*j .. per*j+per-1 (matches
+``repro.core.quantize.pack_codes``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_tile(packed: jax.Array, bits: int) -> jax.Array:
+    """(r, c) int8 carriers -> (r, c*per) int32 sign-extended codes."""
+    if bits == 8:
+        return packed.astype(jnp.int32)
+    per = 8 // bits
+    mask = (1 << bits) - 1
+    u = packed.astype(jnp.uint8)
+    parts = []
+    for i in range(per):
+        v = ((u >> jnp.uint8(i * bits)) & jnp.uint8(mask)).astype(jnp.int32)
+        v = jnp.where(v >= (1 << (bits - 1)), v - (1 << bits), v)
+        parts.append(v)
+    q = jnp.stack(parts, axis=-1)
+    return q.reshape(packed.shape[0], packed.shape[1] * per)
+
+
+def _quant_matmul_kernel(
+    x_ref, w_ref, s_ref, z_ref, o_ref, acc_ref, *, bits: int, nk: int
+):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = _unpack_tile(w_ref[...], bits).astype(jnp.float32)
+    inv_s = s_ref[0, 0]  # reciprocal scale, precomputed host-side
+    z = z_ref[0, 0]
+    w = (q - z) * inv_s
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...].astype(jnp.float32), w,
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "bm", "bn", "bk", "interpret"),
+)
+def quant_matmul_pallas(
+    x: jax.Array,        # (M, K)
+    w_packed: jax.Array, # (K, N//per) int8 carriers
+    scale: jax.Array,    # () per-tensor
+    zero: jax.Array,     # ()
+    bits: int,
+    bm: int = 128,
+    bn: int = 512,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Caller must pre-pad M/N/K to block multiples (see ops.quant_matmul)."""
+    per = 8 // bits
+    m, k = x.shape
+    n = w_packed.shape[1] * per
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, n, k, bm, bn, bk)
+    nk = k // bk
+    inv_s = (1.0 / scale).reshape(1, 1).astype(jnp.float32)
+    z = zero.reshape(1, 1).astype(jnp.float32)
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_quant_matmul_kernel, bits=bits, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn // per), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_packed, inv_s, z)

@@ -1,0 +1,61 @@
+"""Fused quantize+pack elementwise Pallas kernel.
+
+Used by the preprocessing pass after SplitQuantV2 clustering: one pass over
+the weights computes codes = clip(round(S·w) + Z) and packs them ``per`` per
+byte along the minor axis — HBM traffic is read-once/write-b/8, instead of a
+quantize pass + a separate pack pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quantize_pack_kernel(w_ref, s_ref, z_ref, o_ref, *, bits: int):
+    per = 8 // bits
+    s = s_ref[0, 0]
+    z = z_ref[0, 0]
+    q = jnp.round(s * w_ref[...].astype(jnp.float32)) + z
+    q = jnp.clip(q, -(2 ** (bits - 1)), 2 ** (bits - 1) - 1).astype(jnp.int32)
+    r, c = q.shape
+    if per == 1:
+        o_ref[...] = q.astype(jnp.int8)
+        return
+    u = (q & ((1 << bits) - 1)).astype(jnp.uint8)
+    u = u.reshape(r, c // per, per)
+    packed = u[..., 0]
+    for i in range(1, per):
+        packed = packed | (u[..., i] << jnp.uint8(i * bits))
+    o_ref[...] = packed.astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "br", "bc", "interpret"))
+def quantize_pack_pallas(
+    w: jax.Array,      # (R, C)
+    scale: jax.Array,  # ()
+    zero: jax.Array,   # ()
+    bits: int,
+    br: int = 256,
+    bc: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    per = 8 // bits
+    r, c = w.shape
+    assert r % br == 0 and c % bc == 0 and bc % per == 0
+    s = scale.reshape(1, 1).astype(jnp.float32)
+    z = zero.reshape(1, 1).astype(jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_quantize_pack_kernel, bits=bits),
+        grid=(r // br, c // bc),
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, bc // per), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c // per), jnp.int8),
+        interpret=interpret,
+    )(w, s, z)

@@ -1,0 +1,28 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+overrides the host device count and everything else must see 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (data, model) or 2x16x16 (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh (reduced test meshes, elastic re-meshes)."""
+    return jax.make_mesh(shape, axes)
+
+
+def batch_shards(mesh) -> int:
+    """Number of shards the batch dim is split into (pod x data)."""
+    n = mesh.shape.get("data", 1)
+    n *= mesh.shape.get("pod", 1)
+    return n

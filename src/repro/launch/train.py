@@ -1,0 +1,143 @@
+"""Production trainer CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama32-1b \
+        --steps 200 --batch 8 --seq 256 --mesh 1x1 --ckpt-dir /tmp/ckpt
+
+Wires together: config registry, data pipeline (deterministic resume),
+sharded train step (DP/TP/SP/ZeRO-1), async checkpointing, preemption
+handling, straggler heartbeats, and retry-on-transient-failure. The same
+loop drives the CPU examples and a real multi-host launch (host topology
+from env: REPRO_HOST_ID / REPRO_N_HOSTS).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import numpy as np
+
+
+def parse_mesh(s: str):
+    dims = tuple(int(x) for x in s.split("x"))
+    if len(dims) == 2:
+        return dims, ("data", "model")
+    if len(dims) == 3:
+        return dims, ("pod", "data", "model")
+    raise ValueError(f"mesh must be DxM or PxDxM, got {s}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama32-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--heartbeat-dir", default=None)
+    args = ap.parse_args(argv)
+
+    from repro.checkpoint.manager import CheckpointManager
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.data.pipeline import DataLoader, Prefetcher, SyntheticLM
+    from repro.launch.mesh import make_mesh
+    from repro.models import build_model
+    from repro.optim import adamw
+    from repro.runtime import steps as steps_mod
+    from repro.runtime.fault import Heartbeat, PreemptionGuard, run_with_retries
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    dims, axes = parse_mesh(args.mesh)
+    mesh = make_mesh(dims, axes)
+
+    opt_cfg = adamw.AdamWConfig(
+        peak_lr=args.lr, warmup=args.warmup, total_steps=args.steps
+    )
+    step_fn, (p_shd, o_shd, b_shd), _ = steps_mod.build_train_step(
+        model, mesh, opt_cfg, shape
+    )
+
+    host_id = int(os.environ.get("REPRO_HOST_ID", "0"))
+    n_hosts = int(os.environ.get("REPRO_N_HOSTS", "1"))
+    loader = DataLoader(
+        SyntheticLM(cfg.vocab_size, seed=args.seed), args.batch, args.seq,
+        seed=args.seed, host_id=host_id, n_hosts=n_hosts,
+    )
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    with mesh:
+        params = jax.jit(model.init, out_shardings=p_shd)(
+            jax.random.PRNGKey(args.seed)
+        )
+        opt = jax.jit(adamw.init_opt_state, out_shardings=o_shd)(params)
+        if ckpt and args.resume and ckpt.latest_step() is not None:
+            start_step, state = ckpt.restore(
+                None, {"params": params, "opt": opt},
+                {"params": p_shd, "opt": o_shd},
+            )
+            params, opt = state["params"], state["opt"]
+            print(f"[train] resumed from step {start_step}")
+
+        guard = PreemptionGuard().install()
+        hb = Heartbeat(args.heartbeat_dir, host_id) if args.heartbeat_dir else None
+        it = iter(Prefetcher(iter(
+            loader.batch_at(s) for s in range(start_step, args.steps)
+        )))
+        t_last = time.time()
+        for step in range(start_step, args.steps):
+            batch = next(it)
+            batch = {k: jax.device_put(v, b_shd[k]) for k, v in batch.items()}
+
+            def do_step():
+                nonlocal params, opt
+                params, opt, metrics = step_fn(params, opt, batch)
+                return metrics
+
+            metrics = run_with_retries(
+                do_step,
+                on_failure=lambda a, e: print(f"[train] retry {a}: {e!r}"),
+            )
+            dt = time.time() - t_last
+            t_last = time.time()
+            if hb:
+                hb.beat(step, dt)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(
+                    f"[train] step {step} loss={float(metrics['loss']):.4f} "
+                    f"lr={float(metrics['lr']):.2e} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} {dt*1e3:.0f}ms",
+                    flush=True,
+                )
+            if ckpt and ((step + 1) % args.ckpt_every == 0 or guard.requested):
+                ckpt.save(step + 1, {"params": params, "opt": opt})
+                if guard.requested:
+                    print("[train] preemption requested: checkpointed, exiting")
+                    ckpt.wait()
+                    return 0
+        if ckpt:
+            ckpt.save(args.steps, {"params": params, "opt": opt},
+                      blocking=True)
+    print("[train] done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

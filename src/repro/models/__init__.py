@@ -1,0 +1,2 @@
+"""Architecture zoo: layers, attention, MoE, SSM, assembly, public Model API."""
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,239 @@
+"""GQA attention: global / sliding-window / chunked masks, qk-norm, RoPE and
+M-RoPE, KV caches, cross-attention, and a memory-bounded query-chunked
+softmax path for long sequences.
+
+Memory plan: training/prefill attention scans over query chunks of
+``Q_CHUNK`` so live score tensors are (B, q_chunk, H, Sk) instead of
+(B, Sq, H, Sk) — at prefill_32k production scale that is the difference
+between 0.8 GB and 26 GB per chip. Decode (Sq == 1) takes the direct path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_mrope, apply_rope, rms_norm
+from repro.runtime.sharding import act_constraint
+
+import contextlib
+import threading
+
+Q_CHUNK = 1024
+NEG_INF = -1e30
+
+_FLASH = threading.local()
+
+
+@contextlib.contextmanager
+def flash_fusion(enabled: bool = True):
+    """Mark the attention core as the hand-written flash kernel for the
+    roofline (jax.named_scope 'fused_kernel' — see roofline/hlocost.py).
+    Numerics are identical; only the HLO byte accounting changes, modeling
+    kernels/flash_attention.py which the CPU backend cannot lower."""
+    prev = getattr(_FLASH, "on", False)
+    _FLASH.on = enabled
+    try:
+        yield
+    finally:
+        _FLASH.on = prev
+
+
+def _flash_scope():
+    if getattr(_FLASH, "on", False):
+        return jax.named_scope("fused_kernel_flash_attn")
+    return contextlib.nullcontext()
+
+
+def init_attention(rng, cfg, dtype) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(rng, 4)
+    s = d ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (d, h * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (d, kv * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (d, kv * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (h * hd, d), dtype) * (h * hd) ** -0.5,
+    }
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.zeros((hd,), dtype)
+        p["k_norm_scale"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _mask(
+    q_pos: jax.Array,  # (B, Sq)
+    k_pos: jax.Array,  # (B, Sk)
+    *,
+    causal: bool,
+    window: jax.Array | int,      # 0 => unlimited
+    chunk: jax.Array | int,       # 0 => no chunking
+    k_len: jax.Array | None,      # (B,) valid cache length (decode); None => all
+) -> jax.Array:
+    """Boolean (B, Sq, Sk) attention mask from absolute positions."""
+    q = q_pos[:, :, None]
+    k = k_pos[:, None, :]
+    m = jnp.ones(q.shape[:2] + (k_pos.shape[-1],), bool)
+    if causal:
+        m &= k <= q
+    w = jnp.asarray(window)
+    m &= jnp.where(w > 0, (q - k) < w, True)
+    c = jnp.asarray(chunk)
+    m &= jnp.where(c > 0, (q // jnp.maximum(c, 1)) == (k // jnp.maximum(c, 1)), True)
+    if k_len is not None:
+        m &= k < k_len[:, None, None]
+    return m
+
+
+def _sdpa(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    mask: jax.Array,  # (B, Sq, Sk)
+) -> jax.Array:
+    """GQA via explicit KV-head expansion.
+
+    Expanding K/V to H heads (instead of a (KV, G) split) keeps the score
+    tensor shardable on the *head* dim even when KV doesn't divide the TP
+    degree (kv=8 on a 16-wide model axis): with the (KV, G) formulation
+    GSPMD contracts over the sharded head_dim and materializes UNSHARDED
+    (B, KV, G, Sq, Sk) scores — 12.9 GB/device at nemotron prefill_32k.
+    The expanded K/V is a broadcast XLA fuses into the matmul; the
+    head-sharding constraint pins scores to P(batch, 'model', ...)."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1 and sq == 1:
+        # decode: grouped formulation — expanding K/V would re-materialize
+        # the whole 32k cache x G per token (~600 GB/step at internlm2
+        # scale). Scores are tiny at sq=1, so the (KV, G) split is free.
+        qf = q.reshape(b, sq, kvh, g, hd).astype(jnp.float32)
+        scores = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32)
+        ) * (hd ** -0.5)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+        return out.reshape(b, sq, h, hd).astype(q.dtype)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qf = act_constraint(q.astype(jnp.float32), "heads")
+    kf = act_constraint(k.astype(jnp.float32), "heads")
+    vf = act_constraint(v.astype(jnp.float32), "heads")
+    scores = jnp.einsum("bqhd,bshd->bhqs", qf, kf) * (hd ** -0.5)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", w, vf)
+    return out.astype(q.dtype)
+
+
+def attend(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    q_pos: jax.Array,
+    k_pos: jax.Array,
+    *,
+    causal: bool = True,
+    window: jax.Array | int = 0,
+    chunk: jax.Array | int = 0,
+    k_len: jax.Array | None = None,
+) -> jax.Array:
+    """Query-chunked SDPA. Shapes as in :func:`_sdpa`."""
+    sq = q.shape[1]
+    if sq <= Q_CHUNK or sq % Q_CHUNK != 0:
+        with _flash_scope():
+            return _sdpa(q, k, v, _mask(q_pos, k_pos, causal=causal,
+                                        window=window, chunk=chunk,
+                                        k_len=k_len))
+
+    n = sq // Q_CHUNK
+    k = act_constraint(k, "heads")
+    v = act_constraint(v, "heads")
+
+    def body(_, qc):
+        qi, qpi = qc
+        with _flash_scope():
+            m = _mask(qpi, k_pos, causal=causal, window=window, chunk=chunk,
+                      k_len=k_len)
+            out = _sdpa(qi, k, v, m)
+        return None, out
+
+    qs = q.reshape(q.shape[0], n, Q_CHUNK, *q.shape[2:])
+    qs = act_constraint(qs, "heads5").swapaxes(0, 1)
+    qps = q_pos.reshape(q_pos.shape[0], n, Q_CHUNK).swapaxes(0, 1)
+    # remat per chunk: without it the scan saves EVERY chunk's score tensor
+    # for backward — the full S^2 scores, exactly what chunking avoids
+    _, outs = jax.lax.scan(jax.checkpoint(body), None, (qs, qps))
+    out = outs.swapaxes(0, 1).reshape(q.shape)
+    return out
+
+
+def attention_block(
+    p: dict,
+    cfg,
+    x: jax.Array,            # (B, S, D)
+    pos: jax.Array,          # (B, S) or (B, S, 3) for mrope
+    *,
+    layer_window: jax.Array | int = 0,
+    layer_chunk: jax.Array | int = 0,
+    kv_cache: jax.Array | None = None,   # (2, B, Smax, KV, hd)
+    cache_len: jax.Array | None = None,  # () current fill
+    cross_kv: tuple[jax.Array, jax.Array] | None = None,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Returns (output (B,S,D), updated kv_cache or None).
+
+    Self-attention when ``cross_kv`` is None; cross-attention (no cache
+    update, no RoPE on k) otherwise.
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm_scale"], cfg.norm_eps)
+
+    if cross_kv is not None:
+        ck, cv = cross_kv
+        out = attend(
+            q, ck, cv,
+            q_pos=jnp.broadcast_to(jnp.arange(s)[None], (b, s)),
+            k_pos=jnp.broadcast_to(jnp.arange(ck.shape[1])[None], (b, ck.shape[1])),
+            causal=False,
+        )
+        return (out.reshape(b, s, h * hd) @ p["wo"]), None
+
+    k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm_scale"], cfg.norm_eps)
+    v = (x @ p["wv"]).reshape(b, s, kvh, hd)
+
+    if pos.ndim == 3:  # M-RoPE
+        q = apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, pos, cfg.rope_theta, cfg.mrope_sections)
+        pos1 = pos[..., 0]
+    else:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        pos1 = pos
+
+    if kv_cache is None:
+        out = attend(q, k, v, pos1, pos1, causal=True,
+                     window=layer_window, chunk=layer_chunk)
+        new_cache = None
+    else:
+        smax = kv_cache.shape[2]
+        start = cache_len
+        kc = jax.lax.dynamic_update_slice(
+            kv_cache[0], k.astype(kv_cache.dtype), (0, start, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            kv_cache[1], v.astype(kv_cache.dtype), (0, start, 0, 0)
+        )
+        new_cache = jnp.stack([kc, vc])
+        k_pos = jnp.broadcast_to(jnp.arange(smax)[None], (b, smax))
+        k_len = jnp.broadcast_to(cache_len + s, (b,))
+        out = attend(
+            q, kc.astype(q.dtype), vc.astype(q.dtype), pos1, k_pos,
+            causal=True, window=layer_window, chunk=layer_chunk, k_len=k_len,
+        )
+    return (out.reshape(b, s, h * hd) @ p["wo"]), new_cache

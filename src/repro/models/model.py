@@ -1,0 +1,253 @@
+"""Public model API: build a :class:`Model` from an ArchConfig.
+
+A Model bundles pure functions (init / train_loss / prefill / decode_step /
+init_cache) plus ``input_specs(shape)`` returning ShapeDtypeStruct stand-ins
+for every input of the step being lowered — the dry-run contract.
+
+Batch conventions per family:
+  LM (dense/moe/ssm/hybrid):  {"tokens": (B,S) i32, "labels": (B,S) i32}
+  VLM (qwen2-vl):             + "vis_embeds": (B,S_vis,D), "pos3": (B,S,3);
+                              tokens cover the text tail (S_txt = S - S_vis)
+  audio (whisper):            {"enc_embeds": (B,S_enc,D), "tokens": (B,S),
+                               "labels": (B,S)}   (frontend stubbed)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+
+VLM_VIS_FRACTION = 4  # 1/4 of the sequence is vision tokens (stub embeds)
+WHISPER_ENC_LEN = 1500  # fixed stub encoder length for decode shapes
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _lm_positions(b, s, offset=0):
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)) + offset
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    train_loss: Callable[..., tuple[jax.Array, dict]]
+    prefill: Callable[..., tuple[jax.Array, Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+    init_cache: Callable[..., Any]
+    input_specs: Callable[[ShapeConfig], dict]
+    cache_specs: Callable[[ShapeConfig], Any]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    dt = _dtype(cfg)
+
+    # -- embedding of a batch into the residual stream ----------------------
+    def embed_batch(params, batch, offset=0):
+        if cfg.family == "vlm":
+            vis = batch["vis_embeds"].astype(dt)
+            txt = tfm.embed_tokens(cfg, params, batch["tokens"])
+            x = jnp.concatenate([vis, txt], axis=1)
+            pos = batch["pos3"]
+        else:
+            x = tfm.embed_tokens(cfg, params, batch["tokens"])
+            b, s = batch["tokens"].shape
+            pos = _lm_positions(b, s, offset)
+        return x, pos
+
+    # -- chunked cross-entropy: the full (tokens, vocab) logits tensor is
+    # 4+ GB/device fp32 at nemotron/gemma train_4k scale, and its gradient
+    # doubles that. Scanning over sequence chunks with remat keeps only one
+    # (B, ck, V) tile live; backward recomputes the lm_head matmul per
+    # chunk (the classic memory/recompute trade at big-vocab scale).
+    def _loss_from_hidden(params, hidden, labels, ck=1024):
+        b, s, d = hidden.shape
+        ck = min(ck, s)
+        pad = (-s) % ck
+        if pad:
+            hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        nc = (s + pad) // ck
+        hs = hidden.reshape(b, nc, ck, d).swapaxes(0, 1)  # (nc, B, ck, D)
+        ls = labels.reshape(b, nc, ck).swapaxes(0, 1)
+
+        def body(carry, xs):
+            h, l = xs
+            logits = tfm.logits_fn(cfg, params, h)  # (B, ck, V) fp32
+            valid = (l >= 0).astype(jnp.float32)
+            safe = jnp.maximum(l, 0)
+            lse = jax.scipy.special.logsumexp(logits, axis=-1)
+            picked = jnp.take_along_axis(
+                logits, safe[..., None], axis=-1
+            )[..., 0]
+            nll = (lse - picked) * valid
+            return (carry[0] + nll.sum(), carry[1] + valid.sum()), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.float32(0.0), jnp.float32(0.0)),
+            (hs, ls),
+        )
+        return tot / jnp.maximum(cnt, 1.0), cnt
+
+    # -- training loss -------------------------------------------------------
+    def train_loss(params, batch, remat=True):
+        if cfg.encdec:
+            enc_out = tfm.encoder_forward(cfg, params, batch["enc_embeds"].astype(dt),
+                                          remat=remat)
+            cross = tfm.build_cross_kv(cfg, params, enc_out)
+            x = tfm.embed_tokens(cfg, params, batch["tokens"])
+            b, s = batch["tokens"].shape
+            pos = _lm_positions(b, s)
+            hidden, _, aux = tfm.decoder_forward(
+                cfg, params, x, pos, cross_kv=cross, remat=remat
+            )
+        else:
+            x, pos = embed_batch(params, batch)
+            hidden, _, aux = tfm.decoder_forward(cfg, params, x, pos, remat=remat)
+        labels = batch["labels"]
+        if cfg.family == "vlm":  # loss only over the text tail
+            hidden = hidden[:, -labels.shape[1]:]
+        loss, tokens = _loss_from_hidden(params, hidden, labels)
+        loss = loss + 0.01 * aux
+        return loss, {"loss": loss, "aux": aux, "tokens": tokens}
+
+    # -- caches ---------------------------------------------------------------
+    def init_cache(batch_size: int, max_len: int):
+        L, d = cfg.n_layers, cfg.d_model
+        cache: dict = {"len": jnp.zeros((), jnp.int32)}
+        if cfg.family == "ssm":
+            h, n = ssm_mod.rwkv6_dims(cfg)
+            p = n
+            cache["wkv"] = jnp.zeros((L, batch_size, h, n, p), jnp.float32)
+            cache["shift_t"] = jnp.zeros((L, batch_size, d), dt)
+            cache["shift_c"] = jnp.zeros((L, batch_size, d), dt)
+            return cache
+        if cfg.family == "hybrid":
+            di, nh, conv_dim = ssm_mod.mamba2_dims(cfg)
+            s = cfg.ssm
+            cache["ssm"] = jnp.zeros(
+                (L, batch_size, nh, s.d_state, s.head_dim), jnp.float32
+            )
+            cache["conv"] = jnp.zeros(
+                (L, batch_size, s.d_conv - 1, conv_dim), dt
+            )
+            if cfg.shared_attn_every:
+                napps = cfg.n_layers // cfg.shared_attn_every
+                cache["shared_kv"] = jnp.zeros(
+                    (napps, 2, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt
+                )
+            return cache
+        cache["kv"] = jnp.zeros(
+            (L, 2, batch_size, max_len, cfg.n_kv_heads, cfg.hd), dt
+        )
+        return cache
+
+    # -- serving -------------------------------------------------------------
+    def prefill(params, batch, cache):
+        """Process the full prompt; returns (last-position logits, cache)."""
+        if cfg.encdec:
+            enc_out = tfm.encoder_forward(
+                cfg, params, batch["enc_embeds"].astype(dt)
+            )
+            cross = tfm.build_cross_kv(cfg, params, enc_out)
+            x = tfm.embed_tokens(cfg, params, batch["tokens"])
+            b, s = batch["tokens"].shape
+            pos = _lm_positions(b, s)
+            hidden, cache, _ = tfm.decoder_forward(
+                cfg, params, x, pos, cache=cache, cross_kv=cross
+            )
+            cache = dict(cache)
+            cache["cross_k"], cache["cross_v"] = cross
+        else:
+            x, pos = embed_batch(params, batch)
+            hidden, cache, _ = tfm.decoder_forward(cfg, params, x, pos, cache=cache)
+        logits = tfm.logits_fn(cfg, params, hidden[:, -1:])
+        return logits, cache
+
+    def decode_step(params, tokens, cache, pos3=None):
+        """One new token per sequence. tokens: (B, 1)."""
+        x = tfm.embed_tokens(cfg, params, tokens)
+        b = tokens.shape[0]
+        if cfg.family == "vlm":
+            pos = pos3 if pos3 is not None else jnp.broadcast_to(
+                cache["len"].astype(jnp.int32)[None, None, None], (b, 1, 3)
+            )
+        else:
+            pos = jnp.broadcast_to(cache["len"][None, None], (b, 1)).astype(
+                jnp.int32
+            )
+        cross = None
+        if cfg.encdec:
+            cross = (cache["cross_k"], cache["cross_v"])
+            dec_cache = {k: v for k, v in cache.items()
+                         if k not in ("cross_k", "cross_v")}
+        else:
+            dec_cache = cache
+        hidden, new_cache, _ = tfm.decoder_forward(
+            cfg, params, x, pos, cache=dec_cache, cross_kv=cross
+        )
+        if cfg.encdec:
+            new_cache = dict(new_cache)
+            new_cache["cross_k"], new_cache["cross_v"] = cross
+        logits = tfm.logits_fn(cfg, params, hidden)
+        return logits, new_cache
+
+    # -- specs (dry-run) ------------------------------------------------------
+    def input_specs(shape: ShapeConfig) -> dict:
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        if cfg.encdec:
+            if shape.kind == "train" or shape.kind == "prefill":
+                return {
+                    "enc_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, min(s, 448)), i32),
+                    "labels": jax.ShapeDtypeStruct((b, min(s, 448)), i32),
+                }
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if cfg.family == "vlm":
+            s_vis = s // VLM_VIS_FRACTION
+            s_txt = s - s_vis
+            if shape.kind in ("train", "prefill"):
+                d: dict = {
+                    "vis_embeds": jax.ShapeDtypeStruct((b, s_vis, cfg.d_model), dt),
+                    "tokens": jax.ShapeDtypeStruct((b, s_txt), i32),
+                    "pos3": jax.ShapeDtypeStruct((b, s, 3), i32),
+                }
+                if shape.kind == "train":
+                    d["labels"] = jax.ShapeDtypeStruct((b, s_txt), i32)
+                return d
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+        if shape.kind in ("train", "prefill"):
+            d = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+            if shape.kind == "train":
+                d["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+            return d
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+
+    def cache_specs(shape: ShapeConfig):
+        spec = jax.eval_shape(
+            lambda: init_cache(shape.global_batch, shape.seq_len)
+        )
+        if cfg.encdec:
+            b = shape.global_batch
+            kv = jax.ShapeDtypeStruct(
+                (cfg.n_layers, b, WHISPER_ENC_LEN, cfg.n_kv_heads, cfg.hd), dt
+            )
+            spec = dict(spec)
+            spec["cross_k"] = kv
+            spec["cross_v"] = kv
+        return spec
+
+    return Model(
+        cfg=cfg, init=lambda rng: tfm.init_params(rng, cfg),
+        train_loss=train_loss, prefill=prefill, decode_step=decode_step,
+        init_cache=init_cache, input_specs=input_specs, cache_specs=cache_specs,
+    )

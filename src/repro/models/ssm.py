@@ -1,0 +1,361 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both use the same chunked-scan strategy: the sequence is cut into chunks of
+``Q``; all within-chunk (quadratic in Q) terms are computed with pairwise
+log-decay differences — every exponent is a *difference* ``L_i - L_j`` with
+``j <= i`` and log-decays are negative, so exponents are always <= 0 and the
+math is overflow-free without clamping tricks. Cross-chunk terms ride a
+``lax.scan`` carry (the recurrent state), giving O(S·Q) memory instead of
+O(S^2) while staying fully parallel within chunks (MXU-friendly einsums).
+
+Decode is the exact single-step recurrence on the carried state — O(1) in
+context length, which is why these archs keep the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, rms_norm
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(rng, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, nh, conv_dim = mamba2_dims(cfg)
+    ks = jax.random.split(rng, 6)
+    in_dim = 2 * di + 2 * s.n_groups * s.d_state + nh
+    return {
+        "in_proj": jax.random.normal(ks[0], (d, in_dim), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (s.d_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv along S. x: (B, S, C); w: (K, C).
+
+    Returns (y, new_state) where state is the trailing K-1 inputs."""
+    kk = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(kk)) + b
+    new_state = xp[:, -(kk - 1):, :]
+    return y, new_state
+
+
+def _ssd_chunked(u, dA, Bm, Cm, chunk, init_state=None):
+    """Chunked SSD scan.
+
+    u:  (B, S, H, P) inputs (already dt-scaled)
+    dA: (B, S, H) log-decays (<= 0)
+    Bm, Cm: (B, S, G, N)
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = u.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # decay-neutral padding: dA=0 (decay 1), B/u zero -> state intact
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // q
+    rep = h // g
+
+    def r4(t):  # (B,S,...) -> (B,nc,Q,...)
+        return t.reshape(b, nc, q, *t.shape[2:])
+
+    u_, dA_, B_, C_ = r4(u), r4(dA.astype(jnp.float32)), r4(Bm), r4(Cm)
+    L = jnp.cumsum(dA_, axis=2)  # (B,nc,Q,H) within-chunk cumulative log decay
+
+    # intra-chunk: scores_ij = (C_i . B_j) * exp(L_i - L_j), j <= i
+    cb = jnp.einsum("bcign,bcjgn->bcijg", C_.astype(jnp.float32),
+                    B_.astype(jnp.float32))
+    cb = jnp.repeat(cb, rep, axis=-1)  # (B,nc,Q,Q,H)
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]  # (B,nc,Q,Q,H) i-j
+    mask = jnp.tril(jnp.ones((q, q), bool))[None, None, :, :, None]
+    # mask the exponent BEFORE exp: exp(+big) in the dead triangle would be
+    # inf, and `where(mask, inf*0, 0)` poisons the backward pass with NaNs.
+    scores = cb * jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, u_.astype(jnp.float32))
+
+    # chunk summary state: sum_j exp(L_last - L_j) B_j u_j^T  -> (B,nc,H,N,P)
+    to_end = jnp.exp(L[:, :, -1:, :] - L)  # (B,nc,Q,H)
+    chunk_state = jnp.einsum(
+        "bcqh,bcqgn,bcqhp->bchnp",
+        to_end,
+        B_.astype(jnp.float32),
+        u_.astype(jnp.float32),
+    ) if g == 1 else jnp.einsum(
+        "bcqh,bcqhn,bcqhp->bchnp",
+        to_end,
+        jnp.repeat(B_.astype(jnp.float32), rep, axis=3),
+        u_.astype(jnp.float32),
+    )
+    chunk_decay = jnp.exp(L[:, :, -1, :])  # (B,nc,H) total chunk decay
+
+    def body(state, inp):
+        cs, cd, c_c, l_c = inp  # per-chunk tensors (leading axis nc scanned)
+        # inter contribution uses the INCOMING state
+        if g == 1:
+            y_int = jnp.einsum(
+                "bqgn,bqh,bhnp->bqhp", c_c.astype(jnp.float32),
+                jnp.exp(l_c), state,
+            )
+        else:
+            y_int = jnp.einsum(
+                "bqhn,bqh,bhnp->bqhp",
+                jnp.repeat(c_c.astype(jnp.float32), rep, axis=2),
+                jnp.exp(l_c), state,
+            )
+        new_state = state * cd[:, :, None, None] + cs
+        return new_state, y_int
+
+    state0 = (
+        jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    xs = (
+        chunk_state.swapaxes(0, 1),          # (nc,B,H,N,P)
+        chunk_decay.swapaxes(0, 1),          # (nc,B,H)
+        C_.swapaxes(0, 1),                   # (nc,B,Q,G,N)
+        L.swapaxes(0, 1),                    # (nc,B,Q,H)
+    )
+    final_state, y_inter = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    y = y_intra + y_inter.swapaxes(0, 1)
+    return y.reshape(b, s, h, p)[:, :s_orig], final_state
+
+
+def _mamba2_pre(p, cfg, x, conv_state=None):
+    """in_proj + conv + splits shared by train and decode paths."""
+    s = cfg.ssm
+    di, nh, conv_dim = mamba2_dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim :]  # (B,S,H)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :di]
+    bm = xbc[..., di : di + s.n_groups * s.d_state]
+    cm = xbc[..., di + s.n_groups * s.d_state :]
+    b, sl = x.shape[:2]
+    bm = bm.reshape(b, sl, s.n_groups, s.d_state)
+    cm = cm.reshape(b, sl, s.n_groups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    da = dt * a  # log decay <= 0
+    u = xs.reshape(b, sl, nh, s.head_dim)
+    return z, u, dt, da, bm, cm, new_conv
+
+
+def mamba2_block(p, cfg, x, cache=None):
+    """x: (B,S,D). cache: None (train/prefill from scratch) or dict with
+    "ssm" (B,H,N,P) and "conv" (B,K-1,conv_dim). Returns (y, new_cache)."""
+    s = cfg.ssm
+    di, nh, _ = mamba2_dims(cfg)
+    conv_state = cache["conv"] if cache is not None else None
+    z, u, dt, da, bm, cm, new_conv = _mamba2_pre(p, cfg, x, conv_state)
+    init_state = cache["ssm"] if cache is not None else None
+    y, st = _ssd_chunked(u * dt[..., None], da, bm, cm, s.chunk, init_state)
+    y = y + p["d_skip"][:, None] * u
+    b, sl = x.shape[:2]
+    y = y.reshape(b, sl, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_cache = {"ssm": st, "conv": new_conv} if cache is not None else None
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_dims(cfg):
+    n = cfg.ssm.head_dim
+    h = cfg.d_model // n
+    return h, n
+
+
+def init_rwkv6(rng, cfg, dtype) -> dict:
+    d = cfg.d_model
+    h, n = rwkv6_dims(cfg)
+    lora = 64
+    ks = jax.random.split(rng, 10)
+    s = d ** -0.5
+    return {
+        "time_mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_v": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_g": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_w": jnp.full((d,), 0.5, jnp.float32),
+        "time_decay_base": jnp.full((d,), -2.0, jnp.float32),
+        "time_decay_w1": jax.random.normal(ks[0], (d, lora), jnp.float32) * s,
+        "time_decay_w2": jax.random.normal(ks[1], (lora, d), jnp.float32) * lora ** -0.5,
+        "time_bonus_u": jnp.zeros((h, n), jnp.float32),
+        "wr": jax.random.normal(ks[2], (d, d), dtype) * s,
+        "wk": jax.random.normal(ks[3], (d, d), dtype) * s,
+        "wv": jax.random.normal(ks[4], (d, d), dtype) * s,
+        "wg": jax.random.normal(ks[5], (d, d), dtype) * s,
+        "wo": jax.random.normal(ks[6], (d, d), dtype) * s,
+        "ln_x_scale": jnp.zeros((d,), jnp.float32),
+        # channel mix
+        "time_mix_ck": jnp.full((d,), 0.5, jnp.float32),
+        "time_mix_cr": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": jax.random.normal(ks[7], (d, cfg.d_ff), dtype) * s,
+        "cm_wv": jax.random.normal(ks[8], (cfg.d_ff, d), dtype) * cfg.d_ff ** -0.5,
+        "cm_wr": jax.random.normal(ks[9], (d, d), dtype) * s,
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None):
+    """(B,S,D) -> previous-token tensor; `last` is the carry for decode."""
+    if last is None:
+        prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev = jnp.concatenate([last[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+    return prev
+
+
+def _wkv_chunked(r, k, v, lw, u, chunk, init_state=None):
+    """RWKV6 linear attention, chunked.
+
+    r,k: (B,S,H,N); v: (B,S,H,P); lw: (B,S,H,N) per-channel log-decay (<=0)
+    u: (H,N) current-token bonus. Returns (y (B,S,H,P), state (B,H,N,P)).
+
+    Recurrence: y_t = r_t·(S_{t-1} + u ⊙ k_t v_t^T);  S_t = w_t ⊙ S_{t-1} + k_t v_t^T.
+    """
+    b, s, h, n = k.shape
+    p = v.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:  # decay-neutral padding (lw=0, k=v=0): state passes through
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        lw = jnp.pad(lw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nc = s // q
+
+    def r4(t):
+        return t.reshape(b, nc, q, *t.shape[2:]).swapaxes(0, 1)  # (nc,B,Q,...)
+
+    rs, ks_, vs, lws = r4(r.astype(jnp.float32)), r4(k.astype(jnp.float32)), \
+        r4(v.astype(jnp.float32)), r4(lw.astype(jnp.float32))
+
+    state0 = (
+        jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+    tri_lower = jnp.tril(jnp.ones((q, q), bool), k=-1)  # strictly lower: j < i
+
+    def body(state, inp):
+        # This whole chunk body is the hand-written GLA Pallas kernel
+        # (kernels/wkv.py, interpret-validated); under flash_fusion() the
+        # roofline charges only its boundary traffic — the (B,Q,Q,H,N)
+        # pairwise tensor lives in VMEM on TPU, never in HBM.
+        from repro.models.attention import _flash_scope
+
+        rc, kc, vc, lwc = inp  # (B,Q,H,N/P)
+        with _flash_scope():
+            lcum = jnp.cumsum(lwc, axis=1)  # (B,Q,H,N) L_t
+            lprev = lcum - lwc              # L_{t-1} (decay before read)
+            # intra: scores_ij = sum_n r_in k_jn exp(Lprev_i - L_j), j < i
+            diff = lprev[:, :, None] - lcum[:, None, :]  # (B,Q,Q,H,N) i,j
+            # exponent masked BEFORE exp (see _ssd_chunked for why)
+            e = jnp.exp(
+                jnp.where(tri_lower[None, :, :, None, None], diff, -jnp.inf)
+            )
+            scores = jnp.einsum("bihn,bjhn,bijhn->bijh", rc, kc, e)
+            y = jnp.einsum("bijh,bjhp->bihp", scores, vc)
+            # current-token bonus (diagonal)
+            y += jnp.einsum("bihn,bihp->bihp",
+                            rc * kc * u[None, None], vc)
+            # inter: r_i exp(Lprev_i) · state
+            y += jnp.einsum("bihn,bhnp->bihp", rc * jnp.exp(lprev), state)
+            # state: S' = exp(L_Q) ⊙ S + sum_j exp(L_Q - L_j) k_j v_j^T
+            to_end = jnp.exp(lcum[:, -1:, :] - lcum)  # (B,Q,H,N)
+            new_state = state * jnp.exp(lcum[:, -1])[..., None] + jnp.einsum(
+                "bjhn,bjhp->bhnp", kc * to_end, vc
+            )
+        return new_state, y
+
+    # remat: backward recomputes the in-VMEM pairwise terms (the Pallas
+    # kernel's custom-vjp does the same on TPU) instead of saving a
+    # (nc, B, Q, Q, H, N) stack to HBM
+    final_state, ys = jax.lax.scan(
+        jax.checkpoint(body), state0, (rs, ks_, vs, lws)
+    )
+    y = ys.swapaxes(0, 1).reshape(b, s, h, p)
+    return y[:, :s_orig], final_state
+
+
+def rwkv6_time_mix(p, cfg, x, cache=None):
+    """x: (B,S,D); cache: None or {"wkv": (B,H,N,P), "shift_t": (B,D)}."""
+    h, n = rwkv6_dims(cfg)
+    b, s, d = x.shape
+    last = cache["shift_t"] if cache is not None else None
+    prev = _token_shift(x, last)
+
+    def mix(mu):
+        return x + (prev - x) * mu.astype(x.dtype)
+
+    r = (mix(p["time_mix_r"]) @ p["wr"]).reshape(b, s, h, n)
+    k = (mix(p["time_mix_k"]) @ p["wk"]).reshape(b, s, h, n)
+    v = (mix(p["time_mix_v"]) @ p["wv"]).reshape(b, s, h, n)
+    g = mix(p["time_mix_g"]) @ p["wg"]
+    # data-dependent decay (the Finch signature): per-channel, per-token
+    xw = mix(p["time_mix_w"]).astype(jnp.float32)
+    dd = jnp.tanh(xw @ p["time_decay_w1"]) @ p["time_decay_w2"]
+    lw = -jnp.exp(p["time_decay_base"] + dd)  # (B,S,D) log-decay <= 0
+    lw = jnp.clip(lw, -20.0, -1e-6).reshape(b, s, h, n)
+
+    init = cache["wkv"] if cache is not None else None
+    y, st = _wkv_chunked(r, k, v, lw, p["time_bonus_u"], cfg.ssm.chunk, init)
+    y = y.reshape(b, s, d)
+    # per-head group norm
+    yh = y.reshape(b, s, h, n)
+    yh = rms_norm(yh, jnp.zeros((n,), jnp.float32), cfg.norm_eps)
+    y = yh.reshape(b, s, d) * (1.0 + p["ln_x_scale"].astype(jnp.float32))
+    y = (y.astype(x.dtype) * jax.nn.silu(g)) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"wkv": st, "shift_t": x[:, -1, :]}
+    return y, new_cache
+
+
+def rwkv6_channel_mix(p, cfg, x, cache=None):
+    last = cache["shift_c"] if cache is not None else None
+    prev = _token_shift(x, last)
+    xk = x + (prev - x) * p["time_mix_ck"].astype(x.dtype)
+    xr = x + (prev - x) * p["time_mix_cr"].astype(x.dtype)
+    kk = jax.nn.relu(xk @ p["cm_wk"])
+    kk = kk * kk
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
+    new_cache = {"shift_c": x[:, -1, :]} if cache is not None else None
+    return out, new_cache

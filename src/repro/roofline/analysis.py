@@ -1,0 +1,289 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+    compute    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory     = HLO_bytes / (chips × HBM_bw)
+    collective = Σ_hops per-chip collective bytes / link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the optimized HLO text and sum operand sizes of
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops, weighting each by the algorithm's per-chip wire factor on its mesh axis
+(ring all-reduce moves 2·(n-1)/n × bytes, all-gather/reduce-scatter
+(n-1)/n ×, all-to-all (n-1)/n ×, permute 1×). Ops whose replica groups
+cross the ``pod`` axis are charged to the slower DCN-class link.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+# TPU v5e per-chip constants (assignment-fixed)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (intra-pod)
+DCN_BW = 25e9                # bytes/s (pod axis)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\)|\S+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(pred|[us]\d+|bf16|f16|f32|f64)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size_and_stride(line: str) -> tuple[int, int]:
+    """Rough (participants per group, index stride) from replica_groups.
+
+    Stride 1 groups = contiguous device ids = minor (model) axis; large
+    strides = major axes (data / pod). Used to classify ICI vs DCN."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        ngroups, gsize = int(m.group(1)), int(m.group(2))
+        return gsize, 1
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1, 1
+    first = m.group(1).split("}")[0].strip("{} ")
+    ids = [int(x) for x in first.split(",") if x.strip().isdigit()]
+    if len(ids) < 2:
+        return max(1, len(ids)), 1
+    return len(ids), abs(ids[1] - ids[0])
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int = 0            # logical operand bytes, summed over ops
+    wire_bytes_ici: float = 0.0     # per-chip wire bytes on ICI links
+    wire_bytes_dcn: float = 0.0     # per-chip wire bytes crossing pods
+    by_kind: dict = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+
+def collectives_from_ops(ops: list, n_devices: int, pod_stride: int = 256
+                         ) -> CollectiveStats:
+    """CollectiveStats from loop-aware (kind, bytes, mult, attrs) records
+    (see roofline.hlocost)."""
+    stats = CollectiveStats()
+    for kind, nbytes, mult, rest in ops:
+        nbytes = nbytes * mult
+        if nbytes == 0:
+            continue
+        gsize, stride = _group_size_and_stride(rest)
+        n = max(gsize, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif kind in ("all-gather", "all-to-all"):
+            wire = (n - 1) / n * nbytes
+        elif kind == "reduce-scatter":
+            wire = float(n - 1) * nbytes
+        else:
+            wire = float(nbytes)
+        stats.total_bytes += int(nbytes)
+        crosses_pod = stride >= pod_stride or (gsize * stride > pod_stride)
+        if crosses_pod and n_devices > pod_stride:
+            stats.wire_bytes_dcn += wire
+        else:
+            stats.wire_bytes_ici += wire
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + int(nbytes)
+        stats.count += 1
+    return stats
+
+
+def parse_collectives(hlo_text: str, n_devices: int, pod_stride: int = 256
+                      ) -> CollectiveStats:
+    """Sum collective traffic from optimized HLO text (NOT loop-aware — use
+    collectives_from_ops with hlocost for scan-heavy modules)."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if "-done" in line:
+            continue
+        shape_str = m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        if nbytes == 0:
+            continue
+        gsize, stride = _group_size_and_stride(line)
+        n = max(gsize, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * (n - 1) / n * nbytes
+        elif kind in ("all-gather", "all-to-all"):
+            # AG result shape is the full gathered buffer; A2A result equals
+            # its input; per-chip wire is (n-1)/n of that buffer
+            wire = (n - 1) / n * nbytes
+        elif kind == "reduce-scatter":
+            # result shape is the scattered shard (input/n): wire is
+            # (n-1)/n of the *input* = (n-1) x result bytes
+            wire = float(n - 1) * nbytes
+        else:  # collective-permute
+            wire = float(nbytes)
+        stats.total_bytes += nbytes
+        crosses_pod = stride >= pod_stride or (gsize * stride > pod_stride)
+        if crosses_pod and n_devices > pod_stride:
+            stats.wire_bytes_dcn += wire
+        else:
+            stats.wire_bytes_ici += wire
+        stats.by_kind[kind] = stats.by_kind.get(kind, 0) + nbytes
+        stats.count += 1
+    return stats
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_gflops: float            # PER-DEVICE (SPMD module cost_analysis)
+    hlo_bytes: float             # PER-DEVICE HBM traffic
+    coll: CollectiveStats        # per-device collective schedule
+    model_flops: float           # 6·N·D useful-compute reference (global)
+    peak_flops: float = PEAK_FLOPS
+    per_device_peak_bytes: int = 0
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_gflops * 1e9 / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return (self.coll.wire_bytes_ici / ICI_BW
+                + self.coll.wire_bytes_dcn / DCN_BW)
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """max(term)/sum(terms): 1.0 = perfectly overlapped single
+        bottleneck; low = time smeared across non-overlapping terms."""
+        ts = [self.t_compute, self.t_memory, self.t_collective]
+        tot = sum(ts)
+        return max(ts) / tot if tot > 0 else 0.0
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs × devices) — catches remat/redundancy."""
+        return self.model_flops / max(
+            self.hlo_gflops * 1e9 * self.n_devices, 1.0
+        )
+
+    @property
+    def mfu_bound(self) -> float:
+        """Upper bound on achievable MFU for this schedule: useful FLOPs per
+        device-second at the roofline = model_flops / (n_dev × max-term ×
+        peak)."""
+        t = max(self.t_compute, self.t_memory, self.t_collective)
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.n_devices * t * self.peak_flops)
+
+    def to_json(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_gflops": self.hlo_gflops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.coll.total_bytes,
+            "wire_ici": self.coll.wire_bytes_ici,
+            "wire_dcn": self.coll.wire_bytes_dcn,
+            "coll_by_kind": self.coll.by_kind,
+            "coll_count": self.coll.count,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_fraction": self.useful_fraction,
+            "mfu_bound": self.mfu_bound,
+            "per_device_peak_bytes": self.per_device_peak_bytes,
+        }
+
+
+def count_params(abstract_params) -> int:
+    import jax
+
+    return sum(
+        int(x.size) for x in jax.tree.leaves(abstract_params)
+    )
+
+
+def model_flops_estimate(cfg, shape, n_params: int, active_params: int) -> float:
+    """6·N·D (train) / 2·N·D (forward-only), N = active params."""
+    n = active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # one new token per sequence
+    return 2.0 * n * tokens
+
+
+def active_params(cfg, abstract_params) -> int:
+    """Parameters touched per token (MoE: shared + top_k experts only)."""
+    import jax
+
+    total = 0
+    flat = jax.tree_util.tree_flatten_with_path(abstract_params)[0]
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", ""))) for p in path
+        )
+        sz = int(leaf.size)
+        if cfg.moe is not None and "experts/" in name:
+            sz = sz * cfg.moe.top_k // cfg.moe.n_experts
+        total += sz
+    return total
+
+
+def summarize(cells: list[Roofline]) -> str:
+    hdr = (
+        "| arch | shape | mesh | t_comp(ms) | t_mem(ms) | t_coll(ms) | "
+        "bottleneck | useful | coll GB |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    rows = [hdr]
+    for r in cells:
+        rows.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.t_compute*1e3:.2f} | "
+            f"{r.t_memory*1e3:.2f} | {r.t_collective*1e3:.2f} | "
+            f"{r.bottleneck} | {r.useful_fraction:.2f} | "
+            f"{r.coll.total_bytes/1e9:.2f} |"
+        )
+    return "\n".join(rows)

@@ -1,0 +1,367 @@
+"""Loop-aware HLO cost model.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE — with
+scan-over-layers (and chunked-attention / SSM chunk scans) that undercounts
+FLOPs by 30-8000×. The optimized HLO text, however, carries
+``backend_config={"known_trip_count":{"n":...}}`` on every scan-derived
+while op. This module parses the HLO text, builds the computation call
+graph, propagates trip-count multipliers (while bodies ×n, fusions/calls
+×1), and accumulates:
+
+* flops   — exact 2·M·N·K for dot/convolution (from shapes +
+            dot_dimension_numbers), ~1 flop/element for arithmetic and
+            transcendental elementwise ops,
+* bytes   — Σ (operand + result bytes) per top-level op, fusions counted at
+            the call site only (XLA's own convention),
+* collective bytes — per-kind, same loop multipliers (a collective inside
+            the layer scan really does run L times).
+
+Validated against ``cost_analysis()`` on loop-free modules (they agree) and
+against hand-counted scans (tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[us]\d+|bf16|f16|f32|f64|c64|c128|token)\[([\d,]*)\]")
+# op line: %name = <shape-or-tuple> opcode(%a, %b, ...), attrs
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\],{}]+?))\s+"
+    r"([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*\S.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR_RE = re.compile(r"(?:body|calls|to_apply|condition)=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+}
+ELEMENTWISE_XFLOP = {  # transcendental: count a few flops each
+    "exponential": 4, "log": 4, "tanh": 6, "rsqrt": 2, "sqrt": 2,
+    "power": 6, "logistic": 6, "sine": 4, "cosine": 4, "erf": 6,
+    "exponential-minus-one": 4, "log-plus-one": 4, "cbrt": 4, "atan2": 8,
+}
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES.get(dt, 4)
+    return elems, nbytes
+
+
+def _dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operands + attrs tail of the line
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+
+
+def parse_module(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = _COMP_RE.match(line)
+        if m:
+            cur = Computation(m.group(1), [])
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            cur.ops.append(Op(mo.group(1), mo.group(2), mo.group(3), mo.group(4)))
+    return comps
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    """Propagate loop trip counts down the call graph."""
+    entry = None
+    for name in comps:
+        # ENTRY computation: jax modules name it 'main' (or first parsed)
+        if name.startswith("main") or entry is None:
+            if name.startswith("main"):
+                entry = name
+    if entry is None:
+        entry = next(iter(comps))
+    mult: dict[str, float] = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    # call edges: (callee, factor) per caller
+    edges: dict[str, list[tuple[str, float]]] = {n: [] for n in comps}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                trip = 1.0
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    trip = float(mt.group(1))
+                for mc in _CALL_ATTR_RE.finditer(op.rest):
+                    callee = mc.group(1)
+                    factor = trip if f"body=%{callee}" in op.rest or \
+                        f"body={callee}" in op.rest else 1.0
+                    edges[comp.name].append((callee, factor))
+            else:
+                for mc in _CALL_ATTR_RE.finditer(op.rest):
+                    edges[comp.name].append((mc.group(1), 1.0))
+    # propagate (call graph is a DAG)
+    import collections
+
+    indeg = collections.Counter()
+    for caller, es in edges.items():
+        for callee, _ in es:
+            indeg[callee] += 1
+    queue = [n for n in comps if indeg[n] == 0]
+    seen = set()
+    while queue:
+        n = queue.pop()
+        if n in seen:
+            continue
+        seen.add(n)
+        for callee, factor in edges.get(n, []):
+            if callee in mult:
+                mult[callee] += mult[n] * factor
+                indeg[callee] -= 1
+                if indeg[callee] <= 0:
+                    queue.append(callee)
+    return mult
+
+
+def _dot_flops(op: Op, shapes: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(op.shape)
+    # contraction size from the lhs operand shape + contracting dims
+    operands = re.findall(r"%([\w.\-]+)", op.rest)
+    k = 1
+    mc = _CONTRACT_RE.search(op.rest)
+    if mc and operands:
+        lhs_shape = shapes.get(operands[0], "")
+        dims = _dims(lhs_shape)
+        for idx in mc.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, shapes: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(op.shape)
+    operands = re.findall(r"%([\w.\-]+)", op.rest)
+    kernel_elems = 1
+    if len(operands) >= 2:
+        kernel_elems, _ = _shape_elems_bytes(shapes.get(operands[1], ""))
+    # rough: 2 * out * (kernel / out_channels); fall back to 2*out*kernel_el
+    return 2.0 * out_elems * max(kernel_elems, 1) ** 0.5  # conservative
+
+
+# ops whose operand/result traffic survives even under perfect fusion —
+# the TPU-target "ideal fusion" memory lower bound
+_MATERIALIZING = {
+    "dot", "convolution", "fusion", "reduce", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "sort", "transpose",
+    "reshape",  # layout-changing reshapes copy on TPU; cheap ones fold
+}
+
+
+@dataclasses.dataclass
+class LoopAwareCost:
+    flops: float = 0.0
+    bytes_min: float = 0.0       # ideal-fusion HBM traffic (roofline term)
+    bytes_accessed: float = 0.0
+    collective_bytes: dict = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    elementwise_flops: float = 0.0
+    # (kind, result_bytes, loop_multiplier, attr_tail) per collective op —
+    # consumed by roofline.analysis for wire-byte/axis classification
+    collective_ops: list = dataclasses.field(default_factory=list)
+
+    def to_json(self):
+        d = dataclasses.asdict(self)
+        d.pop("collective_ops", None)
+        return d
+
+
+FUSED_MARKER = "fused_kernel"
+
+
+def analyze(hlo: str) -> LoopAwareCost:
+    """See module docstring. Ops whose metadata op_name contains
+    ``fused_kernel`` (emitted by jax.named_scope at trace time) are treated
+    as one hand-written Pallas kernel: FLOPs count normally, HBM bytes only
+    at the region boundary (operands produced outside / results consumed
+    outside). This models kernels the CPU backend cannot lower (flash
+    attention — see kernels/flash_attention.py) without faking the HLO."""
+    comps = parse_module(hlo)
+    mult = _multipliers(comps)
+    # global shape table (op name -> shape string); names unique per module
+    shapes: dict[str, str] = {}
+    in_region: dict[str, bool] = {}
+    consumers: dict[str, list[str]] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            shapes[op.name] = op.shape
+            in_region[op.name] = FUSED_MARKER in op.rest
+            for ref in re.findall(r"%([\w.\-]+)", op.rest):
+                consumers.setdefault(ref, []).append(op.name)
+
+    # identify fusion-called computations: bytes counted at call site only
+    fused: set[str] = set()
+    fusion_callee: dict[str, str] = {}
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "fusion":
+                for mc in _CALL_ATTR_RE.finditer(op.rest):
+                    fused.add(mc.group(1))
+                    fusion_callee[op.name] = mc.group(1)
+            if op.opcode in ("reduce", "scatter", "sort", "map",
+                             "reduce-window", "select-and-scatter"):
+                for mc in _CALL_ATTR_RE.finditer(op.rest):
+                    fused.add(mc.group(1))  # to_apply bodies: skip entirely
+
+    # fusions made only of dtype-conversion / data-movement ops are CPU
+    # bf16-emulation artifacts (TPU computes bf16 natively): zero bytes
+    _TRIVIAL = {
+        "convert", "copy", "bitcast", "broadcast", "reshape", "transpose",
+        "parameter", "tuple", "get-tuple-element", "constant", "slice",
+        "concatenate", "pad", "iota",
+    }
+    trivial_fused = {
+        name for name in fused
+        if name in comps and comps[name].ops
+        and all(o.opcode in _TRIVIAL for o in comps[name].ops)
+    }
+
+    cost = LoopAwareCost()
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        in_fused_comp = comp.name in fused
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                      "bitcast", "while", "call", "custom-call", "copy",
+                      "copy-start", "copy-done", "after-all", "partition-id"):
+                if oc != "custom-call":
+                    continue
+            out_elems, out_bytes = _shape_elems_bytes(op.shape)
+            # --- flops ---
+            if oc == "dot":
+                f = _dot_flops(op, shapes)
+                cost.dot_flops += m * f
+                cost.flops += m * f
+            elif oc == "convolution":
+                f = _conv_flops(op, shapes)
+                cost.dot_flops += m * f
+                cost.flops += m * f
+            elif oc in ELEMENTWISE_1FLOP:
+                cost.elementwise_flops += m * out_elems
+                cost.flops += m * out_elems
+            elif oc in ELEMENTWISE_XFLOP:
+                f = ELEMENTWISE_XFLOP[oc] * out_elems
+                cost.elementwise_flops += m * f
+                cost.flops += m * f
+            elif oc == "reduce":
+                cost.elementwise_flops += m * out_elems * 2
+                cost.flops += m * out_elems * 2
+            elif oc == "fusion":
+                pass  # inner ops counted via the fused computation
+            # --- bytes: top-level ops only (not inside fused comps) ---
+            if not in_fused_comp and oc not in COLLECTIVES:
+                if in_region.get(op.name, False):
+                    # inside a hand-fused kernel region: boundary traffic only
+                    operand_bytes = 0
+                    for name in re.findall(r"%([\w.\-]+)", op.rest):
+                        if name in shapes and not in_region.get(name, False):
+                            _, bts = _shape_elems_bytes(shapes[name])
+                            operand_bytes += bts
+                    cons = consumers.get(op.name, [])
+                    escapes = (not cons) or any(
+                        not in_region.get(c, False) for c in cons
+                    )
+                    bb = operand_bytes + (out_bytes if escapes else 0)
+                    cost.bytes_accessed += m * bb
+                    cost.bytes_min += m * bb
+                elif oc in ("dynamic-slice", "gather"):
+                    # reads only the slice, not the whole operand (charging
+                    # the full KV-cache stack per layer-scan iteration
+                    # inflated decode memory terms ~1000x)
+                    bb = 2.0 * out_bytes
+                    cost.bytes_accessed += m * bb
+                    cost.bytes_min += m * bb
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    # in-place update: read+write the update region only
+                    upd_bytes = out_bytes
+                    refs = re.findall(r"%([\w.\-]+)", op.rest)
+                    if len(refs) >= 2 and refs[1] in shapes:
+                        _, upd_bytes = _shape_elems_bytes(shapes[refs[1]])
+                    bb = 2.0 * upd_bytes
+                    cost.bytes_accessed += m * bb
+                    cost.bytes_min += m * bb
+                elif oc == "fusion" and fusion_callee.get(op.name) in trivial_fused:
+                    pass  # dtype-emulation fusion: free on TPU
+                else:
+                    operand_bytes = 0
+                    same_as_result = 0
+                    for name in re.findall(r"%([\w.\-]+)", op.rest):
+                        if name in shapes:
+                            _, bts = _shape_elems_bytes(shapes[name])
+                            operand_bytes += bts
+                            if oc == "fusion" and shapes[name] == op.shape:
+                                same_as_result += bts
+                    if oc == "fusion" and same_as_result:
+                        # loop-carried buffer updated in place (XLA aliases
+                        # while carries): charge only the distinct operands
+                        operand_bytes -= same_as_result
+                        bb = operand_bytes
+                    else:
+                        bb = out_bytes + operand_bytes
+                    cost.bytes_accessed += m * bb
+                    if oc in _MATERIALIZING:
+                        cost.bytes_min += m * bb
+            # --- collectives ---
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES and not oc.endswith("-done"):
+                cost.collective_bytes[base] = (
+                    cost.collective_bytes.get(base, 0.0) + m * out_bytes
+                )
+                cost.collective_ops.append((base, out_bytes, m, op.rest))
+    return cost

@@ -1,0 +1,145 @@
+"""Fault tolerance & elasticity: heartbeats, straggler detection, retrying
+step execution, elastic re-meshing after device loss.
+
+Multi-host reality on one container: the mechanisms are host-count-agnostic
+(file-based heartbeats keyed by host id; pure functions over timing
+records), unit-tested with fake clocks, and wired into launch/train.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import signal
+import time
+from typing import Callable
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats + straggler detection
+# ---------------------------------------------------------------------------
+
+
+class Heartbeat:
+    """File-based per-host heartbeat (works on any shared filesystem)."""
+
+    def __init__(self, root: str | pathlib.Path, host_id: int):
+        self.dir = pathlib.Path(root)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.host_id = host_id
+        self.path = self.dir / f"host_{host_id:05d}.json"
+
+    def beat(self, step: int, step_time_s: float, now: float | None = None):
+        rec = {
+            "host": self.host_id, "step": step,
+            "step_time_s": step_time_s, "time": now or time.time(),
+        }
+        tmp = self.path.with_suffix(".tmp")
+        tmp.write_text(json.dumps(rec))
+        tmp.rename(self.path)
+
+    @staticmethod
+    def read_all(root: str | pathlib.Path) -> list[dict]:
+        out = []
+        for p in pathlib.Path(root).glob("host_*.json"):
+            try:
+                out.append(json.loads(p.read_text()))
+            except (json.JSONDecodeError, OSError):
+                continue
+        return out
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    stragglers: list[int]        # hosts slower than k x median step time
+    dead: list[int]              # hosts with stale heartbeats
+    median_step_time: float
+
+
+def detect_stragglers(
+    records: list[dict], *, now: float, slow_factor: float = 2.0,
+    dead_after_s: float = 120.0,
+) -> StragglerReport:
+    """Median-based straggler + liveness classification.
+
+    At 1000+ node scale this runs on host 0 every N steps; stragglers get
+    flagged for the scheduler (checkpoint-evict-replace), dead hosts
+    trigger elastic re-mesh (see :func:`elastic_mesh_shape`).
+    """
+    if not records:
+        return StragglerReport([], [], 0.0)
+    alive = [r for r in records if now - r["time"] <= dead_after_s]
+    dead = [r["host"] for r in records if now - r["time"] > dead_after_s]
+    times = sorted(r["step_time_s"] for r in alive)
+    med = times[len(times) // 2] if times else 0.0
+    stragglers = [
+        r["host"] for r in alive
+        if med > 0 and r["step_time_s"] > slow_factor * med
+    ]
+    return StragglerReport(sorted(stragglers), sorted(dead), med)
+
+
+# ---------------------------------------------------------------------------
+# Elastic re-meshing
+# ---------------------------------------------------------------------------
+
+
+def elastic_mesh_shape(
+    n_devices: int, *, model_parallel: int, prefer_pods: int = 1
+) -> tuple[tuple[int, ...], tuple[str, ...]]:
+    """Largest usable (pod, data, model) mesh after losing devices.
+
+    Keeps the TP degree fixed (param shardings stay valid) and shrinks the
+    data axis to the largest whole multiple: checkpoint restore handles the
+    resharding (ZeRO states move), the data loader re-slices by host.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"{n_devices} devices cannot sustain model_parallel={model_parallel}"
+        )
+    data = n_devices // model_parallel
+    if prefer_pods > 1 and data % prefer_pods == 0:
+        return ((prefer_pods, data // prefer_pods, model_parallel),
+                ("pod", "data", "model"))
+    return ((data, model_parallel), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Retry + preemption
+# ---------------------------------------------------------------------------
+
+
+class PreemptionGuard:
+    """SIGTERM → finish the current step, checkpoint, exit cleanly."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = None
+
+    def install(self):
+        def handler(signum, frame):
+            self.requested = True
+        self._prev = signal.signal(signal.SIGTERM, handler)
+        return self
+
+    def uninstall(self):
+        if self._prev is not None:
+            signal.signal(signal.SIGTERM, self._prev)
+
+
+def run_with_retries(
+    step_fn: Callable[[], None], *, max_retries: int = 3,
+    on_failure: Callable[[int, Exception], None] | None = None,
+    retriable: tuple[type[Exception], ...] = (RuntimeError, OSError),
+):
+    """Execute one training step with bounded retries (transient XLA/runtime
+    faults at scale: preempted collectives, flaky interconnect)."""
+    for attempt in range(max_retries + 1):
+        try:
+            return step_fn()
+        except retriable as e:  # noqa: PERF203
+            if attempt == max_retries:
+                raise
+            if on_failure is not None:
+                on_failure(attempt, e)
+            time.sleep(min(2.0 ** attempt, 30.0))

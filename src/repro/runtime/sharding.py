@@ -1,0 +1,441 @@
+"""PartitionSpec rule engine: DP / TP / SP / EP / ZeRO-1 over the
+(pod, data, model) production mesh.
+
+Parameters are matched by path substring (first rule wins). Conventions:
+
+* TP (Megatron): attention/MLP in-projections column-parallel (out dim on
+  ``model``), out-projections row-parallel (in dim on ``model``); vocab
+  sharded on ``model`` for embed/unembed; MoE experts sharded on ``model``
+  (classic EP: the dispatch scatter/gather becomes the all-to-all).
+* DP: params replicated over ``pod``/``data``; the batch dim of inputs and
+  caches shards over ``("pod", "data")``.
+* ZeRO-1: optimizer master/m/v additionally shard over ``data`` on the
+  largest still-unsharded axis (uneven sizes fine — GSPMD pads).
+* SP: the residual stream is constrained to P(batch, "model", None) between
+  blocks (sequence-parallel) via :func:`act_constraint`, an ambient-mesh
+  no-op outside pjit.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (substring, spec-builder(shape) -> P). Checked in order.
+# Leading L axis (stacked layers) is never sharded.
+_RULES: list[tuple[str, Any]] = []
+
+
+def _rule(substr):
+    def deco(fn):
+        _RULES.append((substr, fn))
+        return fn
+    return deco
+
+
+# pjit *argument* shardings require exact divisibility (unlike
+# intermediates, which GSPMD pads) — every rule checks before sharding.
+N_MODEL = 16  # production TP degree; overridden via set_mesh_dims
+N_DATA = 16
+
+
+def set_mesh_dims(n_data: int, n_model: int):
+    """Configure divisibility checks for the active mesh (called by steps)."""
+    global N_MODEL, N_DATA
+    N_MODEL, N_DATA = n_model, n_data
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0 and n >= by
+
+
+def _last_on_model(shape):
+    if _div(shape[-1], N_MODEL):
+        return P(*([None] * (len(shape) - 1) + ["model"]))
+    if len(shape) >= 2 and _div(shape[-2], N_MODEL):
+        return P(*([None] * (len(shape) - 2) + ["model", None]))
+    return P()
+
+
+def _secondlast_on_model(shape):
+    if _div(shape[-2], N_MODEL):
+        return P(*([None] * (len(shape) - 2) + ["model", None]))
+    if _div(shape[-1], N_MODEL):
+        return P(*([None] * (len(shape) - 1) + ["model"]))
+    return P()
+
+
+# --- embeddings / heads: vocab on model (fallback: d_model) -----------------
+@_rule("embed/table")
+def _(shape):
+    if _div(shape[0], N_MODEL):
+        return P("model", None)
+    if _div(shape[1], N_MODEL):
+        return P(None, "model")  # whisper: 51865 vocab not 16-divisible
+    return P()
+
+
+@_rule("lm_head/w")
+def _(shape):
+    if _div(shape[1], N_MODEL):
+        return P(None, "model")
+    if _div(shape[0], N_MODEL):
+        return P("model", None)
+    return P()
+
+
+# --- MoE (before generic attn/mlp rules) -------------------------------------
+@_rule("moe/router")
+def _(shape):
+    return P()  # tiny + routing-critical: replicated
+
+
+def _experts(shape):
+    # (L, E, D, F): EP over experts when E divides, else F on model
+    if _div(shape[1], N_MODEL):
+        return P(None, "model", None, None)
+    return P(None, None, None, "model") if _div(shape[3], N_MODEL) else P()
+
+
+@_rule("experts/w_up")
+def _(shape):
+    return _experts(shape)
+
+
+@_rule("experts/w_gate")
+def _(shape):
+    return _experts(shape)
+
+
+@_rule("experts/w_down")
+def _(shape):
+    return _experts(shape)
+
+
+# --- attention ---------------------------------------------------------------
+@_rule("attn/wq")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("attn/wk")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("attn/wv")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("attn/wo")
+def _(shape):
+    return _secondlast_on_model(shape)
+
+
+# --- dense MLP ---------------------------------------------------------------
+@_rule("w_gate")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("w_up")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("w_down")
+def _(shape):
+    return _secondlast_on_model(shape)
+
+
+# --- mamba2 -------------------------------------------------------------------
+@_rule("in_proj")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("out_proj")
+def _(shape):
+    return _secondlast_on_model(shape)
+
+
+@_rule("conv_w")
+def _(shape):
+    return _last_on_model(shape)  # depthwise channels on model
+
+
+@_rule("conv_b")
+def _(shape):
+    return _last_on_model(shape)
+
+
+# --- rwkv6 --------------------------------------------------------------------
+@_rule("cm_wk")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("cm_wv")
+def _(shape):
+    return _secondlast_on_model(shape)
+
+
+@_rule("cm_wr")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("tmix/wr")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("tmix/wk")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("tmix/wv")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("tmix/wg")
+def _(shape):
+    return _last_on_model(shape)
+
+
+@_rule("tmix/wo")
+def _(shape):
+    return _secondlast_on_model(shape)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# Tensors above this size additionally shard over `data` (FSDP / ZeRO-3
+# style): llama4-scout's 100B expert bank cannot live TP-sharded only.
+FSDP_THRESHOLD = 2 * 1024**3  # elements
+
+
+def _add_data_axis(spec: P, shape: tuple[int, ...]) -> P:
+    """Shard the largest data-axis-divisible unsharded dim over `data`."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    if "data" in parts:  # FSDP already claimed the data axis
+        return P(*parts)
+    best, best_size = None, 1
+    for i, (pt, s) in enumerate(zip(parts, shape)):
+        if pt is None and s > best_size and _div(s, N_DATA):
+            best, best_size = i, s
+    if best is None:
+        return P(*parts)
+    parts[best] = "data"
+    return P(*parts)
+
+
+def param_spec(path: str, shape: tuple[int, ...]) -> P:
+    spec = None
+    for substr, fn in _RULES:
+        if substr in path:
+            spec = fn(shape)
+            break
+    if spec is None:
+        return P()  # norms, scalars, time_* vectors: replicated
+    size = 1
+    for s in shape:
+        size *= s
+    if size >= FSDP_THRESHOLD:
+        spec = _add_data_axis(spec, shape)
+    return spec
+
+
+def param_specs(params: Any) -> Any:
+    """PartitionSpec pytree mirroring a param (or abstract param) pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [param_spec(_path_str(p), tuple(l.shape)) for p, l in flat]
+    )
+
+
+def zero1_spec(spec: P, shape: tuple[int, ...]) -> P:
+    """Add 'data' sharding on the largest divisible unsharded dim (ZeRO-1)."""
+    return _add_data_axis(spec, shape)
+
+
+def opt_specs(params: Any) -> dict:
+    """Sharding spec tree for the AdamW state of ``params``."""
+    pspecs = param_specs(params)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    zflat = [
+        zero1_spec(param_spec(_path_str(p), tuple(l.shape)), tuple(l.shape))
+        for p, l in flat
+    ]
+    ztree = jax.tree_util.tree_unflatten(treedef, zflat)
+    return {"step": P(), "master": ztree, "m": ztree, "v": ztree}
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+BATCH_AXES = ("pod", "data")
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel mesh axes actually present (pod is optional)."""
+    return tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+
+
+def batch_specs(batch_like: Any, n_batch_shards: int,
+                axes: tuple[str, ...] = BATCH_AXES) -> Any:
+    """Shard the leading (batch) dim over pod×data when exactly divisible."""
+    def spec(leaf):
+        b = leaf.shape[0] if leaf.ndim else 1
+        if _div(b, n_batch_shards):
+            return P(axes, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+    return jax.tree.map(spec, batch_like)
+
+
+def cache_specs_tree(cache_like: Any, *, long_context: bool,
+                     axes: tuple[str, ...] = BATCH_AXES,
+                     n_dp: int = 1, decode: bool = False) -> Any:
+    """KV caches: batch over pod×data. The model-axis placement is the
+    decode-critical choice:
+
+    * decode: the cache SEQUENCE dim shards over `model` (context-parallel
+      decode) — per-shard partial attention combines with tiny per-head
+      collectives, and the cache is NEVER gathered. Sharding kv-heads (or
+      head_dim when GQA heads don't divide the TP degree) instead makes
+      GSPMD all-gather the entire cache every token (~107 GB/step at
+      internlm2 decode_32k — measured, see EXPERIMENTS §Perf).
+    * prefill: kv-heads over model (head_dim fallback) — queries attend
+      densely anyway and the head-parallel layout writes without traffic.
+    * batch-1 long-context decode: sequence over `data` too."""
+
+    def _kv_dims(kv: int, hd: int):
+        if _div(kv, N_MODEL):
+            return "model", None
+        if _div(hd, N_MODEL):
+            return None, "model"
+        return None, None
+
+    def spec(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        shp = leaf.shape
+        if name in ("kv", "shared_kv") and leaf.ndim == 6:
+            # (L, 2, B, S, KV, hd)
+            _, _, b, s, kv, hd = shp
+            if long_context:
+                seq = "data" if _div(s, N_DATA) else None
+                seq_m = None
+                if decode and _div(s // max(N_DATA, 1), N_MODEL):
+                    return P(None, None, None, ("data", "model"), None, None)
+                return P(None, None, None, seq, *(_kv_dims(kv, hd)))
+            bsp = axes if _div(b, n_dp) else None
+            if decode and _div(s, N_MODEL):
+                return P(None, None, bsp, "model", None, None)
+            kvs, hds = _kv_dims(kv, hd)
+            return P(None, None, bsp, None, kvs, hds)
+        if name in ("cross_k", "cross_v") and leaf.ndim == 5:
+            # (L, B, S, KV, hd)
+            _, b, s, kv, hd = shp
+            kvs, hds = _kv_dims(kv, hd)
+            if decode and _div(s, N_MODEL):
+                kvs, hds = None, None
+                bsp = axes if _div(b, n_dp) else None
+                return P(None, bsp, "model", kvs, hds)
+            bsp = axes if (_div(b, n_dp) and not long_context) else None
+            return P(None, bsp, None, kvs, hds)
+        if name in ("ssm", "wkv") and leaf.ndim == 5:
+            # (L, B, H, N, P)
+            _, b, h, _, _ = shp
+            bsp = axes if (_div(b, n_dp) and not long_context) else None
+            hsp = "model" if _div(h, N_MODEL) else None
+            return P(None, bsp, hsp, None, None)
+        if name in ("conv", "shift_t", "shift_c") and leaf.ndim >= 3:
+            # (L, B, K-1, C) / (L, B, D): channels on model
+            ch = "model" if _div(shp[-1], N_MODEL) else None
+            b = shp[1]
+            bsp = axes if (_div(b, n_dp) and not long_context) else None
+            return P(None, bsp, *([None] * (leaf.ndim - 3)), ch)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_like)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat]
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation constraints (SP) — ambient mesh context
+# ---------------------------------------------------------------------------
+
+_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def sharding_hints(mesh: Mesh):
+    _CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _CTX.mesh = None
+
+
+def act_constraint(x: jax.Array, kind: str) -> jax.Array:
+    """Constrain intermediate activations; no-op without ambient mesh.
+
+    kinds: "residual" (B, S, D) -> sequence-parallel P(batch, model, None);
+           "logits" (B, S, V) -> vocab on model.
+    """
+    mesh = getattr(_CTX, "mesh", None)
+    if mesh is None:
+        return x
+    batch = BATCH_AXES if "pod" in mesh.axis_names else ("data",)
+    n_model = mesh.shape.get("model", 1)
+    if kind == "residual" and x.ndim == 3:
+        bdim = batch if x.shape[0] > 1 else None
+        spec = P(bdim, "model", None) if x.shape[1] > 1 else P(bdim, None, None)
+    elif kind == "logits" and x.ndim == 3:
+        spec = P(batch if x.shape[0] > 1 else None, None, "model")
+    elif kind == "heads" and x.ndim == 4:
+        # (B, S, H, hd): shard heads over model when they divide
+        if x.shape[2] % n_model:
+            return x
+        bdim = batch if x.shape[0] > 1 else None
+        spec = P(bdim, None, "model", None)
+    elif kind == "tokens2d" and x.ndim == 2:
+        # (T, D) flattened token stream (MoE dispatch/combine): keep fully
+        # sharded over data x model so the combine lowers to reduce-scatter
+        # instead of a full all-reduce of (T, D)
+        if x.shape[0] % (mesh.shape.get("data", 1) * n_model):
+            return x
+        spec = P((*batch, "model"), None)
+    elif kind == "expert_buf" and x.ndim == 3:
+        # (E, C, D): experts over model (EP)
+        if x.shape[0] % n_model:
+            return x
+        spec = P("model", None, None)
+    elif kind == "heads5" and x.ndim == 5:
+        # (B, n_chunks, Q, H, hd): stacked q-chunk layout — pin the head
+        # sharding so the scan xs don't bounce through replication
+        if x.shape[3] % n_model:
+            return x
+        bdim = batch if x.shape[0] > 1 else None
+        spec = P(bdim, None, None, "model", None)
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,146 @@
+"""Jitted, mesh-sharded step builders: the bridge between the model zoo and
+the launcher/dry-run.
+
+``build_train_step``/``build_serve_step`` return (jitted_fn, in_specs,
+out_specs) with NamedShardings resolved against a concrete mesh. The same
+builders serve the real trainer (CPU smoke / examples) and the dry-run
+(lower+compile only).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch.mesh import batch_shards
+from repro.models.model import Model, build_model
+from repro.optim import adamw
+from repro.runtime import sharding as shd
+
+
+def _ns(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_params(model: Model):
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def abstract_opt(model: Model):
+    params = abstract_params(model)
+    return jax.eval_shape(adamw.init_opt_state, params)
+
+
+def _configure(mesh: Mesh):
+    shd.set_mesh_dims(mesh.shape.get("data", 1), mesh.shape.get("model", 1))
+
+
+def build_train_step(
+    model: Model, mesh: Mesh, opt_cfg: adamw.AdamWConfig, shape: ShapeConfig
+):
+    """Returns (step_fn, (params_shd, opt_shd, batch_shd), out_shardings)."""
+    _configure(mesh)
+    aparams = abstract_params(model)
+    pspecs = shd.param_specs(aparams)
+    ospecs = shd.opt_specs(aparams)
+    batch_abs = model.input_specs(shape)
+    bspecs = shd.batch_specs(batch_abs, batch_shards(mesh), shd.dp_axes(mesh))
+
+    def train_step(params, opt, batch):
+        with shd.sharding_hints(mesh):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.train_loss, has_aux=True
+            )(params, batch)
+            params, opt, opt_metrics = adamw.apply_updates(
+                opt_cfg, params, grads, opt
+            )
+        return params, opt, {**metrics, **opt_metrics}
+
+    params_shd = _ns(mesh, pspecs)
+    opt_shd = _ns(mesh, ospecs)
+    batch_shd = _ns(mesh, bspecs)
+    metrics_shd = None  # replicated by default
+    fn = jax.jit(
+        train_step,
+        in_shardings=(params_shd, opt_shd, batch_shd),
+        out_shardings=(params_shd, opt_shd, metrics_shd),
+        donate_argnums=(0, 1),
+    )
+    return fn, (params_shd, opt_shd, batch_shd), (params_shd, opt_shd)
+
+
+def build_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig):
+    """Prefill (kind=prefill) or single-token decode (kind=decode).
+
+    Returns (step_fn, (params_shd, batch/token_shd, cache_shd), out desc).
+    """
+    cfg = model.cfg
+    _configure(mesh)
+    aparams = abstract_params(model)
+    pspecs = shd.param_specs(aparams)
+    params_shd = _ns(mesh, pspecs)
+    long_ctx = shape.kind == "decode" and shape.global_batch < batch_shards(mesh)
+    cache_abs = model.cache_specs(shape)
+    cspecs = shd.cache_specs_tree(cache_abs, long_context=long_ctx,
+                                  axes=shd.dp_axes(mesh),
+                                  n_dp=batch_shards(mesh),
+                                  decode=shape.kind == "decode")
+    cache_shd = _ns(mesh, cspecs)
+    batch_abs = model.input_specs(shape)
+    bspecs = shd.batch_specs(batch_abs, batch_shards(mesh), shd.dp_axes(mesh))
+    batch_shd = _ns(mesh, bspecs)
+    n_model = mesh.shape.get("model", 1)
+    vocab_ax = "model" if cfg.vocab_size % n_model == 0 else None
+    b_ax = shd.dp_axes(mesh) if shape.global_batch % batch_shards(mesh) == 0 \
+        and shape.global_batch >= batch_shards(mesh) else None
+    logits_shd = NamedSharding(mesh, P(b_ax, None, vocab_ax))
+
+    if shape.kind == "prefill":
+
+        def serve_step(params, batch, cache):
+            with shd.sharding_hints(mesh):
+                return model.prefill(params, batch, cache)
+
+    else:
+
+        def serve_step(params, batch, cache):
+            with shd.sharding_hints(mesh):
+                return model.decode_step(params, batch["tokens"], cache)
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(params_shd, batch_shd, cache_shd),
+        out_shardings=(logits_shd, cache_shd),
+        donate_argnums=(2,),
+    )
+    return fn, (params_shd, batch_shd, cache_shd), (logits_shd, cache_shd)
+
+
+def lower_cell(
+    arch_cfg: ArchConfig,
+    shape: ShapeConfig,
+    mesh: Mesh,
+    opt_cfg: adamw.AdamWConfig | None = None,
+):
+    """Lower (not run) one (arch x shape) cell on a mesh: the dry-run unit."""
+    model = build_model(arch_cfg)
+    if shape.kind == "train":
+        fn, (pshd, oshd, bshd), _ = build_train_step(
+            model, mesh, opt_cfg or adamw.AdamWConfig(), shape
+        )
+        aparams = abstract_params(model)
+        aopt = abstract_opt(model)
+        abatch = model.input_specs(shape)
+        return fn.lower(aparams, aopt, abatch)
+    fn, (pshd, bshd, cshd), _ = build_serve_step(model, mesh, shape)
+    aparams = abstract_params(model)
+    abatch = model.input_specs(shape)
+    acache = model.cache_specs(shape)
+    return fn.lower(aparams, abatch, acache)

@@ -1,0 +1,203 @@
+"""Distribution layer: sharding rules, ZeRO/FSDP specs, reduced dry-run via
+subprocess (8 fake devices), multi-device train-step equivalence, elastic
+checkpoint reshard, loop-aware HLO cost model."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import sharding as shd
+
+
+def setup_module(_):
+    shd.set_mesh_dims(16, 16)
+
+
+def test_param_rules_tp():
+    assert shd.param_spec("layers/attn/wq", (28, 1024, 2048)) == P(None, None, "model")
+    assert shd.param_spec("layers/attn/wo", (28, 2048, 1024)) == P(None, "model", None)
+    assert shd.param_spec("layers/mlp/w_up", (28, 1024, 3072)) == P(None, None, "model")
+    assert shd.param_spec("layers/mlp/w_down", (28, 3072, 1024)) == P(None, "model", None)
+    assert shd.param_spec("embed/table", (151936, 1024)) == P("model", None)
+    # whisper: vocab 51865 not divisible by 16 -> falls back to d_model
+    assert shd.param_spec("embed/table", (51865, 1024)) == P(None, "model")
+    # norms replicated
+    assert shd.param_spec("layers/norm1_scale", (28, 1024)) == P()
+    assert shd.param_spec("layers/moe/router/w", (28, 2048, 64)) == P()
+
+
+def test_param_rules_ep_and_fsdp():
+    # deepseek experts: EP over model + FSDP over data (>2^31 elements)
+    spec = shd.param_spec("layers/moe/experts/w_up", (28, 64, 2048, 1408))
+    assert spec == P(None, "model", "data", None)
+    # small expert banks: EP only
+    spec = shd.param_spec("layers/moe/experts/w_up", (2, 64, 64, 64))
+    assert spec == P(None, "model", None, None)
+
+
+def test_zero1_adds_data_axis_divisibly():
+    base = shd.param_spec("layers/attn/wq", (28, 1024, 2048))
+    z = shd.zero1_spec(base, (28, 1024, 2048))
+    assert z == P(None, "data", "model")
+    # never duplicates data (FSDP params)
+    fs = P(None, "model", "data", None)
+    assert shd.zero1_spec(fs, (28, 64, 2048, 1408)) == fs
+    # skips non-divisible dims (51865 % 16 != 0)
+    z2 = shd.zero1_spec(P(None, "model"), (51865, 1024))
+    assert z2 == P(None, "model")
+
+
+def test_cache_specs_kv_fallbacks():
+    import jax
+
+    shd.set_mesh_dims(16, 16)
+    cache = {
+        "kv": jax.ShapeDtypeStruct((48, 2, 128, 32768, 8, 128), np.dtype("float32")),
+        "len": jax.ShapeDtypeStruct((), np.dtype("int32")),
+    }
+    specs = shd.cache_specs_tree(cache, long_context=False, axes=("data",),
+                                 n_dp=16)
+    # kv=8 not divisible by 16 -> head_dim sharded instead
+    assert specs["kv"] == P(None, None, ("data",), None, None, "model")
+    specs = shd.cache_specs_tree(cache, long_context=True, axes=("data",),
+                                 n_dp=16)
+    assert specs["kv"] == P(None, None, None, "data", None, "model")
+
+
+def _run(sub):
+    return subprocess.run(
+        [sys.executable, "-c", sub], capture_output=True, text=True,
+        timeout=600, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+    )
+
+
+def test_reduced_dryrun_subprocess():
+    """Full dry-run machinery on a reduced cell with 8 fake devices."""
+    sub = textwrap.dedent("""
+        import json, pathlib, tempfile
+        from repro.launch import dryrun
+        out = pathlib.Path(tempfile.mkdtemp())
+        rec = dryrun.run_cell("qwen3-0.6b", "train_4k", "multi", out,
+                              reduced=True, reduced_devices=8)
+        assert rec["status"] == "ok", rec
+        assert rec["t_collective_s"] > 0
+        assert rec["per_device_peak_bytes"] > 0
+        print("OK", rec["bottleneck"])
+    """)
+    r = _run(sub)
+    assert r.returncode == 0, r.stderr[-2500:]
+    assert "OK" in r.stdout
+
+
+def test_train_step_multidevice_matches_single():
+    """The sharded train step must produce the same loss trajectory as the
+    single-device run (GSPMD correctness end-to-end)."""
+    sub = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np, jax.numpy as jnp
+        from repro.configs import get_config
+        from repro.configs.base import ShapeConfig
+        from repro.launch.mesh import make_mesh
+        from repro.models import build_model
+        from repro.optim import adamw
+        from repro.runtime import steps as S
+
+        cfg = get_config("qwen3-0.6b").reduced()
+        model = build_model(cfg)
+        shape = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+        oc = adamw.AdamWConfig(peak_lr=1e-3, warmup=2, total_steps=10)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 32)).astype(np.int32),
+                 "labels": rng.integers(0, cfg.vocab_size, (4, 32)).astype(np.int32)}
+
+        losses = {}
+        for mesh_shape in [(1, 1), (2, 4)]:
+            mesh = make_mesh(mesh_shape, ("data", "model"))
+            fn, (pshd, oshd, bshd), _ = S.build_train_step(model, mesh, oc, shape)
+            with mesh:
+                params = jax.jit(model.init, out_shardings=pshd)(jax.random.PRNGKey(0))
+                opt = jax.jit(adamw.init_opt_state, out_shardings=oshd)(params)
+                ls = []
+                for _ in range(3):
+                    b = {k: jax.device_put(v, bshd[k]) for k, v in batch.items()}
+                    params, opt, m = fn(params, opt, b)
+                    ls.append(float(m["loss"]))
+            losses[mesh_shape] = ls
+        a, b = losses[(1, 1)], losses[(2, 4)]
+        assert np.allclose(a, b, rtol=2e-2, atol=2e-2), (a, b)
+        print("OK", a, b)
+    """)
+    r = _run(sub)
+    assert r.returncode == 0, r.stderr[-2500:]
+    assert "OK" in r.stdout
+
+
+def test_elastic_restore_across_meshes():
+    """Checkpoint on a 2x4 mesh, restore onto 4x2 and 1x1 (elastic)."""
+    sub = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np, jax.numpy as jnp, tempfile
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.checkpoint.manager import CheckpointManager
+        from repro.launch.mesh import make_mesh
+
+        tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+        m1 = make_mesh((2, 4), ("data", "model"))
+        s1 = {"w": NamedSharding(m1, P("data", "model"))}
+        t1 = jax.device_put(tree, s1)
+        d = tempfile.mkdtemp()
+        mgr = CheckpointManager(d)
+        mgr.save(1, t1, blocking=True)
+
+        m2 = make_mesh((4, 2), ("data", "model"))
+        s2 = {"w": NamedSharding(m2, P("model", "data"))}
+        _, t2 = mgr.restore(1, tree, s2)
+        np.testing.assert_array_equal(np.asarray(t2["w"]), np.asarray(tree["w"]))
+        _, t3 = mgr.restore(1, tree)  # single device
+        np.testing.assert_array_equal(np.asarray(t3["w"]), np.asarray(tree["w"]))
+        print("OK")
+    """)
+    r = _run(sub)
+    assert r.returncode == 0, r.stderr[-2500:]
+    assert "OK" in r.stdout
+
+
+def test_hlocost_loop_awareness():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.roofline import hlocost
+
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((6, 64, 64))
+    c = jax.jit(f).lower(x, w).compile()
+    cost = hlocost.analyze(c.as_text())
+    want = 6 * 2 * 64**3
+    assert abs(cost.dot_flops - want) / want < 0.01
+    # XLA's own counter sees the body once — ours is ~6x larger
+    assert cost.dot_flops > 5 * float(c.cost_analysis()["flops"]) * 0.8
+
+
+def test_collective_wire_math():
+    from repro.roofline.analysis import collectives_from_ops
+
+    # 1 MB all-reduce over 16 devices, inside an L=32 loop
+    ops = [("all-reduce", 1 << 20, 32.0, "replica_groups={{0,1,2,3,4,5,6,7,"
+            "8,9,10,11,12,13,14,15}}")]
+    st = collectives_from_ops(ops, n_devices=16, pod_stride=1 << 30)
+    assert st.total_bytes == 32 * (1 << 20)
+    assert st.wire_bytes_ici == pytest.approx(2 * 15 / 16 * 32 * (1 << 20))
+    assert st.wire_bytes_dcn == 0

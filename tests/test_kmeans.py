@@ -1,0 +1,91 @@
+"""Tests for histogram-accelerated 1-D k-means."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans
+
+
+def test_three_well_separated_clusters():
+    rng = np.random.default_rng(0)
+    x = np.concatenate(
+        [rng.normal(-10, 0.1, 500), rng.normal(0, 0.1, 2000), rng.normal(9, 0.1, 300)]
+    ).astype(np.float32)
+    res = kmeans.kmeans1d(jnp.asarray(x), k=3)
+    c = np.asarray(res.centroids)
+    assert abs(c[0] + 10) < 0.5 and abs(c[1]) < 0.5 and abs(c[2] - 9) < 0.5
+    ids = np.asarray(kmeans.cluster_masks(jnp.asarray(x), res.boundaries))
+    assert (ids[:500] == 0).mean() > 0.99
+    assert (ids[500:2500] == 1).mean() > 0.99
+    assert (ids[2500:] == 2).mean() > 0.99
+
+
+def test_centroids_sorted_and_boundaries_between():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=4096).astype(np.float32))
+    res = kmeans.kmeans1d(x, k=3)
+    c = np.asarray(res.centroids)
+    b = np.asarray(res.boundaries)
+    assert (np.diff(c) >= 0).all()
+    assert (b >= c[:-1]).all() and (b <= c[1:]).all()
+
+
+def test_constant_tensor_degenerate():
+    x = jnp.full((1000,), 2.5, jnp.float32)
+    res = kmeans.kmeans1d(x, k=3)
+    assert np.isfinite(np.asarray(res.centroids)).all()
+    ids = kmeans.cluster_masks(x, res.boundaries)
+    assert np.isfinite(np.asarray(ids)).all()
+
+
+def test_np_twin_matches_jax():
+    x = np.random.default_rng(3).normal(size=8192).astype(np.float32)
+    res = kmeans.kmeans1d(jnp.asarray(x), k=3)
+    c_np, b_np = kmeans.kmeans1d_np(x, k=3)
+    np.testing.assert_allclose(np.asarray(res.centroids), c_np, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(res.boundaries), b_np, rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(
+    x=hnp.arrays(np.float32, st.integers(16, 2000),
+                 elements=st.floats(-1000, 1000, width=32)),
+    k=st.sampled_from([2, 3]),
+)
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_property_partition_covers_everything(x, k):
+    """Every element lands in exactly one cluster; masks partition."""
+    ids = np.asarray(
+        kmeans.cluster_masks(
+            jnp.asarray(x), kmeans.kmeans1d(jnp.asarray(x), k=k).boundaries
+        )
+    )
+    assert ids.min() >= 0 and ids.max() <= k - 1
+
+
+@hypothesis.given(
+    x=hnp.arrays(np.float32, st.integers(64, 1000),
+                 elements=st.floats(-100, 100, width=32)),
+)
+@hypothesis.settings(deadline=None, max_examples=20)
+def test_property_clusters_are_intervals(x):
+    """1-D k-means clusters must be contiguous in value."""
+    hypothesis.assume(float(np.ptp(x)) > 1e-2)
+    res = kmeans.kmeans1d(jnp.asarray(x), k=3)
+    ids = np.asarray(kmeans.cluster_masks(jnp.asarray(x), res.boundaries))
+    order = np.argsort(x, kind="stable")
+    assert (np.diff(ids[order]) >= 0).all()
+
+
+def test_split_range_reduction():
+    """The point of the paper: per-cluster ranges are much narrower than the
+    full tensor range for outlier-heavy distributions."""
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 0.05, 100_000).astype(np.float32)
+    x[:50] = rng.uniform(2, 3, 50)  # positive outliers
+    x[50:100] = rng.uniform(-3, -2, 50)
+    res = kmeans.kmeans1d(jnp.asarray(x), k=3)
+    ids = np.asarray(kmeans.cluster_masks(jnp.asarray(x), res.boundaries))
+    full = np.ptp(x)
+    mid = x[ids == 1]
+    assert np.ptp(mid) < full / 5  # middle cluster >=5x narrower

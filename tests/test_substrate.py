@@ -1,0 +1,248 @@
+"""Substrate tests: checkpoint manager (async/atomic/reshard), fault
+tolerance (stragglers, elastic re-mesh, retries), data pipeline
+(determinism, resume), optimizer, schedules."""
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import ByteCorpus, DataLoader, Prefetcher, SyntheticLM
+from repro.optim import adamw
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.fault import (
+    Heartbeat,
+    PreemptionGuard,
+    detect_stragglers,
+    elastic_mesh_shape,
+    run_with_retries,
+)
+
+
+# -- checkpoint ---------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"w": jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))},
+        "opt": {"step": jnp.asarray(3, jnp.int32),
+                "m": jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    t = _tree()
+    mgr.save(10, t, blocking=True)
+    step, back = mgr.restore(None, jax.tree.map(jnp.zeros_like, t))
+    assert step == 10
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_retention(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s))
+    mgr.wait()
+    assert mgr.list_steps() == [3, 4]  # keep=2
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(5, _tree(), blocking=True)
+    assert not list(pathlib.Path(tmp_path).glob("*.tmp"))
+    assert (pathlib.Path(tmp_path) / "step_00000005" / "manifest.json").exists()
+
+
+def test_checkpoint_restore_missing_leaf_fails(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"a": jnp.ones(3)}, blocking=True)
+    with pytest.raises(KeyError):
+        mgr.restore(1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_checkpoint_dtype_cast_on_restore(tmp_path):
+    """Elastic restore casts to the target dtype (bf16 <-> fp32 configs)."""
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, {"w": jnp.ones((4,), jnp.float32)}, blocking=True)
+    _, back = mgr.restore(1, {"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert back["w"].dtype == jnp.bfloat16
+
+
+# -- fault tolerance ----------------------------------------------------------
+
+
+def test_straggler_detection():
+    now = 1000.0
+    recs = [
+        {"host": 0, "step": 5, "step_time_s": 1.0, "time": now - 1},
+        {"host": 1, "step": 5, "step_time_s": 1.1, "time": now - 2},
+        {"host": 2, "step": 5, "step_time_s": 5.0, "time": now - 1},   # slow
+        {"host": 3, "step": 2, "step_time_s": 1.0, "time": now - 500}, # dead
+    ]
+    rep = detect_stragglers(recs, now=now, slow_factor=2.0, dead_after_s=120)
+    assert rep.stragglers == [2]
+    assert rep.dead == [3]
+    assert rep.median_step_time == pytest.approx(1.1)
+
+
+def test_heartbeat_files(tmp_path):
+    hb = Heartbeat(tmp_path, host_id=7)
+    hb.beat(step=42, step_time_s=0.5, now=123.0)
+    recs = Heartbeat.read_all(tmp_path)
+    assert recs == [{"host": 7, "step": 42, "step_time_s": 0.5, "time": 123.0}]
+
+
+def test_elastic_mesh_shapes():
+    # full fleet
+    assert elastic_mesh_shape(512, model_parallel=16, prefer_pods=2) == (
+        (2, 16, 16), ("pod", "data", "model"))
+    # lost one pod -> single-pod mesh
+    assert elastic_mesh_shape(256, model_parallel=16) == (
+        (16, 16), ("data", "model"))
+    # lost 3 hosts of 8 chips: 488 // 16 = 30 data rows
+    shape, axes = elastic_mesh_shape(488, model_parallel=16)
+    assert shape == (30, 16)
+    with pytest.raises(ValueError):
+        elastic_mesh_shape(8, model_parallel=16)
+
+
+def test_run_with_retries_recovers():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert run_with_retries(flaky, max_retries=3) == "ok"
+    assert len(calls) == 3
+
+
+def test_run_with_retries_gives_up():
+    def always():
+        raise RuntimeError("hard")
+
+    with pytest.raises(RuntimeError):
+        run_with_retries(always, max_retries=1)
+
+
+def test_preemption_guard_install_uninstall():
+    g = PreemptionGuard().install()
+    assert g.requested is False
+    g.uninstall()
+
+
+# -- data pipeline ------------------------------------------------------------
+
+
+def test_loader_deterministic_and_resumable():
+    dl = DataLoader(SyntheticLM(100, seed=1), global_batch=4, seq_len=16, seed=2)
+    b1 = dl.batch_at(7)
+    b2 = dl.batch_at(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(
+        dl.batch_at(0)["tokens"][:, 1:], dl.batch_at(0)["labels"][:, :-1]
+    )
+
+
+def test_loader_host_sharding_partitions():
+    full = DataLoader(SyntheticLM(100), 8, 16, seed=0).batch_at(0)["tokens"]
+    parts = [
+        DataLoader(SyntheticLM(100), 8, 16, seed=0, host_id=h, n_hosts=2)
+        .batch_at(0)["tokens"]
+        for h in (0, 1)
+    ]
+    merged = np.empty_like(full)
+    merged[0::2] = parts[0]
+    merged[1::2] = parts[1]
+    np.testing.assert_array_equal(merged, full)
+
+
+def test_byte_corpus_windows():
+    c = ByteCorpus("hello world, this is a tiny corpus for the byte lm. " * 4)
+    w = c.windows(np.random.default_rng(0), 3, 10)
+    assert w.shape == (3, 11)
+    assert (w >= 0).all() and (w < 259).all()
+
+
+def test_prefetcher_passthrough():
+    items = [{"x": np.array([i])} for i in range(5)]
+    out = list(Prefetcher(iter(items)))
+    assert [int(o["x"][0]) for o in out] == [0, 1, 2, 3, 4]
+
+
+def test_synthetic_lm_is_learnable_structure():
+    """The synthetic stream must be predictable (else Table-1 accuracies
+    are all chance and the reproduction is vacuous)."""
+    src = SyntheticLM(64, seed=0)
+    x = src.sample(np.random.default_rng(0), 5000)
+    # bigram predictability: most frequent successor of each token beats 1/64
+    from collections import Counter, defaultdict
+
+    succ = defaultdict(Counter)
+    for a, b in zip(x[:-1], x[1:]):
+        succ[int(a)][int(b)] += 1
+    top_mass = np.mean([
+        max(c.values()) / sum(c.values()) for c in succ.values()
+        if sum(c.values()) >= 20
+    ])
+    # the generator conditions on a hashed-history state, so raw bigram
+    # predictability understates it; 4x over the 1/64 chance floor is the
+    # learnability signal we need
+    assert top_mass > 4.0 / 64
+
+
+# -- optimizer ----------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    cfg = adamw.AdamWConfig(peak_lr=0.1, warmup=5, total_steps=100,
+                            weight_decay=0.0, clip_norm=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw.init_opt_state(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, opt, m = adamw.apply_updates(cfg, params, g, opt)
+    assert float(loss(params)) < 0.2
+
+
+def test_adamw_mixed_precision_master():
+    cfg = adamw.AdamWConfig(peak_lr=0.01, warmup=1, total_steps=10)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw.init_opt_state(params)
+    g = {"w": jnp.full((4,), 0.001, jnp.bfloat16)}
+    params, opt, _ = adamw.apply_updates(cfg, params, g, opt)
+    assert params["w"].dtype == jnp.bfloat16
+    assert opt["master"]["w"].dtype == jnp.float32
+    # master moved even though the bf16 delta may round away
+    assert float(jnp.abs(opt["master"]["w"] - 1.0).max()) > 0
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(s, peak_lr=1.0, warmup=10, total=100))
+           for s in range(100)]
+    assert lrs[0] == 0.0
+    assert max(lrs) == pytest.approx(1.0, abs=1e-3)
+    assert lrs[9] < lrs[10] >= lrs[11] >= lrs[50] >= lrs[99]
+    assert lrs[99] >= 0.1 - 1e-6  # floor
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(peak_lr=1.0, warmup=1, total_steps=2, clip_norm=1.0)
+    params = {"w": jnp.zeros((3,))}
+    opt = adamw.init_opt_state(params)
+    g = {"w": jnp.asarray([1e6, 0.0, 0.0])}
+    _, _, m = adamw.apply_updates(cfg, params, g, opt)
+    assert float(m["grad_norm"]) == pytest.approx(1e6)

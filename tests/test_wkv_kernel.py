@@ -1,0 +1,54 @@
+"""WKV Pallas kernel vs the chunked-JAX implementation (itself tested
+against the naive recurrence in test_ssm.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.wkv import wkv_pallas
+from repro.models.ssm import _wkv_chunked
+
+
+def _data(b, h, s, n, p, seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda sh: jnp.asarray(rng.normal(size=sh).astype(np.float32))
+    r, k = mk((b, s, h, n)), mk((b, s, h, n))
+    v = mk((b, s, h, p))
+    lw = -jnp.abs(mk((b, s, h, n))) * 0.4
+    u = mk((h, n))
+    return r, k, v, lw, u
+
+
+@pytest.mark.parametrize("s,chunk", [(32, 8), (64, 16), (64, 64)])
+@pytest.mark.parametrize("n,p", [(8, 8), (16, 32)])
+def test_wkv_kernel_vs_chunked_jax(s, chunk, n, p):
+    b, h = 2, 3
+    r, k, v, lw, u = _data(b, h, s, n, p, seed=s + n)
+    y_ref, st_ref = _wkv_chunked(r, k, v, lw, u, chunk)
+
+    def bh(t):  # (B,S,H,X) -> (B*H, S, X)
+        return t.swapaxes(1, 2).reshape(b * h, s, t.shape[-1])
+
+    u_bh = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, 1, n)
+    y, st = wkv_pallas(bh(r), bh(k), bh(v), bh(lw), u_bh, chunk=chunk,
+                       interpret=True)
+    y = y.reshape(b, h, s, p).swapaxes(1, 2)
+    st = st.reshape(b, h, n, p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_wkv_kernel_strong_decay_stable():
+    b, h, s, n, p = 1, 1, 32, 8, 8
+    r, k, v, lw, u = _data(b, h, s, n, p, seed=9)
+    lw = jnp.full_like(lw, -15.0)
+    u_bh = jnp.broadcast_to(u[None], (b, h, n)).reshape(b * h, 1, n)
+
+    def bh_(t):
+        return t.swapaxes(1, 2).reshape(b * h, s, t.shape[-1])
+
+    y, st = wkv_pallas(bh_(r), bh_(k), bh_(v), bh_(lw), u_bh, chunk=8,
+                       interpret=True)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(st)).all()
