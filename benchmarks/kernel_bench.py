@@ -1,10 +1,18 @@
-"""Kernel micro-bench: wall time of the quantized-matmul execution paths on
-CPU (interpret-mode Pallas is NOT representative of TPU — the point here is
-(a) the paths run, (b) the XLA-fused jnp variants' relative cost, and
-(c) weight-bytes accounting per path, which IS the TPU-relevant number for
-decode (weight-bandwidth-bound)."""
+"""Kernel + engine micro-bench: wall time of the quantized-matmul execution
+paths on CPU (interpret-mode Pallas is NOT representative of TPU — the point
+here is (a) the paths run, (b) relative cost of the XLA-fused jnp variants,
+and (c) weight-bytes accounting per path, which IS the TPU-relevant number
+for decode (weight-bandwidth-bound).
+
+Also emits ``BENCH_quant_engine.json`` at the repo root — a persistent
+perf-trajectory record (tokens/s per engine, weight-bytes/token per path,
+kernel wall times, launches/block) that this and future PRs append to
+compare against.
+"""
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import jax
@@ -18,15 +26,50 @@ from repro.core.qlinear import (
 )
 from repro.core.split import split_quantize, split_quantize_packed
 
+BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / (
+    "BENCH_quant_engine.json"
+)
+
 
 def _time(f, *args, iters=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        jax.block_until_ready(f(*args))
-    t0 = time.time()
+    jax.block_until_ready(f(*args))  # single warmup (compile)
+    total = 0.0
     for _ in range(iters):
-        out = f(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(*args))  # block per iteration
+        total += time.perf_counter() - t0
+    return total / iters
+
+
+def _serve_stats(engine: str, gen: int = 4) -> dict:
+    """Tiny end-to-end serve run per engine path (reduced llama, CPU)."""
+    from repro.configs import get_config
+    from repro.core import QuantPolicy, restructure
+    from repro.engine import decode_weight_bytes
+    from repro.kernels import ops
+    from repro.launch.serve import BatchedServer, Request
+    from repro.models import build_model
+
+    cfg = get_config("llama32-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    qm = restructure(params, QuantPolicy(bits=4, packed=engine == "packed"))
+    if engine == "fake":
+        params = qm.materialize()
+    else:
+        params = qm.as_executable(group=True)
+    with ops.count_launches() as launches:
+        server = BatchedServer(model, params, batch_slots=2, max_len=24)
+        reqs = [
+            Request(i, np.random.default_rng(i).integers(
+                0, cfg.vocab_size, 8, dtype=np.int32), gen)
+            for i in range(2)
+        ]
+        stats = server.run(reqs)
+    stats["weight_bytes_per_token"] = decode_weight_bytes(
+        params, tie_embeddings=cfg.tie_embeddings)
+    stats["quant_kernel_launches_traced"] = dict(launches)
+    return stats
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -45,10 +88,65 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("kernel/fused_us", tf * 1e6, "fused sum-then-matmul"))
     rows.append(("kernel/packed_us", tp * 1e6, "6-bit packed layout"))
     # weight bytes per layer read at decode (the TPU-side figure of merit)
-    rows.append(("kernel/bytes_3plane", float(3 * k * n // 2),
-                 "12 bit/weight (paper)"))
-    rows.append(("kernel/bytes_packed", float(k * n // 2 + k * n // 4),
+    bytes_3plane = float(3 * k * n // 2)
+    bytes_packed = float(k * n // 2 + k * n // 4)
+    rows.append(("kernel/bytes_3plane", bytes_3plane, "12 bit/weight (paper)"))
+    rows.append(("kernel/bytes_packed", bytes_packed,
                  "6 bit/weight (ours) = 2x less HBM traffic at decode"))
+
+    # engine end-to-end: fake-quant vs packed-kernel serving
+    serve = {eng: _serve_stats(eng) for eng in ("fake", "packed")}
+    for eng, st in serve.items():
+        rows.append((f"engine/{eng}_tok_per_s", st["tok_per_s"],
+                     f"{st['tokens']} tokens end-to-end (reduced llama)"))
+        rows.append((f"engine/{eng}_weight_bytes_per_token",
+                     float(st["weight_bytes_per_token"]),
+                     "decode reads every weight once per token"))
+
+    # quantized-storage bytes/token: packed (6 bit/wt) vs 3-plane (12 bit/wt)
+    from repro.configs import get_config
+    from repro.core import QuantPolicy, restructure
+    from repro.models import build_model
+
+    cfg = get_config("llama32-1b").reduced()
+    params0 = build_model(cfg).init(jax.random.PRNGKey(0))
+    q_packed = restructure(params0, QuantPolicy(bits=4, packed=True))
+    q_planes = restructure(params0, QuantPolicy(bits=4, packed=False))
+    b_packed = q_packed.size_bytes()["quantized"]
+    b_planes = q_planes.size_bytes()["quantized"]
+    rows.append(("engine/packed_vs_3plane_bytes_ratio", b_planes / b_packed,
+                 "quantized weight bytes/token: must be ~2x (6 vs 12 bit)"))
+
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "problem": {"m": m, "k": k, "n": n, "bits": 4},
+        "kernel_wall_us": {"3pass": t3 * 1e6, "fused": tf * 1e6,
+                           "packed": tp * 1e6},
+        "weight_bytes_per_layer": {
+            "3plane": bytes_3plane, "packed": bytes_packed,
+            "packed_vs_3plane_ratio": bytes_3plane / bytes_packed,
+        },
+        "serve": serve,
+        "weight_bytes_per_token_quantized": {
+            "packed": b_packed, "3plane": b_planes,
+            "packed_vs_3plane_ratio": b_planes / b_packed,
+        },
+        "note": "CPU interpret-mode wall times are not TPU-representative; "
+                "bytes/token accounting is.",
+    }
+    # append to the persistent perf trajectory (one entry per run)
+    runs = []
+    if BENCH_PATH.exists():
+        try:
+            prev = json.loads(BENCH_PATH.read_text())
+            runs = prev.get("runs", [prev] if "serve" in prev else [])
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    BENCH_PATH.write_text(json.dumps({"schema": 2, "runs": runs}, indent=2))
+    rows.append(("engine/bench_json_written", float(len(runs)),
+                 f"{BENCH_PATH.name} ({len(runs)} run(s) recorded)"))
     return rows
 
 

@@ -113,6 +113,99 @@ class PackedSplitQTensor:
         return (q - z) / s
 
 
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["codes", "cids", "scales", "zeros"],
+    meta_fields=["bits", "kclusters", "widths", "align"],
+)
+@dataclasses.dataclass(frozen=True)
+class PackedSplitQGroup:
+    """Several packed tensors sharing one K dim, concatenated along N.
+
+    The serving engine fuses sibling projections (QKV; gate+up) into ONE
+    kernel launch: members are quantized *independently* (bit-identical to
+    their standalone PackedSplitQTensor form) and their packed codes/cids are
+    concatenated along N, each member padded to a multiple of ``align`` so
+    every (bn ≤ align) output block maps to exactly one member. The kernel
+    selects the member's k-entry (1/S, Z) LUT rows by block index, keeping
+    cluster ids at 2 bits — the 6-bit/weight footprint survives grouping.
+    """
+
+    codes: jax.Array   # (..., K, Np_tot//per) int8 carriers
+    cids: jax.Array    # (..., K, Np_tot//4) packed 2-bit ids
+    scales: jax.Array  # (..., G*k) fp32, member-major
+    zeros: jax.Array   # (..., G*k) fp32
+    bits: int
+    kclusters: int
+    widths: tuple[int, ...]   # logical N of each member
+    align: int                # member padding granularity along N
+
+    @property
+    def groups(self) -> int:
+        return len(self.widths)
+
+    def padded_widths(self) -> tuple[int, ...]:
+        return tuple(-(-w // self.align) * self.align for w in self.widths)
+
+    def dequantize(self) -> list[jax.Array]:
+        """Per-member effective weights (the padding columns are dropped)."""
+        n_tot = sum(self.padded_widths())
+        q = unpack_codes(self.codes, self.bits, out_len=n_tot)
+        q = q.reshape(self.codes.shape[:-1] + (n_tot,)).astype(jnp.float32)
+        cid = unpack_codes(self.cids, 2, out_len=n_tot)
+        cid = cid.reshape(q.shape).astype(jnp.int32) & 0x3
+        out, off = [], 0
+        for g, (w, pw) in enumerate(zip(self.widths, self.padded_widths())):
+            qs = q[..., off:off + w]
+            cs = cid[..., off:off + w]
+            s = self.scales[..., g * self.kclusters:(g + 1) * self.kclusters]
+            z = self.zeros[..., g * self.kclusters:(g + 1) * self.kclusters]
+            sg = jnp.take_along_axis(
+                jnp.broadcast_to(s[..., None, :], cs.shape[:-1] + s.shape[-1:]),
+                cs, axis=-1,
+            ) if s.ndim > 1 else s[cs]
+            zg = jnp.take_along_axis(
+                jnp.broadcast_to(z[..., None, :], cs.shape[:-1] + z.shape[-1:]),
+                cs, axis=-1,
+            ) if z.ndim > 1 else z[cs]
+            out.append((qs - zg) / sg)
+            off += pw
+        return out
+
+
+def group_packed(
+    members: list[PackedSplitQTensor], align: int | None = None
+) -> PackedSplitQGroup:
+    """Concatenate independently-quantized packed tensors along N.
+
+    Bit-exact: member codes/scales are reused untouched; only zero bytes are
+    appended so each member's span is a multiple of ``align`` (the padded
+    output columns are garbage and sliced off by the kernel wrapper).
+    """
+    bits = members[0].bits
+    per = 8 // bits
+    k = members[0].scales.shape[-1]
+    assert all(m.bits == bits and m.scales.shape[-1] == k for m in members)
+    widths = tuple(m.shape[-1] for m in members)
+    if align is None:
+        align = 512 if all(w % 512 == 0 for w in widths) else 128
+    codes, cids = [], []
+    for m, w in zip(members, widths):
+        pw = -(-w // align) * align
+        pad_codes = (pw - m.codes.shape[-1] * per) // per
+        pad_cids = pw // 4 - m.cids.shape[-1]
+        lead = [(0, 0)] * (m.codes.ndim - 1)
+        codes.append(jnp.pad(m.codes, lead + [(0, pad_codes)]))
+        cids.append(jnp.pad(m.cids, lead + [(0, pad_cids)]))
+    return PackedSplitQGroup(
+        codes=jnp.concatenate(codes, axis=-1),
+        cids=jnp.concatenate(cids, axis=-1),
+        scales=jnp.concatenate([m.scales for m in members], axis=-1),
+        zeros=jnp.concatenate([m.zeros for m in members], axis=-1),
+        bits=bits, kclusters=k, widths=widths, align=align,
+    )
+
+
 def split_masks(w: jax.Array, k: int = 3, bins: int = kmeans.DEFAULT_BINS,
                 iters: int = kmeans.DEFAULT_ITERS) -> tuple[jax.Array, SplitInfo]:
     """Cluster ids (int32, shape of w) + clustering metadata."""

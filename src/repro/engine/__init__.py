@@ -1,0 +1,52 @@
+"""Quantized execution engine: packed-kernel serving of SplitQuantV2 models.
+
+The seed stored quantized weights but served fake-quant (dense fp32). This
+package makes quantized weights *executable*:
+
+* :mod:`repro.engine.executable` — ``QuantizedModel.as_executable()`` trees
+  whose hot-path leaves are packed containers, plus fused QKV / gate+up
+  projection grouping.
+* :mod:`repro.engine.qmm` — ``qdot`` routing (dense vs packed kernels) used
+  by the model forwards.
+* :mod:`repro.engine.autotune` — block-shape dispatch: MXU-aligned
+  heuristics keyed on (M, K, N, bits) plus an optional measured JSON cache.
+"""
+from repro.engine import autotune
+from repro.engine.autotune import (
+    choose_block,
+    get_cache,
+    heuristic_block,
+    TuneCache,
+)
+from repro.engine.executable import (
+    build_executable,
+    decode_weight_bytes,
+    supports_kernel_path,
+    weight_bytes,
+)
+from repro.engine.qmm import (
+    gate_up_proj,
+    kv_proj,
+    q_proj,
+    qdot,
+    qdot_group,
+    qkv_proj,
+)
+
+__all__ = [
+    "autotune",  # the submodule (measured autotuning lives there)
+    "build_executable",
+    "decode_weight_bytes",
+    "choose_block",
+    "gate_up_proj",
+    "get_cache",
+    "heuristic_block",
+    "kv_proj",
+    "q_proj",
+    "qdot",
+    "qdot_group",
+    "qkv_proj",
+    "supports_kernel_path",
+    "TuneCache",
+    "weight_bytes",
+]

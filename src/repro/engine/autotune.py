@@ -1,0 +1,217 @@
+"""Block-shape dispatch for the quantized matmul kernels.
+
+Two layers, cheapest first:
+
+1. **Heuristic defaults** keyed on (M, K, N, bits): MXU-aligned block
+   shapes chosen per problem shape (decode M is tiny -> small bm; big K ->
+   big bk to amortize grid overhead; bn capped by a VMEM budget for the
+   fp32 accumulator + unpacked weight tile).
+2. **Measured cache**: an optional JSON file (``SPLITQ_TUNE_CACHE`` env var
+   or an explicit path) mapping ``"MxKxN@bits"`` -> ``[bm, bn, bk]``.
+   ``autotune()`` times the candidate blocks for a concrete call and records
+   the winner, so serving picks measured shapes on the next run — levanter-
+   style config plumbing: the cache is plain data, reviewable and shippable.
+
+All outputs satisfy the kernel contracts: bm % 8 == 0 (fp32 sublane; 16 for
+bf16 activations), bn % 128 == 0 (lane), bk % 128 == 0, and for grouped
+launches bn divides the group's N alignment so every output block belongs
+to exactly one member.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import time
+from typing import Callable, Iterable
+
+ENV_CACHE = "SPLITQ_TUNE_CACHE"
+
+# VMEM working-set budget per kernel instance (acc fp32 + x tile + unpacked
+# weight tile + double-buffered packed tiles). Conservative vs the ~16 MB
+# physical VMEM so the pipeline has headroom for double buffering.
+VMEM_BUDGET = 8 * 1024 * 1024
+
+BN_CANDIDATES = (512, 256, 128)
+BK_CANDIDATES = (512, 256, 128)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    bm: int
+    bn: int
+    bk: int
+
+    def astuple(self) -> tuple[int, int, int]:
+        return (self.bm, self.bn, self.bk)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult
+
+
+def _vmem_bytes(bm: int, bn: int, bk: int, bits: int) -> int:
+    acc = bm * bn * 4
+    x_tile = bm * bk * 4
+    w_unpacked = bk * bn * 4
+    w_packed = 2 * (bk * bn * (bits + 2) // 8)  # double-buffered stream
+    return acc + x_tile + w_unpacked + w_packed
+
+
+def heuristic_block(
+    m: int, k: int, n: int, bits: int, *, max_bn: int | None = None,
+    bf16_acts: bool = False,
+) -> tuple[int, int, int]:
+    """MXU-aligned default block shape for a (M, K) x (K, N) int-b matmul."""
+    sublane = 16 if bf16_acts else 8
+    bm = 128 if m >= 128 else _round_up(max(m, 1), sublane)
+    bn = next((c for c in BN_CANDIDATES if n >= c), 128)
+    if max_bn is not None:
+        bn = min(bn, max_bn)
+    bk = next((c for c in BK_CANDIDATES if k >= 4 * c), 128)
+    bk = min(bk, _round_up(max(k, 1), 128))
+    while _vmem_bytes(bm, bn, bk, bits) > VMEM_BUDGET and bn > 128:
+        bn //= 2
+    while _vmem_bytes(bm, bn, bk, bits) > VMEM_BUDGET and bk > 128:
+        bk //= 2
+    return (bm, bn, bk)
+
+
+def candidate_blocks(
+    m: int, k: int, n: int, bits: int, *, max_bn: int | None = None,
+    bf16_acts: bool = False,
+) -> list[tuple[int, int, int]]:
+    """Small, valid candidate set around the heuristic for measurement."""
+    base = heuristic_block(m, k, n, bits, max_bn=max_bn, bf16_acts=bf16_acts)
+    out = {base}
+    bm = base[0]
+    for bn in BN_CANDIDATES:
+        if max_bn is not None and bn > max_bn:
+            continue
+        for bk in BK_CANDIDATES:
+            if _vmem_bytes(bm, bn, bk, bits) <= VMEM_BUDGET:
+                out.add((bm, bn, bk))
+    return sorted(out)
+
+
+# ---------------------------------------------------------------------------
+# Measured cache
+# ---------------------------------------------------------------------------
+
+
+def cache_key(m: int, k: int, n: int, bits: int, bf16_acts: bool = False) -> str:
+    # activation dtype changes both the sublane constraint and the measured
+    # winner, so bf16 entries get their own namespace
+    return f"{m}x{k}x{n}@{bits}" + ("+bf16" if bf16_acts else "")
+
+
+class TuneCache:
+    """JSON-backed (M, K, N, bits) -> block mapping."""
+
+    def __init__(self, path: str | os.PathLike | None = None):
+        self.path = pathlib.Path(path) if path else None
+        self.table: dict[str, tuple[int, int, int]] = {}
+        if self.path and self.path.exists():
+            try:
+                raw = json.loads(self.path.read_text())
+                self.table = {k: tuple(v)
+                              for k, v in raw.get("blocks", raw).items()}
+            except (json.JSONDecodeError, OSError, AttributeError, TypeError):
+                # corrupt/truncated cache must not take down the hot path —
+                # heuristics cover every shape
+                self.table = {}
+
+    def get(self, m: int, k: int, n: int, bits: int, bf16_acts: bool = False):
+        return self.table.get(cache_key(m, k, n, bits, bf16_acts))
+
+    def put(self, m: int, k: int, n: int, bits: int,
+            block: tuple[int, int, int], bf16_acts: bool = False):
+        self.table[cache_key(m, k, n, bits, bf16_acts)] = tuple(block)
+
+    def save(self, path: str | os.PathLike | None = None):
+        p = pathlib.Path(path) if path else self.path
+        if p is None:
+            raise ValueError("no cache path configured")
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(
+            {"schema": 1, "blocks": {k: list(v) for k, v in
+                                     sorted(self.table.items())}},
+            indent=2,
+        ))
+
+
+_cache: TuneCache | None = None
+
+
+def get_cache() -> TuneCache:
+    global _cache
+    if _cache is None:
+        _cache = TuneCache(os.environ.get(ENV_CACHE) or None)
+    return _cache
+
+
+def reset_cache():
+    global _cache
+    _cache = None
+
+
+def choose_block(
+    m: int, k: int, n: int, bits: int, *, max_bn: int | None = None,
+    bf16_acts: bool = False,
+) -> tuple[int, int, int]:
+    """Dispatch: measured cache hit if valid for this call, else heuristic."""
+    hit = get_cache().get(m, k, n, bits, bf16_acts)
+    if hit is not None:
+        bm, bn, bk = hit
+        sublane = 16 if bf16_acts else 8
+        ok = bm % sublane == 0 and bn % 128 == 0 and bk % 128 == 0
+        if max_bn is not None:
+            ok = ok and bn <= max_bn and max_bn % bn == 0
+        if ok:
+            return (bm, bn, bk)
+    return heuristic_block(m, k, n, bits, max_bn=max_bn, bf16_acts=bf16_acts)
+
+
+def autotune(
+    run: Callable[[tuple[int, int, int]], object],
+    m: int, k: int, n: int, bits: int,
+    *, candidates: Iterable[tuple[int, int, int]] | None = None,
+    iters: int = 3, max_bn: int | None = None, bf16_acts: bool = False,
+) -> tuple[tuple[int, int, int], dict[str, float]]:
+    """Time ``run(block)`` over the candidate set; record the winner.
+
+    ``run`` must block until the result is ready (e.g. call
+    ``jax.block_until_ready`` on its output). Returns (best_block,
+    {block_str: seconds}).
+    """
+    import jax
+
+    cands = list(candidates or candidate_blocks(
+        m, k, n, bits, max_bn=max_bn, bf16_acts=bf16_acts))
+    timings: dict[str, float] = {}
+    best, best_t = None, float("inf")
+    last_err: Exception | None = None
+    for block in cands:
+        try:
+            jax.block_until_ready(run(block))  # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                out = run(block)
+            jax.block_until_ready(out)
+            dt = (time.perf_counter() - t0) / iters
+        except Exception as e:  # invalid block for this backend/shape
+            last_err = e
+            continue
+        timings["x".join(map(str, block))] = dt
+        if dt < best_t:
+            best, best_t = block, dt
+    if best is None:
+        # EVERY candidate failed: that is a kernel/shape problem, not a
+        # tuning outcome — don't record an untimed "winner" silently.
+        raise RuntimeError(
+            f"autotune: all {len(cands)} candidate blocks failed for "
+            f"{cache_key(m, k, n, bits, bf16_acts)}"
+        ) from last_err
+    get_cache().put(m, k, n, bits, best, bf16_acts)
+    return best, timings

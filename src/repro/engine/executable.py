@@ -1,0 +1,133 @@
+"""Build an *executable* params pytree from a QuantizedModel.
+
+``materialize()`` (core/apply.py) rebuilds dense fp32 weights — fake-quant
+semantics, full-bandwidth serving. ``build_executable()`` instead returns a
+params-like pytree whose hot-path matmul leaves stay in their quantized
+storage containers (PackedSplitQTensor / SplitQTensor / QTensor); the model
+forward routes those through the packed Pallas kernels via
+``repro.engine.qmm.qdot``, so decode streams 6 bits/weight instead of 32.
+
+Leaves the kernel path does not cover (MoE expert stacks, SSM mixers — the
+grouped-expert kernel is a ROADMAP follow-on) are dequantized ONCE here,
+which is bit-identical to ``materialize()`` for those leaves, keeping every
+model family runnable from one executable tree.
+
+``group=True`` additionally fuses sibling projections at restructure time:
+``attn/{wq,wk,wv}`` -> ``attn/wqkv`` and ``mlp/{w_gate,w_up}`` ->
+``mlp/w_gateup`` (packed codes concatenated along N, per-member LUTs kept —
+bit-exact, see core.split.group_packed). A decode block then costs 4
+quantized launches (qkv, wo, gate+up, w_down) instead of 7, and the qkv /
+gate+up activations are read once instead of 3x / 2x.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.core.split import PackedSplitQTensor, group_packed
+
+# dict-key context in which a leaf name is executable by the kernel path
+ATTN_KEYS = ("wq", "wk", "wv", "wo")
+MLP_KEYS = ("w_up", "w_gate", "w_down")
+
+
+def supports_kernel_path(path: str) -> bool:
+    """True if the model forward routes this leaf through qdot()."""
+    parts = path.split("/")
+    if parts[-2:] == ["lm_head", "w"]:
+        return True
+    if len(parts) < 2:
+        return False
+    parent, name = parts[-2], parts[-1]
+    if parent in ("attn", "cross_attn") and name in ATTN_KEYS:
+        return True
+    if parent in ("mlp", "shared") and name in MLP_KEYS:
+        return True
+    return False
+
+
+def _dequantize_leaf(qm, path: str):
+    qt = qm.qleaves[path]
+    if qm.stacked[path]:
+        return jax.vmap(lambda t: t.dequantize())(qt)
+    return qt.dequantize()
+
+
+def _group_dicts(node: Any, path: tuple[str, ...] = ()) -> Any:
+    """Recursively fuse wq/wk/wv -> wqkv and w_gate/w_up -> w_gateup.
+
+    Cross-attention and encoder self-attention are NOT grouped: their
+    forwards need only a subset of (q, k, v) per call (q at decode, k/v at
+    prefill/encode), and a fused launch cannot skip unused members — it
+    would *double* weight reads exactly where grouping is meant to halve
+    them. Decoder self-attention always needs all three, so it groups."""
+    if not isinstance(node, dict):
+        return node
+    node = {k: _group_dicts(v, path + (k,)) for k, v in node.items()}
+    partial_use = "enc" in path or (path and path[-1] == "cross_attn")
+    qkv = [node.get(n) for n in ("wq", "wk", "wv")]
+    if not partial_use and all(isinstance(t, PackedSplitQTensor) for t in qkv):
+        rest = {k: v for k, v in node.items() if k not in ("wq", "wk", "wv")}
+        rest["wqkv"] = group_packed(qkv)
+        node = rest
+    gu = [node.get(n) for n in ("w_gate", "w_up")]
+    if all(isinstance(t, PackedSplitQTensor) for t in gu):
+        rest = {k: v for k, v in node.items() if k not in ("w_gate", "w_up")}
+        rest["w_gateup"] = group_packed(gu)
+        node = rest
+    return node
+
+
+def build_executable(qm, *, group: bool = True) -> Any:
+    """QuantizedModel -> executable params pytree.
+
+    The result plugs into the unchanged Model API: ``model.decode_step(
+    executable, tokens, cache)`` runs the packed kernels end-to-end.
+    """
+    leaves = []
+    for p in qm.paths:
+        if p in qm.qleaves:
+            qt = qm.qleaves[p]
+            if supports_kernel_path(p) and len(qt.shape) == 2:
+                leaves.append(qt)
+            else:
+                leaves.append(_dequantize_leaf(qm, p))
+        else:
+            leaves.append(qm.passthrough[p])
+    tree = jax.tree_util.tree_unflatten(qm.treedef, leaves)
+    if group:
+        tree = _group_dicts(tree)
+    return tree
+
+
+def weight_bytes(tree: Any) -> int:
+    """Total bytes of every array in a params/executable tree."""
+    import numpy as np
+
+    tot = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        tot += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return tot
+
+
+def decode_weight_bytes(tree: Any, *, tie_embeddings: bool = True) -> int:
+    """Bytes the DECODE step streams per token on a single chip.
+
+    Excludes weights a decode step does not read in full: the encoder stack
+    and cross-attention projections (read once per request at prefill), and
+    the embedding table when untied (decode gathers one row; a TIED table is
+    read in full by the logits matmul, so it stays counted)."""
+    if not isinstance(tree, dict):
+        return weight_bytes(tree)
+    tot = 0
+    for k, v in tree.items():
+        if k in ("enc", "cross_attn"):
+            continue
+        if k == "embed" and not tie_embeddings:
+            continue
+        if isinstance(v, dict):
+            tot += decode_weight_bytes(v, tie_embeddings=tie_embeddings)
+        else:
+            tot += weight_bytes(v)
+    return tot

@@ -1,0 +1,73 @@
+"""Quantized matmul routing for model forwards.
+
+``qdot(x, w)`` is the single entry point the model code calls wherever it
+used to write ``x @ w``: dense arrays go through ``jnp.dot`` unchanged;
+quantized containers (produced by ``QuantizedModel.as_executable()``) are
+routed to the matching packed Pallas kernel with an autotuned block shape.
+The grouped helpers understand the fused-projection containers
+(``wqkv`` / ``w_gateup``) that ``as_executable(group=True)`` installs, so
+decode runs 3-launch attention (qkv, out) + 2-launch MLP instead of 7
+separate quantized matmuls per transformer block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor
+from repro.core.split import PackedSplitQGroup, PackedSplitQTensor, SplitQTensor
+from repro.kernels import ops
+
+
+def qdot(x: jax.Array, w) -> jax.Array:
+    """x @ Ŵ for a dense array or any quantized container."""
+    if isinstance(w, PackedSplitQTensor):
+        return ops.splitq_packed_matmul(x, w)
+    if isinstance(w, SplitQTensor):
+        return ops.splitq_matmul(x, w)
+    if isinstance(w, QTensor):
+        return ops.quant_matmul(x, w.packed, w.qp.scale, w.qp.zero, w.qp.bits)
+    if isinstance(w, PackedSplitQGroup):
+        raise TypeError("grouped weights need qdot_group / the *_proj helpers")
+    return x @ w
+
+
+def qdot_group(x: jax.Array, grp: PackedSplitQGroup) -> list[jax.Array]:
+    """One fused kernel launch; per-member outputs."""
+    return ops.splitq_packed_group_matmul(x, grp)
+
+
+# ---------------------------------------------------------------------------
+# Projection helpers — model code stays agnostic of grouping.
+# ---------------------------------------------------------------------------
+
+
+def qkv_proj(p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(q, k, v) 2-D projections; ONE kernel launch when grouped."""
+    if "wqkv" in p:
+        q, k, v = qdot_group(x, p["wqkv"])
+        return q, k, v
+    return qdot(x, p["wq"]), qdot(x, p["wk"]), qdot(x, p["wv"])
+
+
+def q_proj(p: dict, x: jax.Array) -> jax.Array:
+    """Query projection only (cross-attention decode)."""
+    if "wqkv" in p:
+        return qdot_group(x, p["wqkv"])[0]
+    return qdot(x, p["wq"])
+
+
+def kv_proj(p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Key/value projections only (encoder self-attn, cross-KV build)."""
+    if "wqkv" in p:
+        _, k, v = qdot_group(x, p["wqkv"])
+        return k, v
+    return qdot(x, p["wk"]), qdot(x, p["wv"])
+
+
+def gate_up_proj(p: dict, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(gate, up) for a GLU MLP; ONE kernel launch when grouped."""
+    if "w_gateup" in p:
+        gate, up = qdot_group(x, p["w_gateup"])
+        return gate, up
+    return qdot(x, p["w_gate"]), qdot(x, p["w_up"])

@@ -3,17 +3,26 @@
 Handles: padding to block multiples (zero-padding K on the activation side
 is value-preserving; N/M padding is sliced off), backend dispatch (compiled
 Pallas on TPU, ``interpret=True`` elsewhere — this container is CPU, so
-tests exercise the interpreter path), and pytree-level entry points taking
-the core's SplitQTensor / PackedSplitQTensor containers directly.
+tests exercise the interpreter path), block-shape dispatch via the engine
+autotuner when the caller passes ``block=None``, and pytree-level entry
+points taking the core's SplitQTensor / PackedSplitQTensor /
+PackedSplitQGroup containers directly.
+
+``count_launches()`` is a tracing-time hook: wrappers bump a counter when a
+quantized kernel is dispatched, so tests can assert launches-per-block of a
+traced forward (e.g. grouped QKV + gate/up decode: 4 instead of 7).
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import math
+import threading
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.split import PackedSplitQTensor, SplitQTensor
+from repro.core.split import PackedSplitQGroup, PackedSplitQTensor, SplitQTensor
 from repro.kernels import ref
 from repro.kernels.kmeans1d import kmeans_assign_reduce_pallas
 from repro.kernels.quant_matmul import quant_matmul_pallas
@@ -21,9 +30,37 @@ from repro.kernels.quantize_pack import quantize_pack_pallas
 from repro.kernels.splitq_matmul import splitq_matmul_pallas
 from repro.kernels.splitq_packed import splitq_packed_matmul_pallas
 
+DEFAULT_BLOCK = (128, 512, 128)
+
+_counter = threading.local()
+
+
+@contextlib.contextmanager
+def count_launches():
+    """Count quantized-kernel dispatches (per trace) by kind."""
+    prev = getattr(_counter, "counts", None)
+    _counter.counts = {}
+    try:
+        yield _counter.counts
+    finally:
+        _counter.counts = prev
+
+
+def _bump(kind: str):
+    c = getattr(_counter, "counts", None)
+    if c is not None:
+        c[kind] = c.get(kind, 0) + 1
+        c["total"] = c.get("total", 0) + 1
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _choose(m, k, n, bits, *, max_bn=None, bf16=False):
+    from repro.engine.autotune import choose_block
+
+    return choose_block(m, k, n, bits, max_bn=max_bn, bf16_acts=bf16)
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -40,15 +77,16 @@ def quant_matmul(
     zero: jax.Array,
     bits: int,
     *,
-    block: tuple[int, int, int] = (128, 512, 128),
+    block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
     """y = x @ dequant(W).  x: (..., K); w_packed: (K, N//per)."""
-    bm, bn, bk = block
     per = 8 // bits
     lead = x.shape[:-1]
-    m = int(jnp.prod(jnp.array(lead))) if lead else 1
+    m = math.prod(lead)
     k = x.shape[-1]
     n = w_packed.shape[1] * per
+    bm, bn, bk = block or _choose(m, k, n, bits, bf16=x.dtype == jnp.bfloat16)
+    _bump("quant_matmul")
     x2 = _pad_to(x.reshape(m, k), (bm, bk))
     wp = _pad_to(w_packed, (bk, bn // per))
     y = quant_matmul_pallas(
@@ -59,17 +97,18 @@ def quant_matmul(
 
 
 def splitq_matmul(
-    x: jax.Array, sq: SplitQTensor, *, block: tuple[int, int, int] = (128, 512, 128)
+    x: jax.Array, sq: SplitQTensor, *,
+    block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
     """Fused k-plane SplitQuantV2 matmul. x: (..., K); sq.shape == (K, N)."""
-    bm, bn, bk = block
     per = 8 // sq.bits
     lead = x.shape[:-1]
-    m = 1
-    for s in lead:
-        m *= s
+    m = math.prod(lead)
     k = x.shape[-1]
     n = sq.shape[-1]
+    bm, bn, bk = block or _choose(m, k, n, sq.bits,
+                                  bf16=x.dtype == jnp.bfloat16)
+    _bump("splitq_matmul")
     x2 = _pad_to(x.reshape(m, k), (bm, bk))
     planes = _pad_to(sq.planes, (1, bk, bn // per))
     y = splitq_matmul_pallas(
@@ -83,17 +122,17 @@ def splitq_packed_matmul(
     x: jax.Array,
     psq: PackedSplitQTensor,
     *,
-    block: tuple[int, int, int] = (128, 512, 128),
+    block: tuple[int, int, int] | None = None,
 ) -> jax.Array:
     """6-bit packed SplitQuantV2 matmul. x: (..., K)."""
-    bm, bn, bk = block
     per = 8 // psq.bits
     lead = x.shape[:-1]
-    m = 1
-    for s in lead:
-        m *= s
+    m = math.prod(lead)
     k = x.shape[-1]
     n = psq.shape[-1]
+    bm, bn, bk = block or _choose(m, k, n, psq.bits,
+                                  bf16=x.dtype == jnp.bfloat16)
+    _bump("splitq_packed_matmul")
     x2 = _pad_to(x.reshape(m, k), (bm, bk))
     codes = _pad_to(psq.codes, (bk, bn // per))
     cids = _pad_to(psq.cids, (bk, bn // 4))
@@ -102,6 +141,50 @@ def splitq_packed_matmul(
         bm=bm, bn=bn, bk=bk, interpret=_interpret(),
     )
     return y[:m, :n].reshape(*lead, n)
+
+
+def splitq_packed_group_matmul(
+    x: jax.Array,
+    grp: PackedSplitQGroup,
+    *,
+    block: tuple[int, int, int] | None = None,
+) -> list[jax.Array]:
+    """ONE kernel launch for a fused projection group (QKV / gate+up).
+
+    Returns the per-member outputs (padding columns sliced off). Activation
+    x is read once instead of once per member — at decode this halves the
+    activation HBM traffic of the attention + MLP input projections.
+    """
+    per = 8 // grp.bits
+    lead = x.shape[:-1]
+    m = math.prod(lead)
+    k = x.shape[-1]
+    padded = grp.padded_widths()
+    n_tot = sum(padded)
+    bm, bn, bk = block or _choose(
+        m, k, n_tot, grp.bits, max_bn=grp.align,
+        bf16=x.dtype == jnp.bfloat16,
+    )
+    bn = min(bn, grp.align)
+    assert grp.align % bn == 0, (grp.align, bn)
+    _bump("splitq_packed_group_matmul")
+    x2 = _pad_to(x.reshape(m, k), (bm, bk))
+    codes = _pad_to(grp.codes, (bk, n_tot // per))
+    cids = _pad_to(grp.cids, (bk, n_tot // 4))
+    starts, off = [], 0
+    for pw in padded:
+        starts.append(off // bn)
+        off += pw
+    y = splitq_packed_matmul_pallas(
+        x2, codes, cids, grp.scales, grp.zeros, grp.bits,
+        bm=bm, bn=bn, bk=bk, group_starts=tuple(starts),
+        interpret=_interpret(),
+    )
+    out, off = [], 0
+    for w, pw in zip(grp.widths, padded):
+        out.append(y[:m, off:off + w].reshape(*lead, w))
+        off += pw
+    return out
 
 
 def quantize_pack(

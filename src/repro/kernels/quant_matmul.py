@@ -85,6 +85,13 @@ def quant_matmul_pallas(
     inv_s = (1.0 / scale).reshape(1, 1).astype(jnp.float32)
     z = zero.reshape(1, 1).astype(jnp.float32)
     grid = (m // bm, n // bn, nk)
+    kwargs = {}
+    if not interpret:
+        # (M, N) parallel + K arbitrary => Mosaic double-buffers the packed
+        # weight DMA against the MXU sweep.
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
     return pl.pallas_call(
         functools.partial(_quant_matmul_kernel, bits=bits, nk=nk),
         grid=grid,
@@ -98,4 +105,5 @@ def quant_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
+        **kwargs,
     )(x, w_packed, inv_s, z)

@@ -67,6 +67,13 @@ def splitq_matmul_pallas(
     inv_s = (1.0 / scales).reshape(kclusters, 1).astype(jnp.float32)
     z = zeros.reshape(kclusters, 1).astype(jnp.float32)
     grid = (m // bm, n // bn, nk)
+    kwargs = {}
+    if not interpret:
+        # (M, N) parallel + K arbitrary => Mosaic double-buffers the packed
+        # plane DMA against the MXU sweep (decode is weight-BW-bound).
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
     return pl.pallas_call(
         functools.partial(_splitq_kernel, bits=bits, nk=nk, k=kclusters),
         grid=grid,
@@ -82,4 +89,5 @@ def splitq_matmul_pallas(
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
+        **kwargs,
     )(x, planes, inv_s, z)

@@ -9,6 +9,18 @@ directly converts the paper's §5 limitation into a ~2× bandwidth win.
 In-kernel dequant: the 3-way LUT gather is realized as a chain of
 vectorized selects (TPU has no VMEM gather; k is static and tiny, so
 2 selects per element on the VPU beat any gather emulation).
+
+Grouped projections: the same kernel serves a fused QKV (or gate+up)
+launch. Members are concatenated along N with each member's span padded to
+a multiple of the block width, so an output block j belongs to exactly one
+member; ``group_starts`` (static, in units of bn) tells the kernel which
+member's k LUT rows to use. Cluster ids stay 2 bits — grouping costs zero
+extra weight bandwidth.
+
+Pipelining: grid dims (M, N) are declared ``parallel`` and the K sweep
+``arbitrary`` so Mosaic double-buffers the packed weight DMA against the
+MXU work (weight HBM streaming is the decode bottleneck this kernel
+exists to hide).
 """
 from __future__ import annotations
 
@@ -30,9 +42,27 @@ def _lut_select(cid: jax.Array, lut_ref, k: int) -> jax.Array:
     return out
 
 
+def _lut_select_grouped(cid, g, lut_ref, k: int, groups: int) -> jax.Array:
+    """out[i] = lut[g*k + cid[i]] with g a traced scalar member index.
+
+    The member's k LUT entries are picked with (groups-1)*k SCALAR selects
+    (register ops, once per tile); the per-element vector work stays at the
+    same k-1 selects as the ungrouped path."""
+    vals = []
+    for c in range(k):
+        v = lut_ref[c, 0]
+        for gg in range(1, groups):
+            v = jnp.where(g == gg, lut_ref[gg * k + c, 0], v)
+        vals.append(v)
+    out = jnp.full(cid.shape, vals[0], jnp.float32)
+    for c in range(1, k):
+        out = jnp.where(cid == c, vals[c], out)
+    return out
+
+
 def _splitq_packed_kernel(
     x_ref, codes_ref, cids_ref, s_ref, z_ref, o_ref, acc_ref,
-    *, bits: int, nk: int, k: int,
+    *, bits: int, nk: int, k: int, group_starts: tuple[int, ...],
 ):
     @pl.when(pl.program_id(2) == 0)
     def _init():
@@ -40,8 +70,16 @@ def _splitq_packed_kernel(
 
     q = _unpack_tile(codes_ref[...], bits).astype(jnp.float32)
     cid = _unpack_tile(cids_ref[...], 2) & 0x3  # int32, 2-bit ids unsigned
-    inv_s = _lut_select(cid, s_ref, k)
-    z = _lut_select(cid, z_ref, k)
+    if len(group_starts) <= 1:
+        inv_s = _lut_select(cid, s_ref, k)
+        z = _lut_select(cid, z_ref, k)
+    else:
+        j = pl.program_id(1)
+        g = jnp.int32(0)
+        for b in group_starts[1:]:
+            g = g + (j >= b).astype(jnp.int32)
+        inv_s = _lut_select_grouped(cid, g, s_ref, k, len(group_starts))
+        z = _lut_select_grouped(cid, g, z_ref, k, len(group_starts))
     w = (q - z) * inv_s
     acc_ref[...] += jax.lax.dot(
         x_ref[...].astype(jnp.float32), w, preferred_element_type=jnp.float32
@@ -53,42 +91,54 @@ def _splitq_packed_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("bits", "bm", "bn", "bk", "interpret")
+    jax.jit,
+    static_argnames=("bits", "bm", "bn", "bk", "group_starts", "interpret"),
 )
 def splitq_packed_matmul_pallas(
     x: jax.Array,      # (M, K)
     codes: jax.Array,  # (K, N//per) int8 carriers
     cids: jax.Array,   # (K, N//4) packed 2-bit ids
-    scales: jax.Array, # (k,)
-    zeros: jax.Array,  # (k,)
+    scales: jax.Array, # (G*k,)  member-major LUT (G==1 for a single tensor)
+    zeros: jax.Array,  # (G*k,)
     bits: int,
     bm: int = 128,
     bn: int = 512,
     bk: int = 128,
+    group_starts: tuple[int, ...] = (),
     interpret: bool = False,
 ) -> jax.Array:
     per = 8 // bits
-    k = scales.shape[0]
+    groups = max(1, len(group_starts))
+    k = scales.shape[0] // groups
     m, kdim = x.shape
     n = codes.shape[1] * per
     assert m % bm == 0 and n % bn == 0 and kdim % bk == 0
     assert bn % 4 == 0
     nk = kdim // bk
-    inv_s = (1.0 / scales).reshape(k, 1).astype(jnp.float32)
-    z = zeros.reshape(k, 1).astype(jnp.float32)
+    inv_s = (1.0 / scales).reshape(groups * k, 1).astype(jnp.float32)
+    z = zeros.reshape(groups * k, 1).astype(jnp.float32)
     grid = (m // bm, n // bn, nk)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        )
     return pl.pallas_call(
-        functools.partial(_splitq_packed_kernel, bits=bits, nk=nk, k=k),
+        functools.partial(
+            _splitq_packed_kernel, bits=bits, nk=nk, k=k,
+            group_starts=group_starts,
+        ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn // per), lambda i, j, kk: (kk, j)),
             pl.BlockSpec((bk, bn // 4), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((k, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((k, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((groups * k, 1), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((groups * k, 1), lambda i, j, kk: (0, 0)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
+        **kwargs,
     )(x, codes, cids, inv_s, z)

@@ -7,6 +7,11 @@ as params), dequantized inside the ``fused_kernel`` scope right before each
 matmul — modeling kernels/splitq_packed.py (dequant in VMEM). Weight HBM
 traffic per decode step drops from bf16 (16 bit/wt) to 6 bit/wt.
 
+The quantized tree is built through the SAME engine path production serving
+uses (``restructure(...).as_executable()``, abstract via eval_shape), and
+the record now carries the engine's autotuned block dispatch + grouped
+launch accounting so the dry-run mirrors the real packed execution plan.
+
     PYTHONPATH=src python -m repro.launch.qserve_dryrun --arch internlm2-20b
 """
 import argparse
@@ -25,9 +30,9 @@ def main(argv=None):
     import jax.numpy as jnp
 
     from repro.configs import SHAPES, get_config
-    from repro.core.apply import _path_str
+    from repro.core.apply import restructure
     from repro.core.policy import QuantPolicy
-    from repro.core.split import split_quantize_packed
+    from repro.engine.autotune import choose_block
     from repro.launch.mesh import make_production_mesh
     from repro.models.attention import flash_fusion
     from repro.models.model import build_model
@@ -45,40 +50,22 @@ def main(argv=None):
     policy = QuantPolicy(bits=4, packed=True)
 
     aparams = steps.abstract_params(model)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(aparams)
-    paths = [_path_str(p) for p, _ in flat]
-    quantize_mask = [
-        policy.wants(p, l.ndim, l.size) for p, (_, l) in zip(paths, flat)
-    ]
-
-    def q_abstract(leaf):
-        # stacked layer tensors: quantize per layer slice (vmapped)
-        if leaf.ndim >= 3:
-            return jax.eval_shape(
-                jax.vmap(lambda t: split_quantize_packed(t, 4)), leaf
-            )
-        return jax.eval_shape(lambda t: split_quantize_packed(t, 4), leaf)
-
-    qleaves = [
-        q_abstract(l) if m else l
-        for m, (_, l) in zip(quantize_mask, flat)
-    ]
-    qparams_abs = jax.tree_util.tree_unflatten(treedef, qleaves)
+    # Abstract executable tree via the production engine path (ungrouped so
+    # the modeled materialization keeps the per-projection param layout).
+    qparams_abs = jax.eval_shape(
+        lambda p: restructure(p, policy).as_executable(group=False), aparams
+    )
 
     def materialize(qparams):
-        leaves = jax.tree_util.tree_flatten(
-            qparams,
-            is_leaf=lambda x: hasattr(x, "dequantize"),
-        )[0]
-        out = []
-        for m, leaf in zip(quantize_mask, leaves):
-            if m:
-                deq = (jax.vmap(lambda t: t.dequantize())(leaf)
-                       if leaf.codes.ndim >= 3 else leaf.dequantize())
-                out.append(deq.astype(jnp.bfloat16))
-            else:
-                out.append(leaf)
-        return jax.tree_util.tree_unflatten(treedef, out)
+        def deq(leaf):
+            w = (jax.vmap(lambda t: t.dequantize())(leaf)
+                 if leaf.codes.ndim >= 3 else leaf.dequantize())
+            return w.astype(jnp.bfloat16)
+
+        return jax.tree_util.tree_map(
+            lambda l: deq(l) if hasattr(l, "dequantize") else l,
+            qparams, is_leaf=lambda x: hasattr(x, "dequantize"),
+        )
 
     def serve_step(qparams, batch, cache):
         with shd.sharding_hints(mesh):
@@ -87,11 +74,6 @@ def main(argv=None):
             with _flash_scope():
                 params = materialize(qparams)
             return model.decode_step(params, batch["tokens"], cache)
-
-    # shardings: packed planes follow the original param's TP spec pattern
-    def qspec(mask, path, leaf_tree):
-        base = shd.param_spec(path, ())
-        return None
 
     abatch = model.input_specs(shape)
     acache = model.cache_specs(shape)
@@ -128,6 +110,27 @@ def main(argv=None):
     coll = roof.collectives_from_ops(lac.collective_ops, mesh.size,
                                      pod_stride=1 << 30)
     n_params = roof.count_params(aparams)
+
+    # Engine execution plan for this decode shape: grouped launches and the
+    # autotuned block dispatch for each distinct quantized matmul, computed
+    # on PER-DEVICE shapes (batch sharded over `data`, projection N over
+    # `model`) — these are the shapes the kernel actually sees, suitable
+    # for seeding SPLITQ_TUNE_CACHE.
+    n_data = mesh.shape["data"]
+    n_model = mesh.shape["model"]
+    m_dec = max(1, shape.global_batch // n_data)  # decode: 1 token/sequence
+    h, kv, hd, d, ff = (cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model,
+                        cfg.d_ff)
+    proj_shapes = {
+        "wqkv": (d, (h * hd + 2 * kv * hd) // n_model),
+        "wo": (h * hd // n_model, d),
+        "w_gateup": (d, 2 * ff // n_model),
+        "w_down": (ff // n_model, d),
+    }
+    engine_blocks = {
+        name: list(choose_block(m_dec, k_, n_, policy.bits))
+        for name, (k_, n_) in proj_shapes.items()
+    }
     rec = {
         "arch": args.arch, "shape": args.shape, "mesh": "16x16",
         "variant": "splitquantv2-int4-packed-decode",
@@ -141,6 +144,8 @@ def main(argv=None):
         "coll_by_kind": coll.by_kind,
         "weight_bytes_bf16_per_dev": n_params * 2 / 16,
         "weight_bytes_packed_per_dev": n_params * 6 / 8 / 16,
+        "engine_blocks": engine_blocks,
+        "quant_launches_per_block": {"grouped": 4, "ungrouped": 7},
     }
     mem = compiled.memory_analysis()
     rec["per_device_peak_bytes"] = int(

@@ -1,13 +1,18 @@
 """Batched serving driver with SplitQuantV2 quantized weights.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama32-1b --reduced \
-        --bits 4 --batch 4 --prompt-len 16 --gen 8
+        --bits 4 --engine packed --batch 4 --prompt-len 16 --gen 8
 
 Continuous-batching-lite: a request queue is packed into fixed batch slots;
 finished sequences are replaced by waiting requests between decode steps
-(slot swap = cache row reset — functional, jit-compatible). The paper's
-INT4 SplitQuantV2 weights drop in via core.quantize_model (fake-quant
-semantics; packed-kernel execution path exercised in benchmarks).
+(slot swap = cache row reset — functional, jit-compatible).
+
+``--engine`` selects how quantized weights execute:
+  fake    dequantized dense weights (the paper's fake-quant evaluation)
+  packed  6-bit packed storage streamed through the fused Pallas kernels
+          with grouped QKV / gate+up launches (4 quantized matmul launches
+          per block instead of 7) — the real deployment path
+  planes  paper-faithful 3-plane storage through the fused k-plane kernel
 """
 from __future__ import annotations
 
@@ -111,6 +116,11 @@ def main(argv=None):
     ap.add_argument("--bits", type=int, default=0,
                     help="0 = fp; 2/4/8 = SplitQuantV2 linear quant")
     ap.add_argument("--split", action="store_true", default=True)
+    ap.add_argument("--engine", default="packed",
+                    choices=("fake", "packed", "planes"),
+                    help="quantized execution path (see module docstring)")
+    ap.add_argument("--no-group", action="store_true",
+                    help="disable fused QKV / gate+up kernel launches")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -119,7 +129,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.configs import get_config
-    from repro.core import quantize_model
+    from repro.core import QuantPolicy, restructure
+    from repro.engine import decode_weight_bytes, weight_bytes
     from repro.models import build_model
 
     cfg = get_config(args.arch)
@@ -127,11 +138,23 @@ def main(argv=None):
         cfg = cfg.reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
+    w_bytes = decode_weight_bytes(params, tie_embeddings=cfg.tie_embeddings)
     if args.bits:
         t0 = time.time()
-        params = quantize_model(params, args.bits, split=args.split)
-        print(f"[serve] SplitQuantV2 INT{args.bits} preprocessing: "
-              f"{time.time()-t0:.1f}s")
+        qm = restructure(params, QuantPolicy(
+            bits=args.bits, split=args.split,
+            packed=args.engine == "packed",
+        ))
+        if args.engine == "fake":
+            params = qm.materialize()
+        else:
+            params = qm.as_executable(group=not args.no_group)
+        w_bytes = decode_weight_bytes(params,
+                                      tie_embeddings=cfg.tie_embeddings)
+        print(f"[serve] SplitQuantV2 INT{args.bits} preprocessing "
+              f"({args.engine} engine): {time.time()-t0:.1f}s, "
+              f"{weight_bytes(params)/1e6:.2f} MB weights, "
+              f"{w_bytes/1e6:.2f} MB read per decoded token")
 
     rng = np.random.default_rng(args.seed)
     reqs = [
@@ -142,6 +165,9 @@ def main(argv=None):
     server = BatchedServer(model, params, args.batch,
                            args.prompt_len + args.gen + 8)
     stats = server.run(reqs)
+    # decode reads every weight once per step: bytes/token on one chip
+    stats["weight_bytes_per_token"] = w_bytes
+    stats["engine"] = args.engine if args.bits else "fp"
     print(f"[serve] {stats}")
     return 0
 

@@ -12,6 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.engine.qmm import q_proj, qdot, qkv_proj
 from repro.models.layers import apply_mrope, apply_rope, rms_norm
 from repro.runtime.sharding import act_constraint
 
@@ -188,11 +189,11 @@ def attention_block(
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
-    q = (x @ p["wq"]).reshape(b, s, h, hd)
-    if cfg.qk_norm:
-        q = rms_norm(q, p["q_norm_scale"], cfg.norm_eps)
 
     if cross_kv is not None:
+        q = q_proj(p, x).reshape(b, s, h, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm_scale"], cfg.norm_eps)
         ck, cv = cross_kv
         out = attend(
             q, ck, cv,
@@ -200,12 +201,17 @@ def attention_block(
             k_pos=jnp.broadcast_to(jnp.arange(ck.shape[1])[None], (b, ck.shape[1])),
             causal=False,
         )
-        return (out.reshape(b, s, h * hd) @ p["wo"]), None
+        return qdot(out.reshape(b, s, h * hd), p["wo"]), None
 
-    k = (x @ p["wk"]).reshape(b, s, kvh, hd)
+    # fused QKV: one quantized kernel launch (x read once) when grouped
+    q2, k2, v2 = qkv_proj(p, x)
+    q = q2.reshape(b, s, h, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm_scale"], cfg.norm_eps)
+    k = k2.reshape(b, s, kvh, hd)
     if cfg.qk_norm:
         k = rms_norm(k, p["k_norm_scale"], cfg.norm_eps)
-    v = (x @ p["wv"]).reshape(b, s, kvh, hd)
+    v = v2.reshape(b, s, kvh, hd)
 
     if pos.ndim == 3:  # M-RoPE
         q = apply_mrope(q, pos, cfg.rope_theta, cfg.mrope_sections)
@@ -236,4 +242,4 @@ def attention_block(
             q, kc.astype(q.dtype), vc.astype(q.dtype), pos1, k_pos,
             causal=True, window=layer_window, chunk=layer_chunk, k_len=k_len,
         )
-    return (out.reshape(b, s, h * hd) @ p["wo"]), new_cache
+    return qdot(out.reshape(b, s, h * hd), p["wo"]), new_cache

@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.engine.qmm import gate_up_proj, qdot
+
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
     # The mean-square reduction runs in fp32 (fuses into the reduce — no
@@ -110,9 +112,12 @@ def init_mlp(rng, d_model: int, d_ff: int, glu: bool, dtype) -> dict:
 
 
 def mlp(p: dict, x: jax.Array, act: str, glu: bool) -> jax.Array:
-    up = x @ p["w_up"]
-    h = activation(x @ p["w_gate"], act) * up if glu else activation(up, act)
-    return h @ p["w_down"]
+    if glu:
+        gate, up = gate_up_proj(p, x)  # one fused launch when quantized
+        h = activation(gate, act) * up
+    else:
+        h = activation(qdot(x, p["w_up"]), act)
+    return qdot(h, p["w_down"])
 
 
 def init_sinusoid(max_len: int, d_model: int) -> jax.Array:

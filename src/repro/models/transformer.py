@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.engine.qmm import kv_proj, qdot
 from repro.models import ssm as ssm_mod
 from repro.models.attention import attention_block, init_attention
 from repro.models.layers import init_mlp, init_sinusoid, mlp, rms_norm
@@ -339,8 +340,9 @@ def encoder_forward(cfg, params, embeds: jax.Array, remat: bool = False):
     def enc_block(x, lp):
         xn = rms_norm(x, lp["norm1_scale"], cfg.norm_eps)
         kvh, hd = cfg.n_kv_heads, cfg.hd
-        k = (xn @ lp["attn"]["wk"]).reshape(b, s, kvh, hd)
-        v = (xn @ lp["attn"]["wv"]).reshape(b, s, kvh, hd)
+        k2, v2 = kv_proj(lp["attn"], xn)
+        k = k2.reshape(b, s, kvh, hd)
+        v = v2.reshape(b, s, kvh, hd)
         h, _ = attention_block(lp["attn"], cfg, xn, pos, cross_kv=(k, v))
         x = x + h
         x = x + mlp(lp["mlp"], rms_norm(x, lp["norm2_scale"], cfg.norm_eps),
@@ -363,8 +365,9 @@ def build_cross_kv(cfg, params, enc_out: jax.Array):
     kvh, hd = cfg.n_kv_heads, cfg.hd
 
     def per_layer(lp):
-        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, s, kvh, hd)
-        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, s, kvh, hd)
+        k2, v2 = kv_proj(lp["cross_attn"], enc_out)
+        k = k2.reshape(b, s, kvh, hd)
+        v = v2.reshape(b, s, kvh, hd)
         return k, v
 
     return jax.vmap(per_layer)(params["layers"])  # (L,B,S,KV,hd) x2
@@ -380,7 +383,7 @@ def logits_fn(cfg, params, hidden: jax.Array) -> jax.Array:
     if cfg.tie_embeddings:
         logits = (h @ params["embed"]["table"].T).astype(jnp.float32)
     else:
-        logits = (h @ params["lm_head"]["w"]).astype(jnp.float32)
+        logits = qdot(h, params["lm_head"]["w"]).astype(jnp.float32)
     return act_constraint(logits, "logits")
 
 

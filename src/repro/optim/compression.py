@@ -57,7 +57,10 @@ def compressed_psum_mean(
     """Mean over ``axis_name`` with int8 wire traffic (call inside
     shard_map). flat_grad: (n,) fp32, size divisible by BLOCK and by the
     axis size."""
-    n_shards = jax.lax.axis_size(axis_name)
+    try:
+        n_shards = jax.lax.axis_size(axis_name)
+    except AttributeError:  # jax <= 0.4.x: constant-folds to a python int
+        n_shards = jax.lax.psum(1, axis_name)
     q, s = _quant_block(flat_grad)
     nblk = q.shape[0]
     # reduce-scatter decomposition: all_to_all int8 chunks, local fp32 sum
@@ -103,7 +106,12 @@ def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
     too) — each shard corrects its own compression error.
     Wire traffic per hop is int8 + fp32/BLOCK scales ≈ 26.6% of fp32.
     """
-    shard_map = jax.shard_map  # top-level API since jax 0.8
+    try:
+        shard_map = jax.shard_map  # top-level API in new jax
+        smap_kw = {"check_vma": False}
+    except AttributeError:  # jax <= 0.4.x
+        from jax.experimental.shard_map import shard_map
+        smap_kw = {"check_rep": False}
 
     n_ax = mesh.shape[axis_name]
 
@@ -125,7 +133,7 @@ def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
             inner, mesh=mesh,
             in_specs=P(axis_name, None),
             out_specs=(P(None), P(axis_name, None)),
-            check_vma=False,
+            **smap_kw,
         )(big2)
         reduced = reduced[0, : n]
         mean = jnp.tile(reduced, n_ax)[: big.size]

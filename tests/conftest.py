@@ -1,0 +1,10 @@
+"""Suite-wide setup. MUST run before jax is first imported.
+
+The CI/dev container ships libtpu but has no TPU: without an explicit
+platform, jax's backend probe blocks ~8 minutes per process before falling
+back to CPU (this alone made the suite take half an hour). Tests are
+interpret-mode CPU by design; export JAX_PLATFORMS yourself to override.
+"""
+import os
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

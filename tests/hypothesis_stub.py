@@ -1,0 +1,60 @@
+"""Fallback shim for property tests when ``hypothesis`` is absent.
+
+This container is offline — hypothesis cannot be pip-installed — and a bare
+``import hypothesis`` used to error the WHOLE suite at collection. Test
+modules instead do::
+
+    try:
+        import hypothesis
+        import hypothesis.extra.numpy as hnp
+        import hypothesis.strategies as st
+    except ImportError:
+        from hypothesis_stub import hypothesis, hnp, st
+
+With the stub, strategy expressions evaluate to inert placeholders and
+``@hypothesis.given(...)`` marks the test as skipped — the deterministic
+tests in the same module keep running unconditionally.
+"""
+from __future__ import annotations
+
+import pytest
+
+SKIP_REASON = "hypothesis not installed (offline container)"
+
+
+class _Inert:
+    """Absorbs any attribute access / call / iteration; returns itself.
+
+    When called as a decorator (single function argument) it acts as the
+    identity so ``@hypothesis.settings(...)`` stacks don't swallow tests."""
+
+    def __call__(self, *a, **k):
+        if len(a) == 1 and not k and callable(a[0]) and not isinstance(a[0], type):
+            return a[0]
+        return self
+
+    def __getattr__(self, name):
+        return self
+
+    def __iter__(self):
+        return iter(())
+
+
+class _Hypothesis(_Inert):
+    """Top-level ``hypothesis`` stand-in: ``given`` skips the test."""
+
+    @staticmethod
+    def given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason=SKIP_REASON)(fn)
+
+        return deco
+
+    # ``@hypothesis.settings(...)`` / profile management are no-ops
+    settings = _Inert()
+    HealthCheck = _Inert()
+
+
+hypothesis = _Hypothesis()
+st = _Inert()
+hnp = _Inert()

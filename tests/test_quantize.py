@@ -1,7 +1,10 @@
 """Unit + property tests for basic linear quantization (paper eqs. 1-3)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:  # offline container: property tests skip, rest run
+    from hypothesis_stub import hypothesis, hnp, st
 import jax.numpy as jnp
 import numpy as np
 import pytest

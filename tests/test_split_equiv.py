@@ -1,9 +1,12 @@
 """SplitQuantV2 invariants: exact FP function preservation (paper §4.1),
 resolution improvement, storage accounting, and equivalence of the three
 execution paths (paper 3-pass vs fused vs beyond-paper packed)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:  # offline container: property tests skip, rest run
+    from hypothesis_stub import hypothesis, hnp, st
 import jax
 import jax.numpy as jnp
 import numpy as np
