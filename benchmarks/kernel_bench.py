@@ -41,7 +41,8 @@ def _time(f, *args, iters=5):
     return total / iters
 
 
-def _serve_stats(engine: str, gen: int = 4) -> dict:
+def _serve_stats(engine: str, gen: int = 4,
+                 prompt_lens: tuple[int, ...] = (8, 8)) -> dict:
     """Tiny end-to-end serve run per engine path (reduced llama, CPU)."""
     from repro.configs import get_config
     from repro.core import QuantPolicy, restructure
@@ -59,11 +60,12 @@ def _serve_stats(engine: str, gen: int = 4) -> dict:
     else:
         params = qm.as_executable(group=True)
     with ops.count_launches() as launches:
-        server = BatchedServer(model, params, batch_slots=2, max_len=24)
+        server = BatchedServer(model, params, batch_slots=2,
+                               max_len=max(prompt_lens) + gen + 8)
         reqs = [
             Request(i, np.random.default_rng(i).integers(
-                0, cfg.vocab_size, 8, dtype=np.int32), gen)
-            for i in range(2)
+                0, cfg.vocab_size, ln, dtype=np.int32), gen)
+            for i, ln in enumerate(prompt_lens)
         ]
         stats = server.run(reqs)
     stats["weight_bytes_per_token"] = decode_weight_bytes(
@@ -102,6 +104,21 @@ def run() -> list[tuple[str, float, str]]:
         rows.append((f"engine/{eng}_weight_bytes_per_token",
                      float(st["weight_bytes_per_token"]),
                      "decode reads every weight once per token"))
+
+    # slot-swap continuous batching: heterogeneous prompts, requests > slots
+    # (multi-wave), packed engine — per-slot cache lengths + bucketing
+    slotswap = _serve_stats("packed", prompt_lens=(4, 16, 23, 5))
+    serve["slotswap_packed"] = slotswap
+    rows.append(("engine/slotswap_tok_per_s", slotswap["tok_per_s"],
+                 f"{slotswap['tokens']} tokens, prompts 4/16/23/5 through "
+                 f"2 slots ({slotswap['prefill_waves']} prefill waves)"))
+    rows.append(("engine/slotswap_decode_compiles",
+                 float(slotswap["decode_compiles"]),
+                 "decode must compile exactly once across slot swaps"))
+    rows.append(("engine/slotswap_prefill_compiles",
+                 float(slotswap["prefill_compiles"]),
+                 f"pow2 buckets {slotswap['prefill_buckets']} "
+                 "bound prefill recompiles"))
 
     # quantized-storage bytes/token: packed (6 bit/wt) vs 3-plane (12 bit/wt)
     from repro.configs import get_config

@@ -1,5 +1,7 @@
 """Serve a SplitQuantV2-INT4 model with batched requests (continuous
-batching-lite): the serving-side example.
+batching): heterogeneous prompt lengths share fixed batch slots via the
+per-slot KV cache lengths, with power-of-two prompt bucketing so slot
+swaps don't recompile per prompt length.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -8,5 +10,5 @@ from repro.launch.serve import main
 if __name__ == "__main__":
     main([
         "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
-        "--batch", "4", "--prompt-len", "16", "--gen", "8",
+        "--batch", "4", "--prompt-lens", "4,16,23,9", "--gen", "8",
     ])

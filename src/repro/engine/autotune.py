@@ -106,6 +106,14 @@ def cache_key(m: int, k: int, n: int, bits: int, bf16_acts: bool = False) -> str
     return f"{m}x{k}x{n}@{bits}" + ("+bf16" if bf16_acts else "")
 
 
+def _valid_block_entry(v) -> bool:
+    """A cache entry must be a 3-int [bm, bn, bk] list."""
+    return (
+        isinstance(v, (list, tuple)) and len(v) == 3
+        and all(isinstance(x, int) and not isinstance(x, bool) for x in v)
+    )
+
+
 class TuneCache:
     """JSON-backed (M, K, N, bits) -> block mapping."""
 
@@ -115,8 +123,12 @@ class TuneCache:
         if self.path and self.path.exists():
             try:
                 raw = json.loads(self.path.read_text())
+                # validate per entry at LOAD time: a hand-edited 2-element
+                # (or non-int) entry must degrade to the heuristic here,
+                # not raise inside choose_block on the serving hot path
                 self.table = {k: tuple(v)
-                              for k, v in raw.get("blocks", raw).items()}
+                              for k, v in raw.get("blocks", raw).items()
+                              if _valid_block_entry(v)}
             except (json.JSONDecodeError, OSError, AttributeError, TypeError):
                 # corrupt/truncated cache must not take down the hot path —
                 # heuristics cover every shape
@@ -162,10 +174,13 @@ def choose_block(
 ) -> tuple[int, int, int]:
     """Dispatch: measured cache hit if valid for this call, else heuristic."""
     hit = get_cache().get(m, k, n, bits, bf16_acts)
-    if hit is not None:
+    if hit is not None and _valid_block_entry(hit):
         bm, bn, bk = hit
         sublane = 16 if bf16_acts else 8
         ok = bm % sublane == 0 and bn % 128 == 0 and bk % 128 == 0
+        # re-check the VMEM budget on every hit: an entry tuned on another
+        # machine (or hand-edited) may exceed this build's working set
+        ok = ok and _vmem_bytes(bm, bn, bk, bits) <= VMEM_BUDGET
         if max_bn is not None:
             ok = ok and bn <= max_bn and max_bn % bn == 0
         if ok:

@@ -11,6 +11,9 @@ The quantized tree is built through the SAME engine path production serving
 uses (``restructure(...).as_executable()``, abstract via eval_shape), and
 the record now carries the engine's autotuned block dispatch + grouped
 launch accounting so the dry-run mirrors the real packed execution plan.
+The lowered decode step uses the serving cache contract: per-slot
+``cache["len"]: (B,)`` with per-row KV write offsets — the same HLO shape
+continuous batching runs, so the modeled bytes/step match production.
 
     PYTHONPATH=src python -m repro.launch.qserve_dryrun --arch internlm2-20b
 """
@@ -135,6 +138,7 @@ def main(argv=None):
         "arch": args.arch, "shape": args.shape, "mesh": "16x16",
         "variant": "splitquantv2-int4-packed-decode",
         "status": "ok",
+        "cache_contract": "per-slot len (B,), per-row KV write offsets",
         "n_params": n_params,
         "t_compute_s": lac.flops / roof.PEAK_FLOPS,
         "t_memory_s": lac.bytes_min / roof.HBM_BW,

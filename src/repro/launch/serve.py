@@ -3,9 +3,14 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama32-1b --reduced \
         --bits 4 --engine packed --batch 4 --prompt-len 16 --gen 8
 
-Continuous-batching-lite: a request queue is packed into fixed batch slots;
-finished sequences are replaced by waiting requests between decode steps
-(slot swap = cache row reset — functional, jit-compatible).
+Continuous batching: a request queue is packed into fixed batch slots. The
+KV cache keeps a PER-SLOT fill length (``cache["len"]: (B,)``), so every
+slot decodes at its own position against its own keys; finished sequences
+are replaced between decode steps by a **batched in-place prefill** that
+writes the new prompts straight into the live cache (rows of ongoing
+requests are frozen via per-row ``seq_lens``). Prompts are right-padded to
+power-of-two buckets, so slot swaps compile once per bucket instead of once
+per distinct prompt length, and the decode step never recompiles at all.
 
 ``--engine`` selects how quantized weights execute:
   fake    dequantized dense weights (the paper's fake-quant evaluation)
@@ -24,6 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.model import reset_slots
+
 
 @dataclasses.dataclass
 class Request:
@@ -34,47 +41,99 @@ class Request:
     done: bool = False
 
 
-class BatchedServer:
-    """Fixed-slot continuous batching over a decode_step function."""
+def _bucket(n: int, minimum: int) -> int:
+    """Next power of two >= max(n, minimum)."""
+    b = max(minimum, 1)
+    while b < n:
+        b *= 2
+    return b
 
-    def __init__(self, model, params, batch_slots: int, max_len: int):
+
+class BatchedServer:
+    """Fixed-slot continuous batching over a decode_step function.
+
+    Slot-swap contract: every wave of newly admitted requests is prefilled
+    in ONE batched call into the live cache — recycled slots are reset
+    (``reset_slots``), ongoing slots are frozen (``lengths == 0``), and the
+    per-slot cache length makes the subsequent decode steps position each
+    request correctly regardless of its neighbours."""
+
+    def __init__(self, model, params, batch_slots: int, max_len: int,
+                 bucket_min: int = 8):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
+        self.bucket_min = bucket_min
         self.cache = model.init_cache(batch_slots, max_len)
         self.active: list[Request | None] = [None] * batch_slots
+        self.buckets_used: list[int] = []
         self._decode = jax.jit(model.decode_step)
 
-    def _prefill_slot(self, slot: int, req: Request):
-        # single-slot prefill, then merge the slot's cache rows in
-        cache1 = self.model.init_cache(1, self.max_len)
-        logits, cache1 = self.model.prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt[None])}, cache1
+        def _prefill_fn(params, tokens, lengths, cache):
+            cache = reset_slots(cache, lengths > 0)
+            return model.prefill(
+                params, {"tokens": tokens, "lengths": lengths}, cache
+            )
+
+        self._prefill = jax.jit(_prefill_fn)
+
+    # -- slot management ----------------------------------------------------
+
+    def _fill_slots(self, pending: list[Request]):
+        """Admit waiting requests into free slots; one batched prefill."""
+        free = [i for i in range(self.slots) if self.active[i] is None]
+        n = min(len(free), len(pending))
+        if not n:
+            return
+        # validate BEFORE mutating active/pending: a rejected request must
+        # not strand its wave-mates admitted-but-never-prefilled
+        for r in pending[:n]:
+            if len(r.prompt) == 0:
+                # lengths==0 means "frozen slot": an empty prompt would
+                # skip the slot reset and decode the previous occupant
+                raise ValueError(f"request {r.rid}: empty prompt")
+            # prefill writes len(prompt) KV rows, decode max_new-1 more;
+            # dynamic_update_slice CLAMPS out-of-range writes, which would
+            # silently overwrite live entries instead of failing
+            need = len(r.prompt) + r.max_new - 1
+            if need > self.max_len:
+                raise ValueError(
+                    f"request {r.rid}: prompt {len(r.prompt)} + gen "
+                    f"{r.max_new} needs {need} cache rows > "
+                    f"max_len={self.max_len}"
+                )
+        newly = [(i, pending.pop(0)) for i in free[:n]]
+        for i, req in newly:
+            self.active[i] = req
+        lmax = max(len(r.prompt) for _, r in newly)
+        lb = min(_bucket(lmax, self.bucket_min), self.max_len)
+        self.buckets_used.append(lb)
+        tokens = np.zeros((self.slots, lb), np.int32)
+        lengths = np.zeros((self.slots,), np.int32)
+        for i, req in newly:
+            tokens[i, : len(req.prompt)] = req.prompt
+            lengths[i] = len(req.prompt)
+        logits, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths), self.cache
         )
-        def merge(full, one):
-            if one.ndim == 0 or full.shape == one.shape:
-                return full
-            # batch dim differs; find it (first dim where sizes differ)
-            for ax in range(one.ndim):
-                if one.shape[ax] == 1 and full.shape[ax] == self.slots:
-                    return jax.lax.dynamic_update_slice_in_dim(
-                        full, one.astype(full.dtype), slot, axis=ax
-                    )
-            return full
-        self.cache = jax.tree.map(merge, self.cache, cache1)
-        tok = int(jnp.argmax(logits[0, -1]))
-        req.out.append(tok)
-        self.active[slot] = req
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        for i, req in newly:
+            req.out.append(int(nxt[i]))
+            req.done = len(req.out) >= req.max_new
 
     def step(self):
-        """One decode step for all active slots."""
+        """One decode step for all active slots; finished/empty slots are
+        masked out (no cache write, no length advance)."""
         tokens = np.zeros((self.slots, 1), np.int32)
+        active = np.zeros((self.slots,), bool)
         for i, r in enumerate(self.active):
-            if r is not None and r.out:
+            if r is not None and not r.done and r.out:
                 tokens[i, 0] = r.out[-1]
+                active[i] = True
         logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache
+            self.params, jnp.asarray(tokens), self.cache,
+            active=jnp.asarray(active),
         )
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
         for i, r in enumerate(self.active):
@@ -89,33 +148,44 @@ class BatchedServer:
         done: list[Request] = []
         steps = 0
         t0 = time.time()
-        while pending or any(r is not None and not r.done for r in self.active):
-            # fill free slots
-            for i in range(self.slots):
-                r = self.active[i]
-                if (r is None or r.done) and pending:
-                    if r is not None and r.done:
-                        done.append(r)
-                    self._prefill_slot(i, pending.pop(0))
-            self.step()
-            steps += 1
+        while True:
+            # retire finished slots — including requests whose single
+            # token came straight from the previous prefill wave
             for i, r in enumerate(self.active):
-                if r is not None and r.done and not pending:
+                if r is not None and r.done:
                     done.append(r)
                     self.active[i] = None
+            if pending and any(s is None for s in self.active):
+                self._fill_slots(pending)
+                continue  # retire prefill-finished requests, refill more
+            if not any(r is not None for r in self.active):
+                break
+            self.step()
+            steps += 1
         dt = time.time() - t0
         toks = sum(len(r.out) for r in done)
-        return {"requests": len(done), "tokens": toks, "seconds": dt,
-                "tok_per_s": toks / max(dt, 1e-9), "decode_steps": steps}
+        return {
+            "requests": len(done), "tokens": toks, "seconds": dt,
+            "tok_per_s": toks / max(dt, 1e-9), "decode_steps": steps,
+            "prefill_waves": len(self.buckets_used),
+            "prefill_buckets": sorted(set(self.buckets_used)),
+            "prefill_compiles": self._prefill._cache_size(),
+            "decode_compiles": self._decode._cache_size(),
+        }
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama32-1b")
-    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--reduced", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="use the reduced config (--no-reduced for full)")
     ap.add_argument("--bits", type=int, default=0,
                     help="0 = fp; 2/4/8 = SplitQuantV2 linear quant")
-    ap.add_argument("--split", action="store_true", default=True)
+    ap.add_argument("--split", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="outlier-splitting quantization (--no-split "
+                         "for the plain linear baseline)")
     ap.add_argument("--engine", default="packed",
                     choices=("fake", "packed", "planes"),
                     help="quantized execution path (see module docstring)")
@@ -124,9 +194,17 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--prompt-lens", default=None,
+                    help="comma-separated heterogeneous prompt lengths "
+                         "cycled over requests (overrides --prompt-len), "
+                         "e.g. 4,16,23")
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
 
     from repro.configs import get_config
     from repro.core import QuantPolicy, restructure
@@ -156,14 +234,18 @@ def main(argv=None):
               f"{weight_bytes(params)/1e6:.2f} MB weights, "
               f"{w_bytes/1e6:.2f} MB read per decoded token")
 
+    if args.prompt_lens:
+        plens = [int(x) for x in args.prompt_lens.split(",")]
+    else:
+        plens = [args.prompt_len]
     rng = np.random.default_rng(args.seed)
     reqs = [
-        Request(i, rng.integers(0, cfg.vocab_size, args.prompt_len,
+        Request(i, rng.integers(0, cfg.vocab_size, plens[i % len(plens)],
                                 dtype=np.int32), args.gen)
         for i in range(args.requests)
     ]
     server = BatchedServer(model, params, args.batch,
-                           args.prompt_len + args.gen + 8)
+                           max(plens) + args.gen + 8)
     stats = server.run(reqs)
     # decode reads every weight once per step: bytes/token on one chip
     stats["weight_bytes_per_token"] = w_bytes

@@ -1,2 +1,2 @@
 """Architecture zoo: layers, attention, MoE, SSM, assembly, public Model API."""
-from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.model import Model, build_model, reset_slots  # noqa: F401

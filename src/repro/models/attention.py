@@ -179,13 +179,20 @@ def attention_block(
     layer_window: jax.Array | int = 0,
     layer_chunk: jax.Array | int = 0,
     kv_cache: jax.Array | None = None,   # (2, B, Smax, KV, hd)
-    cache_len: jax.Array | None = None,  # () current fill
+    cache_len: jax.Array | None = None,  # (B,) per-row fill (scalar ok)
+    seq_lens: jax.Array | None = None,   # (B,) valid new tokens per row
     cross_kv: tuple[jax.Array, jax.Array] | None = None,
 ) -> tuple[jax.Array, jax.Array | None]:
     """Returns (output (B,S,D), updated kv_cache or None).
 
     Self-attention when ``cross_kv`` is None; cross-attention (no cache
     update, no RoPE on k) otherwise.
+
+    Cache writes land at each row's own ``cache_len`` offset; when
+    ``seq_lens`` is given, rows with ``seq_lens == 0`` are left untouched
+    (no KV write, frozen valid length) and rows with ``seq_lens < S`` only
+    expose their true prefix to attention — right-padded batched prefill
+    and inactive-slot decode both reduce to this one contract.
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -228,16 +235,45 @@ def attention_block(
         new_cache = None
     else:
         smax = kv_cache.shape[2]
-        start = cache_len
-        kc = jax.lax.dynamic_update_slice(
-            kv_cache[0], k.astype(kv_cache.dtype), (0, start, 0, 0)
-        )
-        vc = jax.lax.dynamic_update_slice(
-            kv_cache[1], v.astype(kv_cache.dtype), (0, start, 0, 0)
-        )
+        starts = jnp.broadcast_to(
+            jnp.atleast_1d(cache_len), (b,)
+        ).astype(jnp.int32)
+
+        if seq_lens is None:
+
+            def _write(row, new, s0):  # per-row offset into the cache
+                return jax.lax.dynamic_update_slice(row, new, (s0, 0, 0))
+
+            kc = jax.vmap(_write)(kv_cache[0], k.astype(kv_cache.dtype),
+                                  starts)
+            vc = jax.vmap(_write)(kv_cache[1], v.astype(kv_cache.dtype),
+                                  starts)
+            k_len = starts + s
+        else:
+            # frozen rows (seq_lens == 0) must keep their cache bytes: a
+            # whole-buffer select would traverse O(B*Smax) every decode
+            # step, so instead gather the s rows at each offset, select on
+            # that tile, and write back — O(B*s) on the decode hot path
+            keep = seq_lens > 0
+
+            def _masked_write(row, new, s0, live):
+                old = jax.lax.dynamic_slice(row, (s0, 0, 0), new.shape)
+                return jax.lax.dynamic_update_slice(
+                    row, jnp.where(live, new, old), (s0, 0, 0)
+                )
+
+            kc = jax.vmap(_masked_write)(
+                kv_cache[0], k.astype(kv_cache.dtype), starts, keep
+            )
+            vc = jax.vmap(_masked_write)(
+                kv_cache[1], v.astype(kv_cache.dtype), starts, keep
+            )
+            k_len = starts + seq_lens.astype(jnp.int32)
+        # a fully-masked row (empty slot) would softmax over -inf -> NaN;
+        # one zero-key is harmless and the row's output is discarded anyway
+        k_len = jnp.maximum(k_len, 1)
         new_cache = jnp.stack([kc, vc])
         k_pos = jnp.broadcast_to(jnp.arange(smax)[None], (b, smax))
-        k_len = jnp.broadcast_to(cache_len + s, (b,))
         out = attend(
             q, kc.astype(q.dtype), vc.astype(q.dtype), pos1, k_pos,
             causal=True, window=layer_window, chunk=layer_chunk, k_len=k_len,

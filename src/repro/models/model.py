@@ -31,6 +31,29 @@ def _dtype(cfg):
     return jnp.dtype(cfg.dtype)
 
 
+# Cache leaves carrying recurrent state, all laid out (L, B, ...): unlike
+# positional KV (which per-slot ``len`` masks for free), stale recurrent
+# state would leak a recycled slot's previous request into the new one.
+_RECURRENT_KEYS = ("ssm", "conv", "wkv", "shift_t", "shift_c")
+
+
+def reset_slots(cache: dict, refill: jax.Array) -> dict:
+    """Reset the batch rows selected by ``refill`` (B,) bool for reuse.
+
+    Zeroes per-row ``len`` and recurrent-state rows. Positional KV rows are
+    deliberately NOT zeroed: writes restart at position 0 and attention
+    masks keys at ``>= len``, so stale entries are unreachable — skipping
+    the rewrite keeps slot recycling O(state), not O(cache)."""
+    out = dict(cache)
+    out["len"] = jnp.where(refill, 0, cache["len"]).astype(jnp.int32)
+    for key in _RECURRENT_KEYS:
+        if key in cache:
+            leaf = cache[key]
+            sel = refill.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+            out[key] = jnp.where(sel, jnp.zeros((), leaf.dtype), leaf)
+    return out
+
+
 def _lm_positions(b, s, offset=0):
     return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)) + offset
 
@@ -120,9 +143,13 @@ def build_model(cfg: ArchConfig) -> Model:
         return loss, {"loss": loss, "aux": aux, "tokens": tokens}
 
     # -- caches ---------------------------------------------------------------
+    # Cache contract: ``len`` is PER-SLOT, shape (B,). Every batch row is an
+    # independent request slot with its own fill position — decode RoPE
+    # positions, KV write offsets and attention key masks all come from its
+    # row, which is what makes slot-swap continuous batching correct.
     def init_cache(batch_size: int, max_len: int):
         L, d = cfg.n_layers, cfg.d_model
-        cache: dict = {"len": jnp.zeros((), jnp.int32)}
+        cache: dict = {"len": jnp.zeros((batch_size,), jnp.int32)}
         if cfg.family == "ssm":
             h, n = ssm_mod.rwkv6_dims(cfg)
             p = n
@@ -152,7 +179,15 @@ def build_model(cfg: ArchConfig) -> Model:
 
     # -- serving -------------------------------------------------------------
     def prefill(params, batch, cache):
-        """Process the full prompt; returns (last-position logits, cache)."""
+        """Process the full prompt; returns (last-position logits, cache).
+
+        ``batch["lengths"]`` (B,), when present, enables batched in-place
+        prefill of right-padded heterogeneous prompts: each row writes only
+        its true prefix into the cache (rows with length 0 are untouched —
+        they keep serving their live request), ``cache["len"]`` advances
+        per row, and the returned logits are taken at each row's own last
+        real token."""
+        lengths = batch.get("lengths")
         if cfg.encdec:
             enc_out = tfm.encoder_forward(
                 cfg, params, batch["enc_embeds"].astype(dt)
@@ -162,26 +197,40 @@ def build_model(cfg: ArchConfig) -> Model:
             b, s = batch["tokens"].shape
             pos = _lm_positions(b, s)
             hidden, cache, _ = tfm.decoder_forward(
-                cfg, params, x, pos, cache=cache, cross_kv=cross
+                cfg, params, x, pos, cache=cache, cross_kv=cross,
+                seq_lens=lengths,
             )
             cache = dict(cache)
             cache["cross_k"], cache["cross_v"] = cross
         else:
             x, pos = embed_batch(params, batch)
-            hidden, cache, _ = tfm.decoder_forward(cfg, params, x, pos, cache=cache)
-        logits = tfm.logits_fn(cfg, params, hidden[:, -1:])
+            hidden, cache, _ = tfm.decoder_forward(
+                cfg, params, x, pos, cache=cache, seq_lens=lengths
+            )
+        if lengths is None:
+            hidden = hidden[:, -1:]
+        else:
+            idx = jnp.clip(lengths.astype(jnp.int32) - 1, 0,
+                           hidden.shape[1] - 1)
+            hidden = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)
+        logits = tfm.logits_fn(cfg, params, hidden)
         return logits, cache
 
-    def decode_step(params, tokens, cache, pos3=None):
-        """One new token per sequence. tokens: (B, 1)."""
+    def decode_step(params, tokens, cache, pos3=None, active=None):
+        """One new token per sequence. tokens: (B, 1).
+
+        ``active`` (B,) bool masks request slots: inactive rows get no KV
+        or recurrent-state write and their ``len`` does not advance —
+        finished/empty slots ride along in the fixed-shape batch without
+        corrupting the cache."""
         x = tfm.embed_tokens(cfg, params, tokens)
         b = tokens.shape[0]
         if cfg.family == "vlm":
             pos = pos3 if pos3 is not None else jnp.broadcast_to(
-                cache["len"].astype(jnp.int32)[None, None, None], (b, 1, 3)
+                cache["len"].astype(jnp.int32)[:, None, None], (b, 1, 3)
             )
         else:
-            pos = jnp.broadcast_to(cache["len"][None, None], (b, 1)).astype(
+            pos = jnp.broadcast_to(cache["len"][:, None], (b, 1)).astype(
                 jnp.int32
             )
         cross = None
@@ -191,8 +240,10 @@ def build_model(cfg: ArchConfig) -> Model:
                          if k not in ("cross_k", "cross_v")}
         else:
             dec_cache = cache
+        seq_lens = None if active is None else active.astype(jnp.int32)
         hidden, new_cache, _ = tfm.decoder_forward(
-            cfg, params, x, pos, cache=dec_cache, cross_kv=cross
+            cfg, params, x, pos, cache=dec_cache, cross_kv=cross,
+            seq_lens=seq_lens,
         )
         if cfg.encdec:
             new_cache = dict(new_cache)

@@ -50,10 +50,14 @@ def init_mamba2(rng, cfg, dtype) -> dict:
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 state: jax.Array | None = None):
+                 state: jax.Array | None = None,
+                 seq_lens: jax.Array | None = None):
     """Depthwise causal conv along S. x: (B, S, C); w: (K, C).
 
-    Returns (y, new_state) where state is the trailing K-1 inputs."""
+    Returns (y, new_state) where state is the trailing K-1 inputs. With
+    per-row ``seq_lens`` the carried window ends at each row's own last
+    valid token (``seq_lens == 0`` passes the old state through), so
+    right-padded batched prefill leaves the decode state exact."""
     kk = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], kk - 1, x.shape[2]), x.dtype)
@@ -61,7 +65,15 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
     y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(kk)) + b
-    new_state = xp[:, -(kk - 1):, :]
+    if seq_lens is None:
+        new_state = xp[:, -(kk - 1):, :]
+    else:
+        # x[j] lives at xp[K-1 + j]: the window ending at x[len-1] starts
+        # at xp[len]; len == 0 selects xp[0:K-1] == the incoming state
+        new_state = jax.vmap(
+            lambda row, l: jax.lax.dynamic_slice(
+                row, (l, 0), (kk - 1, row.shape[1]))
+        )(xp, seq_lens.astype(jnp.int32))
     return y, new_state
 
 
@@ -150,7 +162,7 @@ def _ssd_chunked(u, dA, Bm, Cm, chunk, init_state=None):
     return y.reshape(b, s, h, p)[:, :s_orig], final_state
 
 
-def _mamba2_pre(p, cfg, x, conv_state=None):
+def _mamba2_pre(p, cfg, x, conv_state=None, seq_lens=None):
     """in_proj + conv + splits shared by train and decode paths."""
     s = cfg.ssm
     di, nh, conv_dim = mamba2_dims(cfg)
@@ -158,7 +170,8 @@ def _mamba2_pre(p, cfg, x, conv_state=None):
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di : di + conv_dim]
     dt = zxbcdt[..., di + conv_dim :]  # (B,S,H)
-    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state)
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"], p["conv_b"], conv_state,
+                                 seq_lens)
     xbc = jax.nn.silu(xbc)
     xs = xbc[..., :di]
     bm = xbc[..., di : di + s.n_groups * s.d_state]
@@ -173,13 +186,23 @@ def _mamba2_pre(p, cfg, x, conv_state=None):
     return z, u, dt, da, bm, cm, new_conv
 
 
-def mamba2_block(p, cfg, x, cache=None):
+def mamba2_block(p, cfg, x, cache=None, seq_lens=None):
     """x: (B,S,D). cache: None (train/prefill from scratch) or dict with
-    "ssm" (B,H,N,P) and "conv" (B,K-1,conv_dim). Returns (y, new_cache)."""
+    "ssm" (B,H,N,P) and "conv" (B,K-1,conv_dim). Returns (y, new_cache).
+
+    ``seq_lens`` (B,) marks each row's valid prefix: pad positions get
+    decay-neutral inputs (dA=0, u=0) so the carried SSD state is exactly
+    the state after the row's last real token."""
     s = cfg.ssm
     di, nh, _ = mamba2_dims(cfg)
     conv_state = cache["conv"] if cache is not None else None
-    z, u, dt, da, bm, cm, new_conv = _mamba2_pre(p, cfg, x, conv_state)
+    z, u, dt, da, bm, cm, new_conv = _mamba2_pre(p, cfg, x, conv_state,
+                                                 seq_lens)
+    if seq_lens is not None:
+        valid = (jnp.arange(x.shape[1])[None] <
+                 seq_lens[:, None]).astype(jnp.float32)  # (B,S)
+        u = u * valid[..., None, None].astype(u.dtype)
+        da = da * valid[..., None]
     init_state = cache["ssm"] if cache is not None else None
     y, st = _ssd_chunked(u * dt[..., None], da, bm, cm, s.chunk, init_state)
     y = y + p["d_skip"][:, None] * u
@@ -315,8 +338,24 @@ def _wkv_chunked(r, k, v, lw, u, chunk, init_state=None):
     return y[:, :s_orig], final_state
 
 
-def rwkv6_time_mix(p, cfg, x, cache=None):
-    """x: (B,S,D); cache: None or {"wkv": (B,H,N,P), "shift_t": (B,D)}."""
+def _last_valid(x: jax.Array, old: jax.Array | None,
+                seq_lens: jax.Array | None):
+    """Token-shift carry: x at each row's last valid position; rows with
+    ``seq_lens == 0`` keep the previous carry."""
+    if seq_lens is None:
+        return x[:, -1, :]
+    idx = jnp.clip(seq_lens.astype(jnp.int32) - 1, 0, x.shape[1] - 1)
+    picked = jnp.take_along_axis(x, idx[:, None, None], axis=1)[:, 0]
+    if old is None:
+        return picked
+    return jnp.where((seq_lens > 0)[:, None], picked, old.astype(x.dtype))
+
+
+def rwkv6_time_mix(p, cfg, x, cache=None, seq_lens=None):
+    """x: (B,S,D); cache: None or {"wkv": (B,H,N,P), "shift_t": (B,D)}.
+
+    ``seq_lens`` (B,): pad positions are decay-neutral (lw=0, k=0) so the
+    carried WKV state stops at each row's last real token."""
     h, n = rwkv6_dims(cfg)
     b, s, d = x.shape
     last = cache["shift_t"] if cache is not None else None
@@ -334,6 +373,10 @@ def rwkv6_time_mix(p, cfg, x, cache=None):
     dd = jnp.tanh(xw @ p["time_decay_w1"]) @ p["time_decay_w2"]
     lw = -jnp.exp(p["time_decay_base"] + dd)  # (B,S,D) log-decay <= 0
     lw = jnp.clip(lw, -20.0, -1e-6).reshape(b, s, h, n)
+    if seq_lens is not None:
+        valid = (jnp.arange(s)[None] < seq_lens[:, None])[..., None, None]
+        k = k * valid.astype(k.dtype)
+        lw = jnp.where(valid, lw, 0.0)
 
     init = cache["wkv"] if cache is not None else None
     y, st = _wkv_chunked(r, k, v, lw, p["time_bonus_u"], cfg.ssm.chunk, init)
@@ -345,11 +388,11 @@ def rwkv6_time_mix(p, cfg, x, cache=None):
     y = (y.astype(x.dtype) * jax.nn.silu(g)) @ p["wo"]
     new_cache = None
     if cache is not None:
-        new_cache = {"wkv": st, "shift_t": x[:, -1, :]}
+        new_cache = {"wkv": st, "shift_t": _last_valid(x, last, seq_lens)}
     return y, new_cache
 
 
-def rwkv6_channel_mix(p, cfg, x, cache=None):
+def rwkv6_channel_mix(p, cfg, x, cache=None, seq_lens=None):
     last = cache["shift_c"] if cache is not None else None
     prev = _token_shift(x, last)
     xk = x + (prev - x) * p["time_mix_ck"].astype(x.dtype)
@@ -357,5 +400,7 @@ def rwkv6_channel_mix(p, cfg, x, cache=None):
     kk = jax.nn.relu(xk @ p["cm_wk"])
     kk = kk * kk
     out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (kk @ p["cm_wv"])
-    new_cache = {"shift_c": x[:, -1, :]} if cache is not None else None
+    new_cache = None
+    if cache is not None:
+        new_cache = {"shift_c": _last_valid(x, last, seq_lens)}
     return out, new_cache

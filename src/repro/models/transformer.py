@@ -127,10 +127,11 @@ def layer_meta(cfg):
 # ---------------------------------------------------------------------------
 
 
-def _shared_block(sp, cfg, x, pos, kv_slot=None, cache_len=None):
+def _shared_block(sp, cfg, x, pos, kv_slot=None, cache_len=None,
+                  seq_lens=None):
     h, new_kv = attention_block(
         sp["attn"], cfg, rms_norm(x, sp["norm1_scale"], cfg.norm_eps), pos,
-        kv_cache=kv_slot, cache_len=cache_len,
+        kv_cache=kv_slot, cache_len=cache_len, seq_lens=seq_lens,
     )
     x = x + h
     x = x + mlp(sp["mlp"], rms_norm(x, sp["norm2_scale"], cfg.norm_eps),
@@ -152,8 +153,16 @@ def decoder_forward(
     cross_kv: tuple | None = None,   # whisper decoder: (Ldec,B,Senc,KV,hd) x2
     remat: bool = False,
     remat_group: int = 0,
+    seq_lens: jax.Array | None = None,  # (B,) valid new tokens per row
 ) -> tuple[jax.Array, dict | None, jax.Array]:
-    """Returns (hidden (B,S,D), new_cache, aux_loss)."""
+    """Returns (hidden (B,S,D), new_cache, aux_loss).
+
+    ``cache["len"]`` is per-row ``(B,)``: each batch slot advances by its
+    own ``seq_lens`` entry (default: the full input length S), so
+    heterogeneous requests can share one cache without corrupting each
+    other's positions. Rows with ``seq_lens == 0`` are frozen: no KV/state
+    write, no length advance — the decode-time inactive-slot mask.
+    """
     if not remat_group:
         remat_group = getattr(cfg, "remat_group", 1)
     windows, chunks = layer_meta(cfg)
@@ -172,6 +181,7 @@ def decoder_forward(
                 cfg,
                 rms_norm(x, layer_params["norm1_scale"], cfg.norm_eps),
                 layer_cache,
+                seq_lens=seq_lens,
             )
             x = x + h
             h, c2 = ssm_mod.rwkv6_channel_mix(
@@ -179,6 +189,7 @@ def decoder_forward(
                 cfg,
                 rms_norm(x, layer_params["norm2_scale"], cfg.norm_eps),
                 layer_cache,
+                seq_lens=seq_lens,
             )
             x = x + h
             if layer_cache is not None:
@@ -189,6 +200,7 @@ def decoder_forward(
                 cfg,
                 rms_norm(x, layer_params["norm1_scale"], cfg.norm_eps),
                 layer_cache,
+                seq_lens=seq_lens,
             )
             x = x + h
             if layer_cache is not None:
@@ -205,7 +217,8 @@ def decoder_forward(
                         skv, slot, keepdims=False
                     )
                     y, new_slot = _shared_block(
-                        params["shared_attn"], cfg, xx, pos, kv_slot, cache_len
+                        params["shared_attn"], cfg, xx, pos, kv_slot,
+                        cache_len, seq_lens,
                     )
                     skv = jax.lax.dynamic_update_index_in_dim(
                         skv, new_slot.astype(skv.dtype), slot, 0
@@ -224,7 +237,7 @@ def decoder_forward(
                 layer_params["attn"], cfg,
                 rms_norm(x, layer_params["norm1_scale"], cfg.norm_eps), pos,
                 layer_window=window, layer_chunk=chunk,
-                kv_cache=kv, cache_len=cache_len,
+                kv_cache=kv, cache_len=cache_len, seq_lens=seq_lens,
             )
             x = x + h
             if layer_cross is not None:
@@ -316,9 +329,11 @@ def decoder_forward(
     new_cache = None
     if cache is not None:
         new_cache = dict(new_layer_cache)
-        new_cache["len"] = cache["len"] + (
-            pos.shape[1] if pos.ndim >= 2 else 1
-        )
+        if seq_lens is not None:
+            inc = seq_lens.astype(jnp.int32)
+        else:
+            inc = pos.shape[1] if pos.ndim >= 2 else 1
+        new_cache["len"] = cache["len"] + inc
         if shared_kv is not None:
             new_cache["shared_kv"] = shared_kv
     return x, new_cache, aux_tot

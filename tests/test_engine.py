@@ -197,6 +197,47 @@ def test_tune_cache_roundtrip_and_dispatch(tmp_path, monkeypatch):
         autotune.reset_cache()
 
 
+def test_tune_cache_rejects_malformed_entries_at_load(tmp_path, monkeypatch):
+    """A hand-edited 2-element (or non-int) entry must degrade to the
+    heuristic at LOAD time, not raise inside choose_block on the hot
+    path."""
+    path = tmp_path / "tune.json"
+    path.write_text(json.dumps({"schema": 1, "blocks": {
+        "16x1024x1024@4": [128, 256],            # truncated by hand-edit
+        "8x256x256@4": ["128", 128, 128],        # non-int member
+        "8x512x512@4": None,                     # nulled entry
+        "4x128x128@4": [8, 128, 128],            # the one valid entry
+    }}))
+    monkeypatch.setenv(autotune.ENV_CACHE, str(path))
+    autotune.reset_cache()
+    try:
+        assert autotune.choose_block(16, 1024, 1024, 4) == \
+            autotune.heuristic_block(16, 1024, 1024, 4)
+        assert autotune.choose_block(8, 256, 256, 4) == \
+            autotune.heuristic_block(8, 256, 256, 4)
+        assert autotune.choose_block(8, 512, 512, 4) == \
+            autotune.heuristic_block(8, 512, 512, 4)
+        assert autotune.choose_block(4, 128, 128, 4) == (8, 128, 128)
+    finally:
+        monkeypatch.delenv(autotune.ENV_CACHE)
+        autotune.reset_cache()
+
+
+def test_tune_cache_hit_rechecks_vmem_budget():
+    """A stale entry tuned on a bigger-VMEM machine must not be dispatched
+    past this build's budget."""
+    autotune.reset_cache()
+    try:
+        huge = (8, 4096, 4096)  # aligned, but ~67 MB unpacked tile
+        assert autotune._vmem_bytes(*huge, 4) > autotune.VMEM_BUDGET
+        autotune.get_cache().put(8, 4096, 4096, 4, huge)
+        got = autotune.choose_block(8, 4096, 4096, 4)
+        assert got == autotune.heuristic_block(8, 4096, 4096, 4)
+        assert autotune._vmem_bytes(*got, 4) <= autotune.VMEM_BUDGET
+    finally:
+        autotune.reset_cache()
+
+
 def test_autotune_measured_picks_and_records(monkeypatch):
     autotune.reset_cache()
     w = jnp.asarray(np.random.default_rng(0).normal(

@@ -1,0 +1,307 @@
+"""Slot-swap serving correctness: per-slot KV cache lengths end-to-end.
+
+The contract under test (the continuous-batching tentpole):
+* every request served through ``BatchedServer`` — any slot, any wave,
+  any neighbour — produces token-for-token the same output as a fresh
+  isolated single-request decode,
+* batch == 1 slot swap works (regression: the old single-slot
+  prefill-then-merge silently dropped the prefill when ``batch == 1``),
+* finished/empty slots are masked: no KV write, no length advance,
+* prompt-length bucketing bounds recompiles: decode compiles once total,
+  prefill compiles once per power-of-two bucket (not per prompt length).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import QuantPolicy, restructure
+from repro.launch.serve import BatchedServer, Request, build_parser
+from repro.models import build_model
+
+
+def _tiny_model(arch="llama32-1b", n_layers=2, seed=0):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _isolated_decode(model, params, prompt: np.ndarray, gen: int,
+                     max_len: int) -> list[int]:
+    """Greedy decode of one request alone in a fresh batch-1 cache."""
+    cache = model.init_cache(1, max_len)
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    while len(out) < gen:
+        logits, cache = model.decode_step(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache
+        )
+        out.append(int(jnp.argmax(logits[0, 0])))
+    return out
+
+
+def _requests(cfg, lens, gen, seed0=100):
+    return [
+        Request(i, np.random.default_rng(seed0 + i).integers(
+            0, cfg.vocab_size, ln, dtype=np.int32), gen)
+        for i, ln in enumerate(lens)
+    ]
+
+
+def test_batch1_slot_swap_matches_isolated():
+    """Regression: batch==1 serving must NOT serve from an empty cache
+    (the old merge no-op'ed when full.shape == one.shape)."""
+    cfg, model, params = _tiny_model()
+    gen, max_len = 4, 32
+    reqs = _requests(cfg, [6, 9], gen)
+    server = BatchedServer(model, params, batch_slots=1, max_len=max_len)
+    stats = server.run(reqs)
+    assert stats["requests"] == 2
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, r.out, want)
+
+
+def test_mixed_lengths_multiwave_packed_engine_matches_isolated():
+    """Acceptance: requests > batch, heterogeneous prompt lengths, packed
+    engine — every request token-for-token equals its isolated decode, and
+    compiles are bounded by buckets, not by distinct prompt lengths."""
+    cfg, model, params = _tiny_model()
+    qm = restructure(params, QuantPolicy(bits=4, packed=True))
+    ex = qm.as_executable(group=True)
+    gen, max_len = 3, 48
+    lens = [4, 16, 23, 5, 17, 9]  # 6 distinct lengths, 2 slots -> 3 waves
+    reqs = _requests(cfg, lens, gen)
+    server = BatchedServer(model, ex, batch_slots=2, max_len=max_len)
+    stats = server.run(reqs)
+    assert stats["requests"] == len(lens)
+    for r in reqs:
+        want = _isolated_decode(model, ex, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, len(r.prompt), r.out, want)
+    # decode never recompiles: its shapes don't depend on prompt length
+    assert stats["decode_compiles"] == 1, stats
+    # prefill compiles once per power-of-two bucket, NOT per prompt length
+    assert stats["prefill_compiles"] == len(stats["prefill_buckets"]), stats
+    assert stats["prefill_compiles"] < len(set(lens)), stats
+
+
+def test_slot_recycling_does_not_leak_previous_request():
+    """A slot that served a LONG request is reused by a SHORT one: the
+    stale KV tail beyond the new per-slot length must be unreachable."""
+    cfg, model, params = _tiny_model(seed=3)
+    gen, max_len = 3, 40
+    # slot 0 serves a 23-token prompt first, then is recycled for a
+    # 4-token prompt whose positions land far below the stale tail
+    reqs = _requests(cfg, [23, 22, 4], gen)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len)
+    server.run(reqs)
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, r.out, want)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_slot_swap_recurrent_state_families(arch):
+    """SSM / hybrid caches: recycled slots must reset recurrent state and
+    padded prefill must leave it decay-neutral beyond each row's length."""
+    cfg, model, params = _tiny_model(arch, n_layers=2, seed=1)
+    gen, max_len = 3, 32
+    reqs = _requests(cfg, [4, 7, 5], gen)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len)
+    stats = server.run(reqs)
+    assert stats["requests"] == 3
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (arch, r.rid, r.out, want)
+
+
+def test_inactive_slots_no_cache_writes():
+    """A decode step must not write KV or advance ``len`` for empty or
+    finished slots (the old server fed token 0 and wrote its KV)."""
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=2, max_len=32)
+    [req] = _requests(cfg, [6], 4)
+    server._fill_slots([req])
+    assert server.active[1] is None
+    before = jax.tree.map(np.asarray, server.cache)
+    for _ in range(3):
+        server.step()
+    after = jax.tree.map(np.asarray, server.cache)
+    # slot 1 was never admitted: its rows are bit-identical (still zero)
+    np.testing.assert_array_equal(after["kv"][:, :, 1], before["kv"][:, :, 1])
+    assert (after["kv"][:, :, 1] == 0).all()
+    assert after["len"][1] == 0
+    # slot 0 decoded 3 tokens on top of its 6-token prompt
+    assert after["len"][0] == 9
+    # finished slot: freeze it and step again — nothing may change
+    req.done = True
+    frozen = jax.tree.map(np.asarray, server.cache)
+    server.step()
+    final = jax.tree.map(np.asarray, server.cache)
+    for k in frozen:
+        np.testing.assert_array_equal(final[k], frozen[k], err_msg=k)
+
+
+def test_prefill_wave_freezes_ongoing_slot():
+    """Batched in-place prefill of a new request must not disturb the
+    cache rows of a slot that is mid-decode."""
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=2, max_len=32)
+    [r0] = _requests(cfg, [6], 8)
+    server._fill_slots([r0])
+    server.step()
+    before = jax.tree.map(np.asarray, server.cache)
+    [r1] = _requests(cfg, [5], 8, seed0=300)
+    server._fill_slots([r1])  # admits into slot 1; slot 0 has lengths==0
+    after = jax.tree.map(np.asarray, server.cache)
+    np.testing.assert_array_equal(after["kv"][:, :, 0], before["kv"][:, :, 0])
+    assert after["len"][0] == before["len"][0] == 7
+    assert after["len"][1] == 5
+
+
+def test_gen1_requests_all_retired():
+    """Requests that finish at prefill (max_new == 1) in the FINAL wave
+    must still be collected into the stats and their slots freed."""
+    cfg, model, params = _tiny_model()
+    reqs = _requests(cfg, [4, 6, 5, 7], gen=1)
+    server = BatchedServer(model, params, batch_slots=2, max_len=16)
+    stats = server.run(reqs)
+    assert stats["requests"] == 4, stats
+    assert stats["tokens"] == 4, stats
+    assert server.active == [None, None]
+    for r in reqs:
+        assert r.out == _isolated_decode(model, params, r.prompt, 1, 16)
+
+
+def test_rejected_request_does_not_strand_wave_mates():
+    """Admission validates the whole wave BEFORE mutating server state: a
+    rejected request must leave pending and slots untouched."""
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=2, max_len=12)
+    [good] = _requests(cfg, [4], gen=2)
+    [too_long] = _requests(cfg, [8], gen=6, seed0=200)  # needs 13 > 12
+    pending = [good, too_long]
+    with pytest.raises(ValueError, match="cache rows"):
+        server._fill_slots(pending)
+    assert pending == [good, too_long]       # nothing popped
+    assert server.active == [None, None]     # nothing admitted
+    assert good.out == []                    # nothing prefilled
+    # dropping the bad request lets the good one serve normally
+    stats = server.run([good])
+    assert stats["requests"] == 1
+    assert good.out == _isolated_decode(model, params, good.prompt, 2, 12)
+
+
+def test_encdec_padded_prefill_honors_lengths():
+    """Whisper-style enc-dec: batched right-padded prefill with per-row
+    lengths must match isolated batch-1 decoding (the encdec branch of
+    prefill must pass seq_lens through)."""
+    cfg, model, params = _tiny_model("whisper-medium", n_layers=2, seed=5)
+    rng = np.random.default_rng(11)
+    s_enc, gen, max_len = 8, 3, 24
+    enc = rng.normal(size=(2, s_enc, cfg.d_model)).astype(np.float32)
+    prompts = [rng.integers(0, cfg.vocab_size, ln, dtype=np.int32)
+               for ln in (4, 6)]
+
+    def isolated(i):
+        cache = model.init_cache(1, max_len)
+        logits, cache = model.prefill(params, {
+            "enc_embeds": jnp.asarray(enc[i : i + 1]),
+            "tokens": jnp.asarray(prompts[i][None]),
+        }, cache)
+        out = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(gen - 1):
+            logits, cache = model.decode_step(
+                params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+            out.append(int(jnp.argmax(logits[0, 0])))
+        return out
+
+    refs = [isolated(0), isolated(1)]
+    lb = 8
+    toks = np.zeros((2, lb), np.int32)
+    lens = np.zeros((2,), np.int32)
+    for i, p in enumerate(prompts):
+        toks[i, : len(p)] = p
+        lens[i] = len(p)
+    cache = model.init_cache(2, max_len)
+    logits, cache = model.prefill(params, {
+        "enc_embeds": jnp.asarray(enc), "tokens": jnp.asarray(toks),
+        "lengths": jnp.asarray(lens),
+    }, cache)
+    assert np.asarray(cache["len"]).tolist() == [4, 6]
+    outs = [[int(jnp.argmax(logits[i, 0]))] for i in range(2)]
+    for _ in range(gen - 1):
+        t = jnp.asarray([[o[-1]] for o in outs], jnp.int32)
+        logits, cache = model.decode_step(
+            params, t, cache, active=jnp.asarray([True, True]))
+        for i in range(2):
+            outs[i].append(int(jnp.argmax(logits[i, 0])))
+    assert outs == refs, (outs, refs)
+
+
+def test_admission_rejects_requests_that_cannot_fit():
+    """dynamic_update_slice clamps out-of-range writes, so a request whose
+    prompt+gen exceeds max_len must be rejected up front, not silently
+    corrupt live KV rows; empty prompts would alias the frozen-slot
+    encoding (lengths == 0) and decode the previous occupant."""
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=1, max_len=12)
+    [too_long] = _requests(cfg, [8], gen=6)  # needs 8 + 6 - 1 = 13 rows
+    with pytest.raises(ValueError, match="cache rows"):
+        server._fill_slots([too_long])
+    server2 = BatchedServer(model, params, batch_slots=1, max_len=12)
+    empty = Request(0, np.zeros((0,), np.int32), 2)
+    with pytest.raises(ValueError, match="empty prompt"):
+        server2._fill_slots([empty])
+    # the boundary case fits exactly: 8 + 5 - 1 = 12 rows
+    server3 = BatchedServer(model, params, batch_slots=1, max_len=12)
+    [fits] = _requests(cfg, [8], gen=5)
+    stats = server3.run([fits])
+    assert stats["requests"] == 1 and len(fits.out) == 5
+
+
+def test_serve_cli_boolean_flags():
+    """--reduced/--split were action=store_true with default=True: the old
+    parser could never turn them off."""
+    ap = build_parser()
+    d = ap.parse_args([])
+    assert d.reduced is True and d.split is True
+    off = ap.parse_args(["--no-reduced", "--no-split"])
+    assert off.reduced is False and off.split is False
+    on = ap.parse_args(["--reduced", "--split"])
+    assert on.reduced is True and on.split is True
+
+
+def test_serve_main_no_reduced_smoke(monkeypatch):
+    """--no-reduced must reach the config un-reduced (smoke: monkeypatch
+    the registry to a tiny config so the full-size path stays cheap)."""
+    import repro.launch.serve as serve_mod
+
+    tiny = get_config("llama32-1b").reduced()
+    tiny = dataclasses.replace(tiny, n_layers=2)
+    seen = {}
+
+    class _Proxy:
+        """Tiny config that records whether .reduced() was called."""
+
+        def reduced(self):
+            seen["reduced_called"] = True
+            return tiny
+
+        def __getattr__(self, item):
+            return getattr(tiny, item)
+
+    monkeypatch.setattr("repro.configs.get_config", lambda name: _Proxy())
+    rc = serve_mod.main([
+        "--no-reduced", "--no-split", "--bits", "4", "--engine", "fake",
+        "--batch", "1", "--requests", "1", "--prompt-len", "4", "--gen", "2",
+    ])
+    assert rc == 0
+    assert "reduced_called" not in seen  # --no-reduced honored
