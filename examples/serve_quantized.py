@@ -3,12 +3,28 @@ batching): heterogeneous prompt lengths share fixed batch slots via the
 per-slot KV cache lengths, with power-of-two prompt bucketing so slot
 swaps don't recompile per prompt length.
 
+The second run uses the PAGED KV cache: each request reserves only the
+pages its prompt + generation needs from a shared pool (no batch x max_len
+strips), a long prompt is prefilled in chunk waves interleaved with decode
+steps, and tokens stream back through the ``on_token`` callback with
+seeded top-k sampling.
+
     PYTHONPATH=src python examples/serve_quantized.py
 """
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    main([
+    rc = main([
         "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
         "--batch", "4", "--prompt-lens", "4,16,23,9", "--gen", "8",
     ])
+    # paged KV + chunked prefill + seeded top-k sampling: the 40-token
+    # prompt is fed in 8-token waves between decode steps of its neighbours
+    rc = rc or main([
+        "--arch", "llama32-1b", "--bits", "4", "--requests", "6",
+        "--batch", "2", "--prompt-lens", "4,40,9", "--gen", "6",
+        "--paged", "--page-size", "8", "--num-pages", "14",
+        "--prefill-chunk", "8", "--temperature", "0.7", "--top-k", "16",
+        "--seed", "11",
+    ])
+    raise SystemExit(rc)

@@ -1,0 +1,185 @@
+"""Paged-attention decode Pallas kernel — block-table KV gather on TPU.
+
+Decode attention over a PAGED KV cache: instead of indexing one contiguous
+``(B, Smax, KV, hd)`` strip, each batch row follows its page-table row
+through a shared pool of fixed-size pages. The kernel uses
+``PrefetchScalarGridSpec``: the page table and per-row lengths are scalar-
+prefetched so the K/V BlockSpec index maps can resolve ``logical page i of
+row b`` -> physical page id BEFORE the body runs — K/V never need to be
+gathered into a contiguous per-row strip in HBM (the XLA reference path
+materialises exactly that gather). The grid still sweeps every logical
+page slot per row, so fetch traffic is O(table width), not O(len): dead
+slots re-fetch a clamped page and are masked in the body. Skipping them
+(and multi-page blocks / double-buffered fetches) is the scheduled TPU
+perf pass — see ROADMAP; this kernel is the reference-quality baseline.
+
+Grid ``(B, KV, NP)`` with the page dim innermost (sequential on TPU): the
+per-(row, kv-head) output tile and running online-softmax stats live in
+VMEM scratch across the page sweep, exactly like the flash kernel's Sk
+sweep. GQA is handled by blocking q/o as the ``G = H // KV`` query-head
+group of the kv head — scores stay (G, page)-tiny at decode.
+
+Masks: positions ``>= len`` are dead, plus optional sliding-window and
+chunked-attention masks on absolute positions (traced scalars, prefetched).
+Fully-masked rows (``len == 0``) produce EXACT zeros — the same contract
+as the reference softmax guard in ``models/attention.py``, not a uniform
+average over garbage.
+
+``paged_attention_reference`` is the pure-jnp oracle (gather + masked
+softmax) used for CPU CI and the kernel-equivalence test.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    pt_ref,    # (B, NP) scalar-prefetch: physical page ids
+    len_ref,   # (B,)    scalar-prefetch: valid KV length per row
+    meta_ref,  # (2,)    scalar-prefetch: [window, chunk] (0 => disabled)
+    q_ref,     # (1, 1, G, hd)
+    k_ref,     # (1, page, 1, hd) — physical page selected by index_map
+    v_ref,     # (1, page, 1, hd)
+    o_ref,     # (1, 1, G, hd)
+    acc_ref, m_ref, l_ref,
+    *, scale: float, page: int, n_pages: int,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (page, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)  # (page, hd)
+    s = jax.lax.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    k_len = len_ref[b]
+    q_pos = k_len - 1  # the decode token sits at the last valid position
+    k_pos = i * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < k_len
+    w, c = meta_ref[0], meta_ref[1]
+    mask &= jnp.where(w > 0, (q_pos - k_pos) < w, True)
+    cs = jnp.maximum(c, 1)
+    mask &= jnp.where(c > 0, (q_pos // cs) == (k_pos // cs), True)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (G, 1)
+    m_cur = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_cur)
+    # mask p explicitly: when every key so far is dead, m_cur == NEG_INF and
+    # exp(s - m_cur) would be exp(0) == 1 per dead key — the classic
+    # garbage-average bug for empty rows. Masked p keeps l at exactly 0.
+    p = jnp.where(mask, jnp.exp(s - m_cur), 0.0)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_cur
+
+    @pl.when(i == n_pages - 1)
+    def _done():
+        l = l_ref[...]
+        out = jnp.where(l > 0, acc_ref[...] / jnp.where(l > 0, l, 1.0), 0.0)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(
+    q: jax.Array,           # (B, KV, G, hd)
+    k_pages: jax.Array,     # (P, page, KV, hd)
+    v_pages: jax.Array,     # (P, page, KV, hd)
+    page_table: jax.Array,  # (B, NP) int32
+    lengths: jax.Array,     # (B,) int32 valid KV length (post-write)
+    window: jax.Array | int = 0,
+    chunk: jax.Array | int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    b, kvh, g, hd = q.shape
+    p_total, page = k_pages.shape[0], k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    meta = jnp.stack([jnp.asarray(window, jnp.int32).reshape(()),
+                      jnp.asarray(chunk, jnp.int32).reshape(())])
+
+    def kv_map(bb, h, i, pt, ln, mt):
+        # stale table entries past a row's live pages still index SOME real
+        # page; their contributions are masked by len in the body
+        return (jnp.clip(pt[bb, i], 0, p_total - 1), 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda bb, h, i, pt, ln, mt: (bb, h, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+            pl.BlockSpec((1, page, 1, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, g, hd), lambda bb, h, i, pt, ln, mt: (bb, h, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _paged_kernel, scale=hd ** -0.5, page=page, n_pages=n_pages,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(
+        page_table.astype(jnp.int32), lengths.astype(jnp.int32), meta,
+        q, k_pages, v_pages,
+    )
+
+
+def paged_attention_reference(
+    q: jax.Array,           # (B, KV, G, hd)
+    k_pages: jax.Array,     # (P, page, KV, hd)
+    v_pages: jax.Array,     # (P, page, KV, hd)
+    page_table: jax.Array,  # (B, NP)
+    lengths: jax.Array,     # (B,)
+    window: jax.Array | int = 0,
+    chunk: jax.Array | int = 0,
+) -> jax.Array:
+    """Pure-jnp oracle: logical gather + masked softmax (fp32)."""
+    from repro.kvcache.paged import logical_view
+
+    b, kvh, g, hd = q.shape
+    page = k_pages.shape[1]
+    n_pages = page_table.shape[1]
+    # one source of truth for the page addressing math
+    kl, vl = logical_view(jnp.stack([k_pages, v_pages]), page_table)
+    s_log = n_pages * page
+    k_pos = jnp.arange(s_log, dtype=jnp.int32)[None]          # (1, S_log)
+    q_pos = (lengths.astype(jnp.int32) - 1)[:, None]          # (B, 1)
+    mask = k_pos < lengths.astype(jnp.int32)[:, None]
+    w = jnp.asarray(window)
+    mask &= jnp.where(w > 0, (q_pos - k_pos) < w, True)
+    c = jnp.asarray(chunk)
+    mask &= jnp.where(c > 0, (q_pos // jnp.maximum(c, 1))
+                      == (k_pos // jnp.maximum(c, 1)), True)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", q.astype(jnp.float32), kl.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = jnp.where(mask[:, None, None, :], p, 0.0)
+    l = p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, vl.astype(jnp.float32))
+    out = jnp.where(l > 0, out / jnp.where(l > 0, l, 1.0), 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,17 @@
+"""Paged KV-cache subsystem: block-table page allocator + paged layout math.
+
+``allocator`` is host-side bookkeeping (free list, refcounts, fragmentation
+stats); ``paged`` is the device-side index math (scatter writes, logical
+gather). The Pallas paged-attention decode kernel lives with the other
+kernels in ``repro.kernels.paged_attention``.
+"""
+from repro.kvcache.allocator import OutOfPages, PageAllocator
+from repro.kvcache.paged import logical_view, paged_write, pages_for
+
+__all__ = [
+    "OutOfPages",
+    "PageAllocator",
+    "logical_view",
+    "paged_write",
+    "pages_for",
+]

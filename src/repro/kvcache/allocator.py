@@ -1,0 +1,116 @@
+"""Block-table page allocator for the paged KV cache.
+
+Host-side bookkeeping for a fixed pool of KV pages: every request owns a
+list of physical page ids that back its logical token positions
+(``logical_page i`` of a request -> ``pages[i]``). The device never sees
+this object — the server materialises the per-slot page table as an int32
+array and passes it into the jitted prefill/decode functions.
+
+Pages are reference-counted: ``alloc`` hands out pages at refcount 1,
+``retain`` bumps a page shared between owners (prefix sharing — the device
+write path assumes refcount 1 for pages being written), and ``free``
+decrements, returning the page to the free list when the count reaches
+zero. The free list is LIFO so recently-retired pages (hot in cache on a
+real host) are reused first.
+
+Invariants (pinned by tests/test_kvcache_alloc.py):
+* a live page is never handed out twice,
+* ``free + in_use == total`` at all times,
+* freeing every owner returns the pool to zero pages in use (no leaks).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+
+class OutOfPages(RuntimeError):
+    """Raised when an allocation cannot be satisfied from the free pool."""
+
+
+class PageAllocator:
+    def __init__(self, num_pages: int):
+        if num_pages <= 0:
+            raise ValueError(f"num_pages must be positive, got {num_pages}")
+        self.num_pages = num_pages
+        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self._refs: dict[int, int] = {}
+        self.peak_in_use = 0
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.num_pages - len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return 0 <= n <= len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    # -- mutation -----------------------------------------------------------
+
+    def alloc(self, n: int) -> list[int]:
+        """Allocate ``n`` pages at refcount 1; raises OutOfPages if short."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} pages")
+        if n > len(self._free):
+            raise OutOfPages(
+                f"need {n} pages, only {len(self._free)} free "
+                f"of {self.num_pages}"
+            )
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._refs[p] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def retain(self, pages: Iterable[int]) -> None:
+        """Add one owner to already-live pages (copy-on-write sharing)."""
+        for p in pages:
+            if p not in self._refs:
+                raise KeyError(f"retain of free page {p}")
+            self._refs[p] += 1
+
+    def free(self, pages: Iterable[int]) -> None:
+        """Drop one owner per page; pages at refcount 0 return to the pool."""
+        for p in pages:
+            ref = self._refs.get(p)
+            if ref is None:
+                raise KeyError(f"double free of page {p}")
+            if ref == 1:
+                del self._refs[p]
+                self._free.append(p)
+            else:
+                self._refs[p] = ref - 1
+
+    # -- stats --------------------------------------------------------------
+
+    def fragmentation(self) -> float:
+        """1 - (largest contiguous free run / free pages): 0 when the free
+        pool is one run (or empty), approaching 1 as it shatters. Physical
+        contiguity is irrelevant to correctness (the page table indirects
+        every access) — this is a health metric for allocation locality."""
+        if not self._free:
+            return 0.0
+        free = sorted(self._free)
+        best = cur = 1
+        for a, b in zip(free, free[1:]):
+            cur = cur + 1 if b == a + 1 else 1
+            best = max(best, cur)
+        return 1.0 - best / len(free)
+
+    def stats(self) -> dict:
+        shared = sum(1 for r in self._refs.values() if r > 1)
+        return {
+            "total": self.num_pages,
+            "free": self.free_pages,
+            "in_use": self.in_use,
+            "peak_in_use": self.peak_in_use,
+            "shared": shared,
+            "fragmentation": round(self.fragmentation(), 4),
+        }

@@ -1,0 +1,87 @@
+"""Paged KV-cache layout math (device side).
+
+Layout: one pool of ``P`` fixed-size pages per layer, ``kv_pages`` shaped
+``(2, P, page, KV, hd)`` (the leading 2 is K/V). A request's logical token
+position ``t`` lives in logical page ``t // page`` at offset ``t % page``;
+the per-slot ``page_table`` row maps logical page index -> physical page
+id, so the flat physical index is::
+
+    phys(b, t) = page_table[b, t // page] * page + t % page
+
+Logical position == absolute token position, which is what keeps RoPE,
+causal/sliding-window/chunked masks and the per-slot ``len`` contract
+identical between the paged and contiguous cache layouts.
+
+Writers assume exclusive page ownership (refcount 1 — see
+``kvcache.allocator``): distinct slots never scatter into the same
+physical page. Page-table entries beyond a slot's allocated range may be
+stale/zero; reads clamp them and attention masks positions ``>= len``, so
+stale pages are unreachable the same way stale dense-cache rows are.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to back ``n_tokens`` logical positions."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+def paged_write(
+    kv_pages: jax.Array,   # (2, P, page, KV, hd)
+    k: jax.Array,          # (B, S, KV, hd)
+    v: jax.Array,          # (B, S, KV, hd)
+    page_table: jax.Array,  # (B, NP) int32 physical page ids
+    starts: jax.Array,     # (B,) logical write offset per row
+    seq_lens: jax.Array | None = None,  # (B,) valid new tokens (None => S)
+) -> jax.Array:
+    """Scatter new K/V tokens into their physical page slots.
+
+    Row ``b`` writes its first ``seq_lens[b]`` tokens at logical positions
+    ``starts[b] + j``; invalid positions (frozen rows, right-padding,
+    out-of-table) map to an out-of-bounds flat index and are DROPPED by the
+    scatter — the paged equivalent of the dense path's per-row masked
+    ``dynamic_update_slice``. O(B*S) work: the pool is never traversed.
+    """
+    _, p_total, page, kvh, hd = kv_pages.shape
+    b, s = k.shape[0], k.shape[1]
+    np_max = page_table.shape[1]
+    t = starts.astype(jnp.int32)[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+    valid = t < np_max * page
+    if seq_lens is not None:
+        valid &= jnp.arange(s, dtype=jnp.int32)[None] < seq_lens.astype(jnp.int32)[:, None]
+    logical = jnp.clip(t // page, 0, np_max - 1)
+    phys_page = jnp.take_along_axis(page_table.astype(jnp.int32), logical, axis=1)
+    flat_n = p_total * page
+    phys = jnp.where(valid, phys_page * page + t % page, flat_n)  # OOB => drop
+    idx = phys.reshape(b * s)
+    kc = kv_pages[0].reshape(flat_n, kvh, hd).at[idx].set(
+        k.astype(kv_pages.dtype).reshape(b * s, kvh, hd), mode="drop"
+    )
+    vc = kv_pages[1].reshape(flat_n, kvh, hd).at[idx].set(
+        v.astype(kv_pages.dtype).reshape(b * s, kvh, hd), mode="drop"
+    )
+    return jnp.stack([kc, vc]).reshape(kv_pages.shape)
+
+
+def logical_view(
+    kv_pages: jax.Array,    # (2, P, page, KV, hd)
+    page_table: jax.Array,  # (B, NP)
+) -> tuple[jax.Array, jax.Array]:
+    """Gather each row's logical K/V strip ``(B, NP*page, KV, hd)``.
+
+    This is the interpret-mode / XLA reference data path: the gathered
+    strip feeds the exact same attention math as the contiguous cache
+    (positions ``>= len`` are masked identically), so paged and dense
+    decoding are bit-identical. On TPU the paged-attention kernel reads
+    pages directly in VMEM instead of materialising this gather in HBM.
+    """
+    _, p_total, page, _, _ = kv_pages.shape
+    flat = kv_pages.reshape(2, p_total * page, *kv_pages.shape[3:])
+    pt = jnp.clip(page_table.astype(jnp.int32), 0, p_total - 1)
+    phys = (pt[:, :, None] * page
+            + jnp.arange(page, dtype=jnp.int32)[None, None, :])
+    phys = phys.reshape(page_table.shape[0], -1)  # (B, NP*page)
+    return flat[0][phys], flat[1][phys]

@@ -1,16 +1,31 @@
 """Batched serving driver with SplitQuantV2 quantized weights.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama32-1b --reduced \
-        --bits 4 --engine packed --batch 4 --prompt-len 16 --gen 8
+        --bits 4 --engine packed --batch 4 --prompt-len 16 --gen 8 \
+        --paged --page-size 16 --prefill-chunk 32
 
 Continuous batching: a request queue is packed into fixed batch slots. The
 KV cache keeps a PER-SLOT fill length (``cache["len"]: (B,)``), so every
 slot decodes at its own position against its own keys; finished sequences
-are replaced between decode steps by a **batched in-place prefill** that
-writes the new prompts straight into the live cache (rows of ongoing
+are replaced between decode steps by **batched in-place prefill** waves
+that write new prompts straight into the live cache (rows of ongoing
 requests are frozen via per-row ``seq_lens``). Prompts are right-padded to
 power-of-two buckets, so slot swaps compile once per bucket instead of once
 per distinct prompt length, and the decode step never recompiles at all.
+
+``--paged`` swaps the per-slot contiguous KV strips for the PAGED cache
+(``repro.kvcache``): attention KV lives in a shared pool of fixed-size
+pages, each request owns exactly the pages its prompt+generation needs, and
+the scheduler admits by FREE-PAGE BUDGET instead of reserving
+``batch × max_len`` up front — one long request no longer dictates the
+memory bill for the whole batch. ``--prefill-chunk N`` additionally splits
+long prompts into N-token waves interleaved with decode steps, so a giant
+prompt doesn't stall ongoing decodes (works for dense caches too).
+
+Sampling: greedy argmax by default; ``--temperature/--top-k/--top-p`` turn
+on seeded stochastic sampling (host-side, reproducible via ``--seed``).
+``BatchedServer.run(requests, on_token=...)`` streams tokens to the caller
+as they decode.
 
 ``--engine`` selects how quantized weights execute:
   fake    dequantized dense weights (the paper's fake-quant evaluation)
@@ -24,11 +39,13 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kvcache import PageAllocator, pages_for
 from repro.models.model import reset_slots
 
 
@@ -39,6 +56,43 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    fed: int = 0                # prompt tokens already prefilled (chunked)
+    pages: list = dataclasses.field(default_factory=list)  # owned page ids
+    kv_reserved_bytes: int = 0  # KV bytes reserved for this request
+
+
+def sample_token(
+    logits: np.ndarray,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+    rng: np.random.Generator | None = None,
+) -> int:
+    """One token from a (V,) logits row. ``temperature <= 0`` is greedy
+    argmax (the deterministic default the serving tests pin); otherwise
+    temperature -> top-k filter -> top-p nucleus -> seeded draw."""
+    logits = np.asarray(logits, np.float64)
+    if temperature <= 0.0:
+        return int(np.argmax(logits))
+    if rng is None:
+        rng = np.random.default_rng()
+    logits = logits / temperature
+    if 0 < top_k < logits.size:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits < kth, -np.inf, logits)
+    logits = logits - logits.max()
+    probs = np.exp(logits)
+    probs /= probs.sum()
+    if top_p < 1.0:
+        order = np.argsort(-probs)
+        cum = np.cumsum(probs[order])
+        # minimal prefix whose mass reaches top_p (always >= 1 token)
+        cut = int(np.searchsorted(cum, top_p)) + 1
+        nucleus = np.zeros_like(probs)
+        nucleus[order[:cut]] = probs[order[:cut]]
+        probs = nucleus / nucleus.sum()
+    return int(rng.choice(probs.size, p=probs))
 
 
 def _bucket(n: int, minimum: int) -> int:
@@ -52,40 +106,118 @@ def _bucket(n: int, minimum: int) -> int:
 class BatchedServer:
     """Fixed-slot continuous batching over a decode_step function.
 
-    Slot-swap contract: every wave of newly admitted requests is prefilled
-    in ONE batched call into the live cache — recycled slots are reset
-    (``reset_slots``), ongoing slots are frozen (``lengths == 0``), and the
-    per-slot cache length makes the subsequent decode steps position each
-    request correctly regardless of its neighbours."""
+    Slot-swap contract: every prefill wave is ONE batched call into the
+    live cache — rows starting a fresh request are reset (``reset_slots``),
+    rows mid-prompt continue at their own ``len``, ongoing/finished rows
+    are frozen (``lengths == 0``) — and the per-slot cache length makes
+    every subsequent step position each request correctly regardless of
+    its neighbours.
+
+    Paged mode: attention KV pages are reserved per request at admission
+    (``ceil((prompt + gen - 1) / page_size)`` pages — deadlock-free: a
+    request that is admitted can always finish) and freed at retirement;
+    the scheduler admits while the free-page budget lasts. ``max_len``
+    bounds one REQUEST (the page-table width), not the pool — the pool is
+    ``num_pages`` and can be far below ``slots × max_len``.
+
+    Chunked prefill: ``prefill_chunk > 0`` feeds prompts in chunk-sized
+    waves; ``run`` alternates one prefill wave with one decode step so
+    ongoing requests keep emitting tokens while a long prompt loads.
+    """
 
     def __init__(self, model, params, batch_slots: int, max_len: int,
-                 bucket_min: int = 8):
+                 bucket_min: int = 8, *, paged: bool = False,
+                 page_size: int = 16, num_pages: int | None = None,
+                 prefill_chunk: int = 0, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 1.0, seed: int = 0):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
         self.bucket_min = bucket_min
-        self.cache = model.init_cache(batch_slots, max_len)
+        self.paged = paged
+        self.prefill_chunk = prefill_chunk
+        self.sampling = {"temperature": temperature, "top_k": top_k,
+                         "top_p": top_p}
+        self._rng = np.random.default_rng(seed)
+        self._on_token: Callable | None = None
         self.active: list[Request | None] = [None] * batch_slots
         self.buckets_used: list[int] = []
+        self.events: list[str] = []  # "prefill" / "decode" op trace
+
+        if paged:
+            self.page_size = page_size
+            pages_per_row = pages_for(max_len, page_size)
+            self.num_pages = num_pages or batch_slots * pages_per_row
+            self.cache = model.init_paged_cache(
+                batch_slots, max_len, page_size=page_size,
+                num_pages=self.num_pages,
+            )
+            self.alloc = PageAllocator(self.num_pages)
+            self._table = np.zeros((batch_slots, pages_per_row), np.int32)
+            self._table_dirty = False  # host table diverged from device copy
+            pool_bytes = sum(
+                v.nbytes for k, v in self.cache.items()
+                if k in ("pages", "shared_pages")
+            )
+            self._page_bytes = pool_bytes // self.num_pages
+        else:
+            self.alloc = None
+            self.cache = model.init_cache(batch_slots, max_len)
+            kv_bytes = sum(
+                v.nbytes for k, v in self.cache.items()
+                if k in ("kv", "shared_kv")
+            )
+            # contiguous strips reserve max_len rows per slot up front
+            self._kv_row_bytes = kv_bytes // batch_slots
+
         self._decode = jax.jit(model.decode_step)
 
-        def _prefill_fn(params, tokens, lengths, cache):
-            cache = reset_slots(cache, lengths > 0)
+        def _prefill_fn(params, tokens, lengths, fresh, cache):
+            cache = reset_slots(cache, fresh)
             return model.prefill(
                 params, {"tokens": tokens, "lengths": lengths}, cache
             )
 
         self._prefill = jax.jit(_prefill_fn)
 
+    # -- sampling / streaming -----------------------------------------------
+
+    def _pick_tokens(self, logits) -> Callable[[int], int]:
+        """Per-slot token chooser from device logits (B, 1, V). Greedy mode
+        argmaxes ON DEVICE and transfers B ints; stochastic sampling needs
+        the full logits rows on the host (B x V, off the hot path)."""
+        if self.sampling["temperature"] <= 0.0:
+            toks = np.asarray(jnp.argmax(logits[:, 0], -1))
+            return lambda i: int(toks[i])
+        rows = np.asarray(logits[:, 0])
+        return lambda i: sample_token(rows[i], **self.sampling,
+                                      rng=self._rng)
+
+    def _emit(self, req: Request, tok: int):
+        req.out.append(tok)
+        req.done = len(req.out) >= req.max_new
+        if self._on_token is not None:
+            self._on_token(req, tok)
+
     # -- slot management ----------------------------------------------------
 
-    def _fill_slots(self, pending: list[Request]):
-        """Admit waiting requests into free slots; one batched prefill."""
+    def _sync_table(self):
+        """Re-upload the page table only when admission/retirement changed
+        it — steady-state decode keeps the device copy (it rides through
+        every jitted call unchanged in the cache pytree)."""
+        if self.paged and self._table_dirty:
+            self.cache["page_table"] = jnp.asarray(self._table)
+            self._table_dirty = False
+
+    def _fill_slots(self, pending: list[Request]) -> int:
+        """Admit waiting requests into free slots, then run one prefill
+        wave. Returns the number of requests admitted (0 when the free-page
+        budget is exhausted — callers wait for retirements)."""
         free = [i for i in range(self.slots) if self.active[i] is None]
         n = min(len(free), len(pending))
         if not n:
-            return
+            return 0
         # validate BEFORE mutating active/pending: a rejected request must
         # not strand its wave-mates admitted-but-never-prefilled
         for r in pending[:n]:
@@ -93,9 +225,12 @@ class BatchedServer:
                 # lengths==0 means "frozen slot": an empty prompt would
                 # skip the slot reset and decode the previous occupant
                 raise ValueError(f"request {r.rid}: empty prompt")
-            # prefill writes len(prompt) KV rows, decode max_new-1 more;
-            # dynamic_update_slice CLAMPS out-of-range writes, which would
-            # silently overwrite live entries instead of failing
+            if r.max_new < 1:
+                # max_new == 0 would under-reserve (prompt - 1 rows) while
+                # prefill still writes the full prompt — in paged mode the
+                # tail would scatter into a page owned by a live neighbour
+                raise ValueError(f"request {r.rid}: max_new must be >= 1")
+            # prefill writes len(prompt) KV rows, decode max_new-1 more
             need = len(r.prompt) + r.max_new - 1
             if need > self.max_len:
                 raise ValueError(
@@ -103,68 +238,139 @@ class BatchedServer:
                     f"{r.max_new} needs {need} cache rows > "
                     f"max_len={self.max_len}"
                 )
-        newly = [(i, pending.pop(0)) for i in free[:n]]
-        for i, req in newly:
+            if self.paged and pages_for(need, self.page_size) > self.num_pages:
+                raise ValueError(
+                    f"request {r.rid}: needs "
+                    f"{pages_for(need, self.page_size)} pages > pool size "
+                    f"{self.num_pages}"
+                )
+        admitted = 0
+        for i in free[:n]:
+            req = pending[0]
+            if self.paged:
+                need = pages_for(len(req.prompt) + req.max_new - 1,
+                                 self.page_size)
+                if not self.alloc.can_alloc(need):
+                    break  # budget exhausted: the rest wait for retirements
+                req.pages = self.alloc.alloc(need)
+                self._table[i, : len(req.pages)] = req.pages
+                self._table_dirty = True
+                req.kv_reserved_bytes = len(req.pages) * self._page_bytes
+            else:
+                req.kv_reserved_bytes = self._kv_row_bytes
+            pending.pop(0)
             self.active[i] = req
-        lmax = max(len(r.prompt) for _, r in newly)
-        lb = min(_bucket(lmax, self.bucket_min), self.max_len)
+            admitted += 1
+        if admitted:
+            self._prefill_wave()
+        return admitted
+
+    def _retire(self, i: int, req: Request, done: list[Request]):
+        done.append(req)
+        self.active[i] = None
+        if self.paged:
+            self.alloc.free(req.pages)
+            self._table[i] = 0  # cosmetic: stale ids are unreachable anyway
+            self._table_dirty = True
+
+    def _prefill_wave(self) -> bool:
+        """ONE batched prefill advancing every mid-prompt row by one chunk
+        (the whole remaining prompt when ``prefill_chunk == 0``). Rows whose
+        prompt completes get their first token sampled from this wave's
+        logits at their own last real position."""
+        rows = [(i, r) for i, r in enumerate(self.active)
+                if r is not None and r.fed < len(r.prompt)]
+        if not rows:
+            return False
+        chunk = self.prefill_chunk or self.max_len
+        sizes = {i: min(chunk, len(r.prompt) - r.fed) for i, r in rows}
+        lb = min(_bucket(max(sizes.values()), self.bucket_min), self.max_len)
         self.buckets_used.append(lb)
         tokens = np.zeros((self.slots, lb), np.int32)
         lengths = np.zeros((self.slots,), np.int32)
-        for i, req in newly:
-            tokens[i, : len(req.prompt)] = req.prompt
-            lengths[i] = len(req.prompt)
+        fresh = np.zeros((self.slots,), bool)
+        for i, r in rows:
+            c = sizes[i]
+            tokens[i, :c] = r.prompt[r.fed : r.fed + c]
+            lengths[i] = c
+            fresh[i] = r.fed == 0
+            r.fed += c
+        self._sync_table()
         logits, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths), self.cache
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(fresh), self.cache,
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
-        for i, req in newly:
-            req.out.append(int(nxt[i]))
-            req.done = len(req.out) >= req.max_new
+        self.events.append("prefill")
+        pick = self._pick_tokens(logits)
+        for i, r in rows:
+            if r.fed == len(r.prompt):
+                self._emit(r, pick(i))
+        return True
 
-    def step(self):
-        """One decode step for all active slots; finished/empty slots are
-        masked out (no cache write, no length advance)."""
+    def step(self) -> bool:
+        """One decode step for all decode-ready slots; finished, empty and
+        mid-prefill slots are masked out (no cache write, no length
+        advance)."""
         tokens = np.zeros((self.slots, 1), np.int32)
         active = np.zeros((self.slots,), bool)
         for i, r in enumerate(self.active):
-            if r is not None and not r.done and r.out:
+            if (r is not None and not r.done and r.out
+                    and r.fed == len(r.prompt)):
                 tokens[i, 0] = r.out[-1]
                 active[i] = True
+        if not active.any():
+            return False
+        self._sync_table()
         logits, self.cache = self._decode(
             self.params, jnp.asarray(tokens), self.cache,
             active=jnp.asarray(active),
         )
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1))
+        self.events.append("decode")
+        pick = self._pick_tokens(logits)
         for i, r in enumerate(self.active):
-            if r is None or r.done:
-                continue
-            r.out.append(int(nxt[i]))
-            if len(r.out) >= r.max_new:
-                r.done = True
+            if active[i]:
+                self._emit(r, pick(i))
+        return True
 
-    def run(self, requests: list[Request]) -> dict:
+    def run(self, requests: list[Request],
+            on_token: Callable[[Request, int], None] | None = None) -> dict:
+        """Serve ``requests`` to completion. ``on_token(request, token)``
+        streams each decoded token to the caller as it is sampled."""
+        self._on_token = on_token
         pending = list(requests)
         done: list[Request] = []
         steps = 0
         t0 = time.time()
-        while True:
-            # retire finished slots — including requests whose single
-            # token came straight from the previous prefill wave
-            for i, r in enumerate(self.active):
-                if r is not None and r.done:
-                    done.append(r)
-                    self.active[i] = None
-            if pending and any(s is None for s in self.active):
-                self._fill_slots(pending)
-                continue  # retire prefill-finished requests, refill more
-            if not any(r is not None for r in self.active):
+        try:
+            while True:
+                # retire finished slots — including requests whose single
+                # token came straight from the previous prefill wave
+                for i, r in enumerate(self.active):
+                    if r is not None and r.done:
+                        self._retire(i, r, done)
+                if pending and any(s is None for s in self.active):
+                    if self._fill_slots(pending):
+                        continue  # retire prefill-finished, refill more
+                # interleave: one chunk of prompt feeding, then one decode
+                # step — a long prompt never stalls ongoing decodes
+                fed = self._prefill_wave()
+                stepped = self.step()
+                if stepped:
+                    steps += 1
+                if fed or stepped:
+                    continue
+                if any(r is not None and r.done for r in self.active):
+                    continue  # retire at loop top
+                if any(r is not None for r in self.active):
+                    raise RuntimeError("scheduler stalled with live slots")
+                if pending:
+                    continue  # slots all free: next _fill_slots admits
                 break
-            self.step()
-            steps += 1
+        finally:
+            self._on_token = None
         dt = time.time() - t0
         toks = sum(len(r.out) for r in done)
-        return {
+        stats = {
             "requests": len(done), "tokens": toks, "seconds": dt,
             "tok_per_s": toks / max(dt, 1e-9), "decode_steps": steps,
             "prefill_waves": len(self.buckets_used),
@@ -172,6 +378,18 @@ class BatchedServer:
             "prefill_compiles": self._prefill._cache_size(),
             "decode_compiles": self._decode._cache_size(),
         }
+        if done:
+            reserved = [r.kv_reserved_bytes for r in done]
+            stats["kv_bytes_reserved_per_request"] = {
+                "mean": int(np.mean(reserved)), "max": int(max(reserved)),
+            }
+        if self.paged:
+            stats["pages"] = {
+                **self.alloc.stats(),
+                "page_size": self.page_size,
+                "leaked": self.alloc.in_use,
+            }
+        return stats
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -199,6 +417,25 @@ def build_parser() -> argparse.ArgumentParser:
                          "cycled over requests (overrides --prompt-len), "
                          "e.g. 4,16,23")
     ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--paged", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="paged KV cache: per-request page reservations "
+                         "from a shared pool instead of batch x max_len "
+                         "contiguous strips")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged mode)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="KV page pool size (0 = batch * pages-per-row, "
+                         "i.e. dense-equivalent capacity)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prompts into N-token prefill waves "
+                         "interleaved with decode steps (0 = whole prompt)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax (default); > 0 samples")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="keep only the k most likely tokens (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -244,13 +481,29 @@ def main(argv=None):
                                 dtype=np.int32), args.gen)
         for i in range(args.requests)
     ]
-    server = BatchedServer(model, params, args.batch,
-                           max(plens) + args.gen + 8)
+    server = BatchedServer(
+        model, params, args.batch, max(plens) + args.gen + 8,
+        paged=args.paged, page_size=args.page_size,
+        num_pages=args.num_pages or None,
+        prefill_chunk=args.prefill_chunk,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed,
+    )
     stats = server.run(reqs)
     # decode reads every weight once per step: bytes/token on one chip
     stats["weight_bytes_per_token"] = w_bytes
     stats["engine"] = args.engine if args.bits else "fp"
     print(f"[serve] {stats}")
+    if stats["requests"] != len(reqs):
+        print(f"[serve] FAIL: served {stats['requests']}/{len(reqs)}")
+        return 1
+    if stats["decode_compiles"] > 1:
+        print(f"[serve] FAIL: decode compiled "
+              f"{stats['decode_compiles']}x (must be at most once)")
+        return 1
+    if args.paged and stats["pages"]["leaked"]:
+        print(f"[serve] FAIL: {stats['pages']['leaked']} KV pages leaked")
+        return 1
     return 0
 
 

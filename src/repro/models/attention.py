@@ -45,6 +45,13 @@ def _flash_scope():
     return contextlib.nullcontext()
 
 
+def _use_paged_kernel() -> bool:
+    """Route paged decode through the Pallas kernel. On TPU it runs
+    compiled; tests monkeypatch this to exercise the dispatch glue in
+    interpret mode on CPU (CI would otherwise never trace it)."""
+    return jax.default_backend() == "tpu"
+
+
 def init_attention(rng, cfg, dtype) -> dict:
     d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
     ks = jax.random.split(rng, 4)
@@ -93,6 +100,12 @@ def _sdpa(
 ) -> jax.Array:
     """GQA via explicit KV-head expansion.
 
+    Fully-masked query rows (no valid key at all — an empty request slot)
+    return EXACT zeros: softmax over an all-``NEG_INF`` row is uniform (the
+    max subtraction turns every score into ``exp(0)``), which would silently
+    average garbage keys. The explicit guard makes "attends nothing" mean
+    "outputs nothing" instead of clamping in one fake key.
+
     Expanding K/V to H heads (instead of a (KV, G) split) keeps the score
     tensor shardable on the *head* dim even when KV doesn't divide the TP
     degree (kv=8 on a 16-wide model axis): with the (KV, G) formulation
@@ -103,6 +116,7 @@ def _sdpa(
     b, sq, h, hd = q.shape
     kvh = k.shape[2]
     g = h // kvh
+    any_valid = mask.any(axis=-1)  # (B, Sq)
     if g > 1 and sq == 1:
         # decode: grouped formulation — expanding K/V would re-materialize
         # the whole 32k cache x G per token (~600 GB/step at internlm2
@@ -114,6 +128,7 @@ def _sdpa(
         scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
         w = jax.nn.softmax(scores, axis=-1)
         out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+        out = jnp.where(any_valid[:, :, None, None, None], out, 0.0)
         return out.reshape(b, sq, h, hd).astype(q.dtype)
     if g > 1:
         k = jnp.repeat(k, g, axis=2)
@@ -125,6 +140,7 @@ def _sdpa(
     scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", w, vf)
+    out = jnp.where(any_valid[:, :, None, None], out, 0.0)
     return out.astype(q.dtype)
 
 
@@ -179,11 +195,13 @@ def attention_block(
     layer_window: jax.Array | int = 0,
     layer_chunk: jax.Array | int = 0,
     kv_cache: jax.Array | None = None,   # (2, B, Smax, KV, hd)
+    kv_pages: jax.Array | None = None,   # (2, P, page, KV, hd) paged pool
+    page_table: jax.Array | None = None,  # (B, NP) with kv_pages
     cache_len: jax.Array | None = None,  # (B,) per-row fill (scalar ok)
     seq_lens: jax.Array | None = None,   # (B,) valid new tokens per row
     cross_kv: tuple[jax.Array, jax.Array] | None = None,
 ) -> tuple[jax.Array, jax.Array | None]:
-    """Returns (output (B,S,D), updated kv_cache or None).
+    """Returns (output (B,S,D), updated kv_cache/kv_pages or None).
 
     Self-attention when ``cross_kv`` is None; cross-attention (no cache
     update, no RoPE on k) otherwise.
@@ -193,6 +211,15 @@ def attention_block(
     (no KV write, frozen valid length) and rows with ``seq_lens < S`` only
     expose their true prefix to attention — right-padded batched prefill
     and inactive-slot decode both reduce to this one contract.
+
+    Paged layout (``kv_pages`` + ``page_table`` instead of ``kv_cache``):
+    identical contract over a shared page pool — writes scatter into each
+    row's physical pages and attention reads the row's logical view. Since
+    logical position == absolute position, RoPE and every mask are shared
+    with the contiguous path. Decode on TPU dispatches to the Pallas
+    paged-attention kernel; elsewhere (and for prefill) the logical gather
+    feeds the exact same ``attend`` math as the dense path, so paged and
+    contiguous decoding are bit-identical on CPU CI.
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -229,10 +256,40 @@ def attention_block(
         k = apply_rope(k, pos, cfg.rope_theta)
         pos1 = pos
 
-    if kv_cache is None:
+    if kv_cache is None and kv_pages is None:
         out = attend(q, k, v, pos1, pos1, causal=True,
                      window=layer_window, chunk=layer_chunk)
         new_cache = None
+    elif kv_pages is not None:
+        from repro.kvcache.paged import logical_view, paged_write
+
+        starts = jnp.broadcast_to(
+            jnp.atleast_1d(cache_len), (b,)
+        ).astype(jnp.int32)
+        new_cache = paged_write(kv_pages, k, v, page_table, starts, seq_lens)
+        inc = s if seq_lens is None else seq_lens.astype(jnp.int32)
+        k_len = starts + inc
+        if s == 1 and _use_paged_kernel():
+            from repro.kernels.paged_attention import paged_attention_pallas
+
+            # kv-major head split: h = (kvh, g), matching _sdpa's grouped
+            # decode reshape and the kernel's (B, KV, G, hd) layout
+            qg = q[:, 0].reshape(b, kvh, h // kvh, hd)
+            og = paged_attention_pallas(
+                qg, new_cache[0], new_cache[1], page_table, k_len,
+                window=layer_window, chunk=layer_chunk,
+                interpret=jax.default_backend() != "tpu",
+            )
+            out = og.reshape(b, 1, h, hd)
+        else:
+            kl, vl = logical_view(new_cache, page_table)
+            s_log = kl.shape[1]
+            k_pos = jnp.broadcast_to(jnp.arange(s_log)[None], (b, s_log))
+            out = attend(
+                q, kl.astype(q.dtype), vl.astype(q.dtype), pos1, k_pos,
+                causal=True, window=layer_window, chunk=layer_chunk,
+                k_len=k_len,
+            )
     else:
         smax = kv_cache.shape[2]
         starts = jnp.broadcast_to(
@@ -250,28 +307,34 @@ def attention_block(
                                   starts)
             k_len = starts + s
         else:
-            # frozen rows (seq_lens == 0) must keep their cache bytes: a
-            # whole-buffer select would traverse O(B*Smax) every decode
-            # step, so instead gather the s rows at each offset, select on
-            # that tile, and write back — O(B*s) on the decode hot path
-            keep = seq_lens > 0
+            # per-position masked scatter, O(B*s) on the decode hot path:
+            # frozen rows (seq_lens == 0), right-padding beyond each row's
+            # length, and positions past the buffer all map to an
+            # out-of-bounds index and are DROPPED. A dynamic_update_slice
+            # of the padded tile would instead CLAMP its start when
+            # ``starts + s > Smax`` (late chunked-prefill wave of a nearly
+            # full row) and silently shift the tile onto live positions.
+            t = starts[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
+            valid = (jnp.arange(s, dtype=jnp.int32)[None]
+                     < seq_lens.astype(jnp.int32)[:, None]) & (t < smax)
+            rows_idx = jnp.arange(b, dtype=jnp.int32)[:, None] * smax
+            flat_t = jnp.where(valid, rows_idx + t, b * smax)  # OOB => drop
+            idx = flat_t.reshape(b * s)
+            kvh_, hd_ = kv_cache.shape[-2:]
 
-            def _masked_write(row, new, s0, live):
-                old = jax.lax.dynamic_slice(row, (s0, 0, 0), new.shape)
-                return jax.lax.dynamic_update_slice(
-                    row, jnp.where(live, new, old), (s0, 0, 0)
+            def _scatter(buf, new):
+                flat = buf.reshape(b * smax, kvh_, hd_)
+                flat = flat.at[idx].set(
+                    new.astype(kv_cache.dtype).reshape(b * s, kvh_, hd_),
+                    mode="drop",
                 )
+                return flat.reshape(b, smax, kvh_, hd_)
 
-            kc = jax.vmap(_masked_write)(
-                kv_cache[0], k.astype(kv_cache.dtype), starts, keep
-            )
-            vc = jax.vmap(_masked_write)(
-                kv_cache[1], v.astype(kv_cache.dtype), starts, keep
-            )
+            kc = _scatter(kv_cache[0], k)
+            vc = _scatter(kv_cache[1], v)
             k_len = starts + seq_lens.astype(jnp.int32)
-        # a fully-masked row (empty slot) would softmax over -inf -> NaN;
-        # one zero-key is harmless and the row's output is discarded anyway
-        k_len = jnp.maximum(k_len, 1)
+        # fully-masked rows (k_len == 0) come out as exact zeros via the
+        # _sdpa guard — no clamp-in-one-garbage-key fallback needed
         new_cache = jnp.stack([kc, vc])
         k_pos = jnp.broadcast_to(jnp.arange(smax)[None], (b, smax))
         out = attend(

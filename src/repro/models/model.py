@@ -66,6 +66,7 @@ class Model:
     prefill: Callable[..., tuple[jax.Array, Any]]
     decode_step: Callable[..., tuple[jax.Array, Any]]
     init_cache: Callable[..., Any]
+    init_paged_cache: Callable[..., Any]
     input_specs: Callable[[ShapeConfig], dict]
     cache_specs: Callable[[ShapeConfig], Any]
 
@@ -177,6 +178,48 @@ def build_model(cfg: ArchConfig) -> Model:
         )
         return cache
 
+    # Paged cache contract: attention KV lives in a shared pool of
+    # ``num_pages`` fixed-size pages per layer; each slot addresses its
+    # logical positions through ``page_table`` (B, ceil(max_len/page_size))
+    # rows of physical page ids (managed host-side by kvcache.PageAllocator).
+    # ``max_len`` becomes a PER-REQUEST logical cap (the table width), not a
+    # reservation: memory actually committed per request is its page count.
+    # Recurrent leaves (ssm/conv/wkv/shift_*) stay dense — per-slot ``len``
+    # masking already makes positional KV the only leaf that scales with
+    # sequence length.
+    def init_paged_cache(batch_size: int, max_len: int, *, page_size: int,
+                         num_pages: int):
+        L = cfg.n_layers
+        if cfg.family == "ssm":
+            raise ValueError(
+                f"{cfg.name}: pure-SSM family has no attention KV to page"
+            )
+        n_pages_row = -(-max_len // page_size)
+        cache: dict = {
+            "len": jnp.zeros((batch_size,), jnp.int32),
+            "page_table": jnp.zeros((batch_size, n_pages_row), jnp.int32),
+        }
+        if cfg.family == "hybrid":
+            di, nh, conv_dim = ssm_mod.mamba2_dims(cfg)
+            s = cfg.ssm
+            cache["ssm"] = jnp.zeros(
+                (L, batch_size, nh, s.d_state, s.head_dim), jnp.float32
+            )
+            cache["conv"] = jnp.zeros(
+                (L, batch_size, s.d_conv - 1, conv_dim), dt
+            )
+            if cfg.shared_attn_every:
+                napps = cfg.n_layers // cfg.shared_attn_every
+                cache["shared_pages"] = jnp.zeros(
+                    (napps, 2, num_pages, page_size, cfg.n_kv_heads, cfg.hd),
+                    dt,
+                )
+            return cache
+        cache["pages"] = jnp.zeros(
+            (L, 2, num_pages, page_size, cfg.n_kv_heads, cfg.hd), dt
+        )
+        return cache
+
     # -- serving -------------------------------------------------------------
     def prefill(params, batch, cache):
         """Process the full prompt; returns (last-position logits, cache).
@@ -186,8 +229,16 @@ def build_model(cfg: ArchConfig) -> Model:
         its true prefix into the cache (rows with length 0 are untouched —
         they keep serving their live request), ``cache["len"]`` advances
         per row, and the returned logits are taken at each row's own last
-        real token."""
+        real token.
+
+        Positions are offset by each row's ``cache["len"]``, so CHUNKED
+        prefill falls out of the same contract: feeding a prompt in waves
+        (rows mid-prompt keep their fill position; the next wave continues
+        at it) is position-exact for attention KV, and recurrent state
+        simply carries across waves. Fresh rows have ``len == 0`` — whole-
+        prompt prefill is the one-wave special case."""
         lengths = batch.get("lengths")
+        row_off = cache["len"].astype(jnp.int32)[:, None]
         if cfg.encdec:
             enc_out = tfm.encoder_forward(
                 cfg, params, batch["enc_embeds"].astype(dt)
@@ -195,7 +246,7 @@ def build_model(cfg: ArchConfig) -> Model:
             cross = tfm.build_cross_kv(cfg, params, enc_out)
             x = tfm.embed_tokens(cfg, params, batch["tokens"])
             b, s = batch["tokens"].shape
-            pos = _lm_positions(b, s)
+            pos = _lm_positions(b, s) + row_off
             hidden, cache, _ = tfm.decoder_forward(
                 cfg, params, x, pos, cache=cache, cross_kv=cross,
                 seq_lens=lengths,
@@ -204,6 +255,8 @@ def build_model(cfg: ArchConfig) -> Model:
             cache["cross_k"], cache["cross_v"] = cross
         else:
             x, pos = embed_batch(params, batch)
+            if pos.ndim == 2:  # M-RoPE (vlm) positions come from the batch
+                pos = pos + row_off
             hidden, cache, _ = tfm.decoder_forward(
                 cfg, params, x, pos, cache=cache, seq_lens=lengths
             )
@@ -300,5 +353,6 @@ def build_model(cfg: ArchConfig) -> Model:
     return Model(
         cfg=cfg, init=lambda rng: tfm.init_params(rng, cfg),
         train_loss=train_loss, prefill=prefill, decode_step=decode_step,
-        init_cache=init_cache, input_specs=input_specs, cache_specs=cache_specs,
+        init_cache=init_cache, init_paged_cache=init_paged_cache,
+        input_specs=input_specs, cache_specs=cache_specs,
     )

@@ -128,10 +128,13 @@ def layer_meta(cfg):
 
 
 def _shared_block(sp, cfg, x, pos, kv_slot=None, cache_len=None,
-                  seq_lens=None):
+                  seq_lens=None, page_table=None, paged=False):
     h, new_kv = attention_block(
         sp["attn"], cfg, rms_norm(x, sp["norm1_scale"], cfg.norm_eps), pos,
-        kv_cache=kv_slot, cache_len=cache_len, seq_lens=seq_lens,
+        kv_cache=None if paged else kv_slot,
+        kv_pages=kv_slot if paged else None,
+        page_table=page_table,
+        cache_len=cache_len, seq_lens=seq_lens,
     )
     x = x + h
     x = x + mlp(sp["mlp"], rms_norm(x, sp["norm2_scale"], cfg.norm_eps),
@@ -162,6 +165,12 @@ def decoder_forward(
     heterogeneous requests can share one cache without corrupting each
     other's positions. Rows with ``seq_lens == 0`` are frozen: no KV/state
     write, no length advance — the decode-time inactive-slot mask.
+
+    Paged cache contract: when the cache carries ``pages`` (attention
+    families) or ``shared_pages`` (zamba2 shared block) plus a
+    ``page_table``, attention KV lives in a shared page pool addressed per
+    row through the table; recurrent leaves (ssm/conv/wkv/shift) stay
+    dense — only positional KV benefits from paging.
     """
     if not remat_group:
         remat_group = getattr(cfg, "remat_group", 1)
@@ -169,6 +178,7 @@ def decoder_forward(
     layers = params["layers"]
     n_layers = cfg.n_layers
     cache_len = cache["len"] if cache is not None else None
+    page_table = cache.get("page_table") if cache is not None else None
     every = cfg.shared_attn_every
 
     def block(x, layer_params, window, chunk, layer_cache, layer_cross, idx,
@@ -218,7 +228,7 @@ def decoder_forward(
                     )
                     y, new_slot = _shared_block(
                         params["shared_attn"], cfg, xx, pos, kv_slot,
-                        cache_len, seq_lens,
+                        cache_len, seq_lens, page_table, shared_paged,
                     )
                     skv = jax.lax.dynamic_update_index_in_dim(
                         skv, new_slot.astype(skv.dtype), slot, 0
@@ -232,12 +242,16 @@ def decoder_forward(
                     (idx + 1) % every == 0, apply_shared, skip, (x, shared_kv)
                 )
         else:  # attention families
-            kv = layer_cache["kv"] if layer_cache is not None else None
+            kv = pages = None
+            if layer_cache is not None:
+                kv = layer_cache.get("kv")
+                pages = layer_cache.get("pages")
             h, new_kv = attention_block(
                 layer_params["attn"], cfg,
                 rms_norm(x, layer_params["norm1_scale"], cfg.norm_eps), pos,
                 layer_window=window, layer_chunk=chunk,
-                kv_cache=kv, cache_len=cache_len, seq_lens=seq_lens,
+                kv_cache=kv, kv_pages=pages, page_table=page_table,
+                cache_len=cache_len, seq_lens=seq_lens,
             )
             x = x + h
             if layer_cross is not None:
@@ -254,16 +268,21 @@ def decoder_forward(
                 h = mlp(layer_params["mlp"], h2, cfg.act, cfg.glu)
             x = x + h
             if layer_cache is not None:
-                new_cache = {"kv": new_kv}
+                new_cache = ({"pages": new_kv} if pages is not None
+                             else {"kv": new_kv})
         return x, new_cache, aux, shared_kv
 
     idxs = jnp.arange(n_layers, dtype=jnp.int32)
     per_layer_cache = None
     shared_kv0 = None
+    shared_paged = cache is not None and "shared_pages" in cache
     if cache is not None:
-        per_layer_cache = {k: v for k, v in cache.items()
-                           if k not in ("len", "shared_kv")}
-        shared_kv0 = cache.get("shared_kv")
+        per_layer_cache = {
+            k: v for k, v in cache.items()
+            if k not in ("len", "shared_kv", "shared_pages", "page_table")
+        }
+        shared_kv0 = (cache["shared_pages"] if shared_paged
+                      else cache.get("shared_kv"))
     cross = None
     if cross_kv is not None:
         cross = cross_kv  # (k, v) each (L, B, Senc, KV, hd)
@@ -335,7 +354,11 @@ def decoder_forward(
             inc = pos.shape[1] if pos.ndim >= 2 else 1
         new_cache["len"] = cache["len"] + inc
         if shared_kv is not None:
-            new_cache["shared_kv"] = shared_kv
+            new_cache["shared_pages" if shared_paged else "shared_kv"] = (
+                shared_kv
+            )
+        if page_table is not None:
+            new_cache["page_table"] = page_table
     return x, new_cache, aux_tot
 
 

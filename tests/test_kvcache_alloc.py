@@ -1,0 +1,141 @@
+"""PageAllocator invariants: no double-assignment, no leaks, refcounts.
+
+Property-style: a deterministic seeded random walk over alloc / free /
+retain always runs (the hypothesis-driven variant rides along when
+hypothesis is installed; offline CI gets it via the stub as a skip). The
+invariants after EVERY operation:
+
+* a live page is never handed out twice (all owner sets are disjoint),
+* ``free + in_use == total``,
+* releasing every owner returns the pool to zero pages in use.
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    from hypothesis_stub import hypothesis, st
+
+from repro.kvcache import OutOfPages, PageAllocator, pages_for
+
+
+def _random_walk(seed: int, num_pages: int, ops: int):
+    """Drive an allocator with a random op sequence, checking invariants
+    after every step; returns when every owner has been released."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages)
+    owners: list[list[int]] = []   # each entry = one owner's page list
+    live: list[int] = []           # multiset of live (page, owner) claims
+
+    def check():
+        assert alloc.free_pages + alloc.in_use == num_pages
+        # refcount-1 invariant: pages handed to distinct alloc() calls are
+        # disjoint; a page's total owner count matches its refcount
+        counts: dict[int, int] = {}
+        for pages in owners:
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        assert set(counts) == {p for p in counts if alloc.refcount(p) > 0}
+        for p, c in counts.items():
+            assert alloc.refcount(p) == c, (p, c, alloc.refcount(p))
+        assert alloc.in_use == len(counts)
+        assert 0.0 <= alloc.fragmentation() <= 1.0
+
+    for _ in range(ops):
+        op = rng.integers(0, 3)
+        if op == 0:  # alloc
+            n = int(rng.integers(0, max(num_pages // 2, 1)) )
+            if alloc.can_alloc(n):
+                pages = alloc.alloc(n)
+                assert len(pages) == n == len(set(pages))
+                # freshly allocated pages must not collide with live ones
+                flat = {p for o in owners for p in o}
+                assert not (set(pages) & flat), "double-assigned live page"
+                owners.append(pages)
+            else:
+                with pytest.raises(OutOfPages):
+                    alloc.alloc(n)
+        elif op == 1 and owners:  # free one owner
+            idx = int(rng.integers(0, len(owners)))
+            alloc.free(owners.pop(idx))
+        elif op == 2 and owners:  # retain: add a sharing owner
+            idx = int(rng.integers(0, len(owners)))
+            shared = list(owners[idx])
+            alloc.retain(shared)
+            owners.append(shared)
+        check()
+    while owners:
+        alloc.free(owners.pop())
+        check()
+    assert alloc.in_use == 0, "pages leaked"
+    assert alloc.free_pages == num_pages
+    return alloc
+
+
+def test_random_walk_never_double_assigns_never_leaks():
+    for seed in range(5):
+        _random_walk(seed, num_pages=13, ops=120)
+
+
+@hypothesis.given(st.integers(min_value=0, max_value=10_000),
+                  st.integers(min_value=1, max_value=64),
+                  st.integers(min_value=1, max_value=200))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_random_walk_property(seed, num_pages, ops):
+    _random_walk(seed, num_pages, ops)
+
+
+def test_refcounted_page_survives_partial_free():
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(2)
+    alloc.retain(pages)          # second owner (shared prefix)
+    alloc.free(pages)            # first owner drops
+    assert alloc.in_use == 2     # still live under the second owner
+    assert all(alloc.refcount(p) == 1 for p in pages)
+    reuse = alloc.alloc(2)       # the two remaining free pages
+    assert not (set(reuse) & set(pages))
+    alloc.free(pages)
+    assert alloc.in_use == 2     # only `reuse` remains
+    alloc.free(reuse)
+    assert alloc.in_use == 0
+
+
+def test_error_paths():
+    alloc = PageAllocator(2)
+    with pytest.raises(OutOfPages):
+        alloc.alloc(3)
+    pages = alloc.alloc(2)
+    with pytest.raises(KeyError):
+        alloc.free([99])                 # never allocated
+    alloc.free(pages)
+    with pytest.raises(KeyError):
+        alloc.free(pages)                # double free
+    with pytest.raises(KeyError):
+        alloc.retain(pages)              # retain of a free page
+    with pytest.raises(ValueError):
+        PageAllocator(0)
+
+
+def test_stats_and_fragmentation():
+    alloc = PageAllocator(8)
+    a = alloc.alloc(4)
+    assert alloc.stats()["in_use"] == 4
+    assert alloc.stats()["peak_in_use"] == 4
+    alloc.free(a)
+    s = alloc.stats()
+    assert s["free"] == 8 and s["in_use"] == 0 and s["peak_in_use"] == 4
+    # LIFO free list: page ids are recycled, still no double assignment
+    b = alloc.alloc(8)
+    assert sorted(b) == list(range(8))
+    alloc.free(b)
+    assert alloc.fragmentation() == 0.0  # whole pool is one free run
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(33, 8) == 5

@@ -1,0 +1,405 @@
+"""Paged KV-cache subsystem: paged == contiguous, token for token.
+
+The contract under test (the paged-serving tentpole):
+* every request served through a PAGED ``BatchedServer`` — shuffled
+  physical pages, shared pool, per-request reservations — produces
+  token-for-token the same output as a fresh isolated single-request
+  decode on a contiguous cache (attention and hybrid cache families),
+* chunked prefill (prompt fed in page-sized waves) produces identical
+  tokens to whole-prompt prefill while interleaving decode steps for
+  ongoing requests between waves,
+* the Pallas paged-attention kernel (interpret mode) matches the pure-jnp
+  reference, including sliding-window / chunked masks and page-table
+  indirection,
+* fully-masked rows (``len == 0``) produce EXACT zeros from attention —
+  the regression for the old ``k_len = max(k_len, 1)`` clamp that silently
+  attended one garbage key.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.paged_attention import (
+    paged_attention_pallas,
+    paged_attention_reference,
+)
+from repro.launch.serve import BatchedServer, Request
+from repro.models import build_model
+from repro.models.attention import attention_block, init_attention
+
+
+def _tiny_model(arch="llama32-1b", n_layers=2, seed=0):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _isolated_decode(model, params, prompt: np.ndarray, gen: int,
+                     max_len: int) -> list[int]:
+    """Greedy decode of one request alone in a fresh contiguous cache."""
+    cache = model.init_cache(1, max_len)
+    logits, cache = model.prefill(
+        params, {"tokens": jnp.asarray(prompt[None])}, cache
+    )
+    out = [int(jnp.argmax(logits[0, -1]))]
+    while len(out) < gen:
+        logits, cache = model.decode_step(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache
+        )
+        out.append(int(jnp.argmax(logits[0, 0])))
+    return out
+
+
+def _requests(cfg, lens, gen, seed0=100):
+    return [
+        Request(i, np.random.default_rng(seed0 + i).integers(
+            0, cfg.vocab_size, ln, dtype=np.int32), gen)
+        for i, ln in enumerate(lens)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Paged serving == contiguous serving == isolated decode
+# ---------------------------------------------------------------------------
+
+
+def test_paged_slot_swap_matches_isolated():
+    """Acceptance: heterogeneous prompts (incl. exact page multiples and
+    generations crossing page boundaries) through a paged server with a
+    pool SMALLER than slots x max_len — every request token-for-token
+    equals its isolated contiguous decode."""
+    cfg, model, params = _tiny_model()
+    gen, max_len, page = 3, 48, 8
+    lens = [4, 16, 23, 8, 17, 9]  # 8 = exact page; 23+2 crosses a boundary
+    reqs = _requests(cfg, lens, gen)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len,
+                           paged=True, page_size=page, num_pages=8)
+    assert server.num_pages < 2 * (max_len // page), "pool must undercut dense"
+    stats = server.run(reqs)
+    assert stats["requests"] == len(lens)
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, len(r.prompt), r.out, want)
+    assert stats["decode_compiles"] == 1, stats
+    assert stats["pages"]["leaked"] == 0, stats
+    assert stats["pages"]["peak_in_use"] <= 8, stats
+    # per-request reservation is by need, not by global max_len
+    assert stats["kv_bytes_reserved_per_request"]["max"] < (
+        server._page_bytes * (max_len // page)
+    ), stats
+
+
+@pytest.mark.parametrize("arch", ["zamba2-1.2b"])
+def test_paged_slot_swap_hybrid_family(arch):
+    """Hybrid (mamba2 + shared attention): only the shared-attention KV is
+    paged; recurrent ssm/conv rows stay dense. Slot swaps must still match
+    isolated decoding exactly."""
+    cfg, model, params = _tiny_model(arch, n_layers=4, seed=1)
+    gen, max_len = 3, 32
+    reqs = _requests(cfg, [4, 9, 5], gen)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len,
+                           paged=True, page_size=4, num_pages=10)
+    stats = server.run(reqs)
+    assert stats["requests"] == 3
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (arch, r.rid, r.out, want)
+    assert stats["pages"]["leaked"] == 0, stats
+    assert stats["decode_compiles"] == 1, stats
+
+
+def test_paged_composes_with_packed_engine():
+    """The paged gather/scatter must compose with the packed quantized
+    kernel path (fused QKV/gate+up launches feed the paged writes)."""
+    from repro.core import QuantPolicy, restructure
+
+    cfg, model, params = _tiny_model()
+    qm = restructure(params, QuantPolicy(bits=4, packed=True))
+    ex = qm.as_executable(group=True)
+    gen, max_len = 3, 32
+    reqs = _requests(cfg, [4, 11, 6], gen)
+    server = BatchedServer(model, ex, batch_slots=2, max_len=max_len,
+                           paged=True, page_size=8, num_pages=6,
+                           prefill_chunk=8)
+    stats = server.run(reqs)
+    assert stats["requests"] == 3
+    for r in reqs:
+        want = _isolated_decode(model, ex, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, r.out, want)
+    assert stats["pages"]["leaked"] == 0
+    assert stats["decode_compiles"] == 1
+
+
+def test_paged_pool_backpressure_defers_admission():
+    """When the free-page budget can't host another request, admission
+    waits for a retirement instead of failing — and every request still
+    completes correctly."""
+    cfg, model, params = _tiny_model()
+    gen, page = 2, 4
+    lens = [14, 13, 12, 5]
+    reqs = _requests(cfg, lens, gen)
+    # each request needs ceil((len+1)/4) pages: 4,4,4,2 — pool of 6 forces
+    # strictly serial admission even though 2 slots are free
+    server = BatchedServer(model, params, batch_slots=2, max_len=24,
+                           paged=True, page_size=page, num_pages=6)
+    stats = server.run(reqs)
+    assert stats["requests"] == len(lens)
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, 24)
+        assert r.out == want, (r.rid, r.out, want)
+    assert stats["pages"]["leaked"] == 0
+    assert stats["pages"]["peak_in_use"] <= 6
+
+
+def test_paged_request_larger_than_pool_rejected():
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=1, max_len=40,
+                           paged=True, page_size=4, num_pages=3)
+    [big] = _requests(cfg, [20], gen=4)  # needs 6 pages > pool of 3
+    with pytest.raises(ValueError, match="pool size"):
+        server._fill_slots([big])
+
+
+def test_zero_gen_request_rejected():
+    """max_new == 0 under-reserves pages (prompt - 1 rows) while prefill
+    writes the full prompt — the tail would scatter into a live
+    neighbour's page. Rejected up front, dense and paged alike."""
+    cfg, model, params = _tiny_model()
+    for kw in ({}, {"paged": True, "page_size": 8, "num_pages": 6}):
+        server = BatchedServer(model, params, batch_slots=1, max_len=24,
+                               **kw)
+        [zero] = _requests(cfg, [9], gen=1)
+        zero.max_new = 0
+        with pytest.raises(ValueError, match="max_new"):
+            server._fill_slots([zero])
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_prefill_matches_whole_prompt_and_interleaves():
+    """Acceptance: a prompt longer than the decode bucket is fed in
+    page-sized waves; tokens are identical to whole-prompt prefill AND at
+    least one decode step runs between prefill waves (the long prompt must
+    not stall the short request's decode)."""
+    cfg, model, params = _tiny_model()
+    gen, max_len = 6, 64
+    lens = [5, 33, 6]  # 33 >> chunk of 8 -> 5 waves
+    reqs = _requests(cfg, lens, gen)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len,
+                           paged=True, page_size=8, num_pages=12,
+                           prefill_chunk=8)
+    stats = server.run(reqs)
+    assert stats["requests"] == len(lens)
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, len(r.prompt), r.out, want)
+    assert stats["decode_compiles"] == 1, stats
+    assert stats["pages"]["leaked"] == 0, stats
+    # interleave proof: some decode step ran BETWEEN two prefill waves
+    ev = server.events
+    first_p, last_p = ev.index("prefill"), len(ev) - 1 - ev[::-1].index("prefill")
+    assert "decode" in ev[first_p:last_p], ev
+    # chunking bounds the prefill bucket: never the whole 33-token prompt
+    assert max(stats["prefill_buckets"]) <= 8, stats
+
+
+def test_chunked_prefill_final_wave_at_buffer_edge_dense():
+    """Regression: a late chunk wave whose PADDED bucket tile overruns the
+    cache buffer (starts + bucket > max_len) must not corrupt live KV. A
+    dynamic_update_slice would clamp its start and shift the tile onto
+    positions 1..7; the per-position scatter drops the padding instead."""
+    cfg, model, params = _tiny_model()
+    gen, max_len = 1, 9
+    reqs = _requests(cfg, [9], gen)  # 9 + 1 - 1 == max_len: admissible
+    server = BatchedServer(model, params, batch_slots=1, max_len=max_len,
+                           prefill_chunk=8)  # final wave: starts=8, lb=8
+    server.run(reqs)
+    want = _isolated_decode(model, params, reqs[0].prompt, gen, max_len)
+    assert reqs[0].out == want, (reqs[0].out, want)
+
+
+def test_chunked_prefill_dense_cache():
+    """Chunked prefill is orthogonal to paging: the contiguous cache path
+    must produce identical tokens too."""
+    cfg, model, params = _tiny_model(seed=2)
+    gen, max_len = 4, 48
+    lens = [21, 4]
+    reqs = _requests(cfg, lens, gen, seed0=40)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len,
+                           prefill_chunk=8)
+    stats = server.run(reqs)
+    assert stats["requests"] == 2
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, r.out, want)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-3b", "zamba2-1.2b"])
+def test_chunked_prefill_recurrent_families(arch):
+    """Recurrent state (wkv/ssm/conv/shift carries) must continue exactly
+    across prefill waves — chunked prefill is a state-carry stress test."""
+    cfg, model, params = _tiny_model(arch, n_layers=2, seed=1)
+    gen, max_len = 3, 32
+    reqs = _requests(cfg, [13, 4], gen)
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len,
+                           prefill_chunk=4)
+    stats = server.run(reqs)
+    assert stats["requests"] == 2
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (arch, r.rid, r.out, want)
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged-attention kernel vs reference
+# ---------------------------------------------------------------------------
+
+
+def test_paged_attention_kernel_matches_reference():
+    rng = np.random.default_rng(0)
+    b, kvh, g, hd, p_total, page, n_pages = 3, 2, 4, 32, 16, 8, 4
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(p_total, page, kvh, hd)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(p_total, page, kvh, hd)).astype(np.float32))
+    # shuffled, non-overlapping physical pages per row
+    pt = jnp.asarray(rng.permutation(p_total)[: b * n_pages]
+                     .reshape(b, n_pages).astype(np.int32))
+    lens = jnp.asarray([17, 1, 31], jnp.int32)
+    for kw in ({}, {"window": 9}, {"chunk": 16}):
+        ref = paged_attention_reference(q, kp, vp, pt, lens, **kw)
+        out = paged_attention_pallas(q, kp, vp, pt, lens, interpret=True,
+                                     **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, rtol=2e-5, err_msg=str(kw))
+
+
+def test_attention_block_kernel_dispatch_glue(monkeypatch):
+    """CPU CI never takes the TPU kernel branch of attention_block — force
+    it (interpret mode) and pin that the dispatch glue (kv-major q reshape,
+    post-write k_len, window/chunk passthrough) matches the gather path."""
+    import repro.kernels.paged_attention as pa_mod
+    import repro.models.attention as attn_mod
+
+    cfg, _, _ = _tiny_model()
+    p = init_attention(jax.random.PRNGKey(5), cfg, jnp.float32)
+    rng = np.random.default_rng(6)
+    b, smax, page, pool = 2, 16, 4, 10
+    n_pages = smax // page
+    x = jnp.asarray(rng.normal(size=(b, 1, cfg.d_model)).astype(np.float32))
+    lens = jnp.asarray([7, 3], jnp.int32)
+    pos = lens[:, None]
+    pages = jnp.asarray(rng.normal(
+        size=(2, pool, page, cfg.n_kv_heads, cfg.hd)).astype(np.float32))
+    table = jnp.asarray(rng.permutation(pool)[: b * n_pages]
+                        .reshape(b, n_pages).astype(np.int32))
+
+    def paged(window=0):
+        return attention_block(
+            p, cfg, x, pos, kv_pages=pages, page_table=table,
+            cache_len=lens, seq_lens=jnp.asarray([1, 1], jnp.int32),
+            layer_window=window,
+        )
+
+    out_ref, cache_ref = paged()
+    calls = {"n": 0}
+    real = pa_mod.paged_attention_pallas
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        assert k.get("interpret"), "CPU dispatch must use interpret mode"
+        return real(*a, **k)
+
+    monkeypatch.setattr(pa_mod, "paged_attention_pallas", counting)
+    monkeypatch.setattr(attn_mod, "_use_paged_kernel", lambda: True)
+    out_k, cache_k = paged()
+    assert calls["n"] == 1, "kernel branch was not taken"
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_array_equal(np.asarray(cache_k), np.asarray(cache_ref))
+    out_w, _ = paged(window=4)  # window plumb-through, still via kernel
+    assert calls["n"] == 2
+    monkeypatch.setattr(attn_mod, "_use_paged_kernel", lambda: False)
+    out_w_ref, _ = paged(window=4)
+    np.testing.assert_allclose(np.asarray(out_w), np.asarray(out_w_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_kernel_empty_row_exact_zeros():
+    """len == 0 rows must come out EXACTLY zero (not a garbage average —
+    the online-softmax p-masking guard)."""
+    rng = np.random.default_rng(1)
+    b, kvh, g, hd, p_total, page, n_pages = 2, 1, 2, 32, 8, 8, 3
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(p_total, page, kvh, hd)).astype(np.float32))
+    vp = jnp.asarray(rng.normal(size=(p_total, page, kvh, hd)).astype(np.float32))
+    pt = jnp.zeros((b, n_pages), jnp.int32)
+    lens = jnp.asarray([0, 5], jnp.int32)
+    out = paged_attention_pallas(q, kp, vp, pt, lens, interpret=True)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+    assert np.abs(np.asarray(out[1])).max() > 0
+
+
+# ---------------------------------------------------------------------------
+# Fully-masked softmax guard (replaces the k_len >= 1 clamp)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_row_attention_is_exact_zero_not_garbage_key():
+    """Regression: rows with NO valid key (empty/frozen slot, k_len == 0)
+    used to clamp in one garbage key; they must now produce exact zeros
+    with no NaN — for both the dense and the paged cache layouts."""
+    cfg, _, _ = _tiny_model()
+    p = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    b, s, smax = 2, 1, 16
+    x = jnp.asarray(np.random.default_rng(2).normal(
+        size=(b, s, cfg.d_model)).astype(np.float32))
+    pos = jnp.zeros((b, s), jnp.int32)
+    # row 0 empty (len 0, frozen), row 1 has 3 cached keys and writes one
+    kv = jnp.asarray(np.random.default_rng(3).normal(
+        size=(2, b, smax, cfg.n_kv_heads, cfg.hd)).astype(np.float32))
+    out, _ = attention_block(
+        p, cfg, x, pos, kv_cache=kv,
+        cache_len=jnp.asarray([0, 3], jnp.int32),
+        seq_lens=jnp.asarray([0, 1], jnp.int32),
+    )
+    out = np.asarray(out)
+    assert np.isfinite(out).all()
+    np.testing.assert_array_equal(out[0], 0.0)
+    assert np.abs(out[1]).max() > 0
+    # paged layout, same contract
+    pages = jnp.asarray(np.random.default_rng(4).normal(
+        size=(2, 6, 4, cfg.n_kv_heads, cfg.hd)).astype(np.float32))
+    table = jnp.asarray([[5, 2, 0, 1], [3, 4, 1, 0]], jnp.int32)
+    out_p, _ = attention_block(
+        p, cfg, x, pos, kv_pages=pages, page_table=table,
+        cache_len=jnp.asarray([0, 3], jnp.int32),
+        seq_lens=jnp.asarray([0, 1], jnp.int32),
+    )
+    out_p = np.asarray(out_p)
+    assert np.isfinite(out_p).all()
+    np.testing.assert_array_equal(out_p[0], 0.0)
+
+
+def test_decode_all_slots_empty_no_nan():
+    """A decode step where EVERY slot is empty/inactive must stay finite
+    end-to-end (the old clamp hid this; the guard must too — by design,
+    not by accident)."""
+    cfg, model, params = _tiny_model()
+    cache = model.init_cache(2, 16)
+    logits, cache2 = model.decode_step(
+        params, jnp.zeros((2, 1), jnp.int32), cache,
+        active=jnp.asarray([False, False]),
+    )
+    assert np.isfinite(np.asarray(logits)).all()
+    np.testing.assert_array_equal(np.asarray(cache2["len"]),
+                                  np.asarray(cache["len"]))

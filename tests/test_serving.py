@@ -19,7 +19,12 @@ import pytest
 
 from repro.configs import get_config
 from repro.core import QuantPolicy, restructure
-from repro.launch.serve import BatchedServer, Request, build_parser
+from repro.launch.serve import (
+    BatchedServer,
+    Request,
+    build_parser,
+    sample_token,
+)
 from repro.models import build_model
 
 
@@ -265,6 +270,58 @@ def test_admission_rejects_requests_that_cannot_fit():
     [fits] = _requests(cfg, [8], gen=5)
     stats = server3.run([fits])
     assert stats["requests"] == 1 and len(fits.out) == 5
+
+
+def test_streaming_callback_receives_every_token_in_order():
+    """``run(requests, on_token=...)`` must stream each sampled token as it
+    is produced; per request, the streamed sequence equals ``out``."""
+    cfg, model, params = _tiny_model()
+    reqs = _requests(cfg, [6, 9, 4], gen=3)
+    streamed: dict[int, list[int]] = {}
+    server = BatchedServer(model, params, batch_slots=2, max_len=32)
+    stats = server.run(
+        reqs, on_token=lambda r, t: streamed.setdefault(r.rid, []).append(t)
+    )
+    assert stats["requests"] == 3
+    for r in reqs:
+        assert streamed[r.rid] == r.out, (r.rid, streamed[r.rid], r.out)
+
+
+def test_sampling_greedy_default_and_seeded_reproducibility():
+    """Greedy (temperature 0) is the default and exactly argmax; stochastic
+    sampling is reproducible per seed and respects top-k support."""
+    logits = np.array([0.5, 3.0, 2.5, -1.0, 2.9])
+    assert sample_token(logits) == 1
+    # top-k=1 degenerates to greedy regardless of temperature
+    assert sample_token(logits, temperature=5.0, top_k=1,
+                        rng=np.random.default_rng(0)) == 1
+    draws = [
+        [sample_token(logits, temperature=1.0, top_k=3,
+                      rng=np.random.default_rng(s)) for _ in range(8)]
+        for s in (7, 7, 8)
+    ]
+    assert draws[0] == draws[1]          # same seed, same stream
+    assert set(draws[0] + draws[2]) <= {1, 2, 4}  # top-3 support only
+    # top-p keeps the minimal nucleus: mass of token 1 alone exceeds 0.45
+    # at low temperature, so every draw is the argmax
+    nucleus = [sample_token(logits, temperature=0.5, top_p=0.45,
+                            rng=np.random.default_rng(s)) for s in range(6)]
+    assert set(nucleus) == {1}
+
+
+def test_stochastic_serving_reproducible_per_seed():
+    """Two servers with the same sampling seed produce identical streams;
+    sampled tokens still come from the model's own distribution support."""
+    cfg, model, params = _tiny_model()
+
+    def serve(seed):
+        reqs = _requests(cfg, [5, 7], gen=4)
+        server = BatchedServer(model, params, batch_slots=2, max_len=24,
+                               temperature=0.8, top_k=8, seed=seed)
+        server.run(reqs)
+        return [r.out for r in reqs]
+
+    assert serve(3) == serve(3)
 
 
 def test_serve_cli_boolean_flags():
