@@ -43,12 +43,15 @@ def _time(f, *args, iters=5):
 
 def _serve_stats(engine: str, gen: int = 4,
                  prompt_lens: tuple[int, ...] = (8, 8),
+                 shared_prefix: int = 0,
                  **server_kw) -> dict:
     """Tiny end-to-end serve run per engine path (reduced llama, CPU).
 
     ``server_kw`` forwards to BatchedServer — e.g. ``paged=True,
     page_size=8, num_pages=...`` for the paged KV cache, or
-    ``prefill_chunk=N`` for chunked prefill."""
+    ``prefill_chunk=N`` for chunked prefill. ``shared_prefix`` prepends a
+    common token prefix to every prompt (the production system-prompt
+    pattern the prefix cache exists for)."""
     from repro.configs import get_config
     from repro.core import QuantPolicy, restructure
     from repro.engine import decode_weight_bytes
@@ -64,13 +67,16 @@ def _serve_stats(engine: str, gen: int = 4,
         params = qm.materialize()
     else:
         params = qm.as_executable(group=True)
+    common = np.random.default_rng(99).integers(
+        0, cfg.vocab_size, shared_prefix, dtype=np.int32)
     with ops.count_launches() as launches:
-        server = BatchedServer(model, params, batch_slots=2,
-                               max_len=max(prompt_lens) + gen + 8,
-                               **server_kw)
+        server = BatchedServer(
+            model, params, batch_slots=2,
+            max_len=shared_prefix + max(prompt_lens) + gen + 8,
+            **server_kw)
         reqs = [
-            Request(i, np.random.default_rng(i).integers(
-                0, cfg.vocab_size, ln, dtype=np.int32), gen)
+            Request(i, np.concatenate([common, np.random.default_rng(i)
+                    .integers(0, cfg.vocab_size, ln, dtype=np.int32)]), gen)
             for i, ln in enumerate(prompt_lens)
         ]
         stats = server.run(reqs)
@@ -152,6 +158,35 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("serve/paged_vs_contiguous_kv_reserve_ratio",
                  dense_res["mean"] / max(paged_res["mean"], 1),
                  "contiguous reserves batch x max_len regardless of length"))
+
+    # prefix sharing: the SAME common-system-prompt workload (24-token
+    # shared prefix = 3 full pages, heterogeneous tails) with and without
+    # the prefix cache — reserved pages and prefill tokens must drop
+    paged_kw = dict(prompt_lens=(4, 16, 23, 5), shared_prefix=24,
+                    paged=True, page_size=8, num_pages=16)
+    unshared = _serve_stats("packed", **paged_kw)
+    shared = _serve_stats("packed", **paged_kw, prefix_cache=True)
+    serve["prefix_unshared"] = unshared
+    serve["prefix_shared"] = shared
+    rows.append(("serve/prefix_pages_allocated",
+                 float(shared["pages"]["pages_allocated"]),
+                 f"vs {unshared['pages']['pages_allocated']} unshared: "
+                 "matched prefix pages are retained, not re-reserved"))
+    rows.append(("serve/prefix_prefill_tokens",
+                 float(shared["prefill_tokens"]),
+                 f"vs {unshared['prefill_tokens']} unshared: the shared "
+                 "prefix is not recomputed"))
+    rows.append(("serve/prefix_hit_tokens",
+                 float(shared["prefix"]["hit_tokens"]),
+                 f"{shared['prefix']['hits']} hits, "
+                 f"{shared['pages']['cow_copies']} copy-on-writes"))
+    rows.append(("serve/prefix_kv_bytes_per_request_mean",
+                 float(shared["kv_bytes_reserved_per_request"]["mean"]),
+                 f"vs {unshared['kv_bytes_reserved_per_request']['mean']} "
+                 "unshared (reservations net of shared pages)"))
+    rows.append(("serve/prefix_pages_leaked",
+                 float(shared["pages"]["leaked"]),
+                 "pages neither owned nor cached after retirement"))
 
     # quantized-storage bytes/token: packed (6 bit/wt) vs 3-plane (12 bit/wt)
     from repro.configs import get_config

@@ -1,16 +1,21 @@
 """Paged KV-cache subsystem: block-table page allocator + paged layout math.
 
-``allocator`` is host-side bookkeeping (free list, refcounts, fragmentation
-stats); ``paged`` is the device-side index math (scatter writes, logical
-gather). The Pallas paged-attention decode kernel lives with the other
-kernels in ``repro.kernels.paged_attention``.
+``allocator`` is host-side bookkeeping (free list, refcounts, copy-on-write
+accounting, fragmentation stats); ``paged`` is the device-side index math
+(scatter writes, logical gather, page copies); ``prefix`` is the
+prefix-sharing cache (full prompt pages -> shared read-only pages). The
+Pallas paged-attention decode kernel lives with the other kernels in
+``repro.kernels.paged_attention``.
 """
 from repro.kvcache.allocator import OutOfPages, PageAllocator
-from repro.kvcache.paged import logical_view, paged_write, pages_for
+from repro.kvcache.paged import copy_page, logical_view, paged_write, pages_for
+from repro.kvcache.prefix import PrefixIndex
 
 __all__ = [
     "OutOfPages",
     "PageAllocator",
+    "PrefixIndex",
+    "copy_page",
     "logical_view",
     "paged_write",
     "pages_for",

@@ -13,9 +13,17 @@ decrements, returning the page to the free list when the count reaches
 zero. The free list is LIFO so recently-retired pages (hot in cache on a
 real host) are reused first.
 
+``cow`` is the copy-on-write bookkeeping half: an owner about to WRITE a
+page calls it; a page at refcount 1 is returned unchanged (already the
+exclusive writer), a shared page trades this owner's claim for a fresh
+refcount-1 page (the caller copies the device contents and swaps its
+page-table entry — see ``kvcache.paged.copy_page``).
+
 Invariants (pinned by tests/test_kvcache_alloc.py):
 * a live page is never handed out twice,
 * ``free + in_use == total`` at all times,
+* a page's refcount equals its owner count (shared pages have > 1),
+* every page being written has refcount 1 (``cow`` restores this),
 * freeing every owner returns the pool to zero pages in use (no leaks).
 """
 from __future__ import annotations
@@ -35,6 +43,8 @@ class PageAllocator:
         self._free: list[int] = list(range(num_pages - 1, -1, -1))
         self._refs: dict[int, int] = {}
         self.peak_in_use = 0
+        self.cow_copies = 0
+        self.peak_shared = 0
 
     # -- queries ------------------------------------------------------------
 
@@ -75,6 +85,26 @@ class PageAllocator:
             if p not in self._refs:
                 raise KeyError(f"retain of free page {p}")
             self._refs[p] += 1
+        self.peak_shared = max(self.peak_shared, self.shared)
+
+    def cow(self, page: int) -> tuple[int, bool]:
+        """Make the caller the EXCLUSIVE writer of ``page``'s contents.
+
+        Returns ``(page, False)`` when the caller already is (refcount 1).
+        Otherwise allocates a fresh page, moves the caller's claim onto it
+        (one ref dropped from the shared page) and returns
+        ``(new_page, True)`` — the caller must then copy the device
+        contents across and swap its page-table entry before writing.
+        Raises :class:`OutOfPages` when the pool cannot supply the copy."""
+        ref = self._refs.get(page)
+        if ref is None:
+            raise KeyError(f"cow of free page {page}")
+        if ref == 1:
+            return page, False
+        [fresh] = self.alloc(1)
+        self._refs[page] = ref - 1  # caller's claim moves to the fresh page
+        self.cow_copies += 1
+        return fresh, True
 
     def free(self, pages: Iterable[int]) -> None:
         """Drop one owner per page; pages at refcount 0 return to the pool."""
@@ -104,13 +134,19 @@ class PageAllocator:
             best = max(best, cur)
         return 1.0 - best / len(free)
 
+    @property
+    def shared(self) -> int:
+        """Pages currently owned by more than one owner."""
+        return sum(1 for r in self._refs.values() if r > 1)
+
     def stats(self) -> dict:
-        shared = sum(1 for r in self._refs.values() if r > 1)
         return {
             "total": self.num_pages,
             "free": self.free_pages,
             "in_use": self.in_use,
             "peak_in_use": self.peak_in_use,
-            "shared": shared,
+            "shared": self.shared,
+            "peak_shared": self.peak_shared,
+            "cow_copies": self.cow_copies,
             "fragmentation": round(self.fragmentation(), 4),
         }

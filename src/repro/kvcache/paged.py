@@ -12,11 +12,16 @@ Logical position == absolute token position, which is what keeps RoPE,
 causal/sliding-window/chunked masks and the per-slot ``len`` contract
 identical between the paged and contiguous cache layouts.
 
-Writers assume exclusive page ownership (refcount 1 — see
-``kvcache.allocator``): distinct slots never scatter into the same
-physical page. Page-table entries beyond a slot's allocated range may be
-stale/zero; reads clamp them and attention masks positions ``>= len``, so
-stale pages are unreachable the same way stale dense-cache rows are.
+Pages may be SHARED read-only between slots (prefix sharing: several
+page-table rows map different logical pages onto one physical page), but
+writers require exclusive ownership (refcount 1 — see
+``kvcache.allocator``): the scheduler copy-on-writes any shared page
+before a slot scatters into it (``allocator.cow`` for the bookkeeping,
+:func:`copy_page` for the device contents), so distinct slots never
+scatter into the same physical page. Page-table entries beyond a slot's
+allocated range may be stale/zero; reads clamp them and attention masks
+positions ``>= len``, so stale pages are unreachable the same way stale
+dense-cache rows are.
 """
 from __future__ import annotations
 
@@ -27,6 +32,17 @@ import jax.numpy as jnp
 def pages_for(n_tokens: int, page_size: int) -> int:
     """Pages needed to back ``n_tokens`` logical positions."""
     return -(-max(n_tokens, 0) // page_size)
+
+
+def copy_page(pool: jax.Array, src: int, dst: int) -> jax.Array:
+    """Copy one physical page's contents onto another (copy-on-write).
+
+    ``pool`` is any per-layer page pool laid out ``(L, 2, P, page, KV,
+    hd)`` (``pages`` or the zamba2 ``shared_pages``) — the copy spans all
+    layers and both K/V planes of the page in one device op. Runs on the
+    admission path (off the jitted decode/prefill hot loop), so it is a
+    plain functional update, not a fused kernel."""
+    return pool.at[:, :, dst].set(pool[:, :, src])
 
 
 def paged_write(

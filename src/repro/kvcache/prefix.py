@@ -1,0 +1,240 @@
+"""Prefix index: full pages of prompt token ids -> shared read-only KV pages.
+
+Production serving fleets overwhelmingly share prompt prefixes (system
+prompts, few-shot preambles). Without sharing, PR 3's paged scheduler
+reserves every request's full page need independently — N requests with
+the same 400-token system prompt commit the same prefix pages N times and
+recompute the same prefill N times. This index makes the prefix pages a
+CACHE: after a request's prompt is fully prefilled, each of its FULL
+prompt pages is registered under a chain hash of the token ids it covers;
+a later request whose prompt starts with the same tokens ``retain``s the
+matched pages into its own page table and prefills only the unmatched
+tail.
+
+Keys are hash CHAINS, not per-page hashes: page ``j``'s key is the tuple
+of digests of pages ``0..j``, so a match is always a contiguous prefix
+(matching page ``j`` implies pages ``0..j-1`` matched too) and two prompts
+that share page ``j``'s tokens but differ earlier never collide.
+
+Ownership: the index holds ONE allocator reference per cached page, taken
+at insert and released at eviction — cached pages survive the inserting
+request's retirement (that is what makes it a cache, not borrowing).
+``evict_for`` drops least-recently-used entries (with their chain
+descendants — a child whose ancestor is gone is unreachable by ``match``
+and would leak) when the admission path runs short of free pages;
+``release_all`` drops everything (end-of-run accounting: the pool must
+return to zero pages in use).
+
+Granularity caveat: only FULL pages are shareable — a prefix is matched in
+``page_size``-token units, so up to ``page_size - 1`` trailing shared
+tokens are recomputed by the new request. The matched pages are read-only
+(refcount > 1); the scheduler copy-on-writes before any write lands in one
+(``allocator.cow`` + ``paged.copy_page``), which only triggers when a
+prompt is matched IN FULL on a page boundary and its last token must be
+re-run for logits.
+
+Recurrent families (zamba2): attention KV pages alone do not capture a
+prefix — ssm/conv state at the boundary is part of it. Entries can carry a
+per-boundary ``state`` snapshot (host arrays of the recurrent cache rows
+at exactly ``(j + 1) * page_size`` tokens, captured by the server when a
+prefill wave ends on the boundary); ``match(need_state=True)`` only
+accepts boundaries that have one, and strictly inside the prompt (the
+rollback token re-run needs state at ``boundary - 1``, which no snapshot
+covers).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+import dataclasses
+import hashlib
+from typing import Any
+
+import numpy as np
+
+from repro.kvcache.allocator import PageAllocator
+
+
+def _digest(tokens: np.ndarray) -> bytes:
+    # 128-bit digests: prompt tokens are USER-CONTROLLED hash input, and a
+    # collision would serve another request's KV pages as a false prefix
+    # hit (cross-request cache poisoning) — 64 bits is birthday-attackable
+    return hashlib.blake2b(
+        np.ascontiguousarray(tokens, dtype=np.int64).tobytes(),
+        digest_size=16,
+    ).digest()
+
+
+@dataclasses.dataclass
+class _Entry:
+    page: int                      # physical page id (index holds one ref)
+    state: dict[str, Any] | None   # recurrent rows at the boundary, or None
+
+
+class PrefixIndex:
+    """Chain-hash map from full prompt pages to shared physical pages."""
+
+    def __init__(self, page_size: int, allocator: PageAllocator):
+        self.page_size = page_size
+        self.alloc = allocator
+        # key = tuple of per-page digests for pages 0..j; LRU order
+        self._entries: OrderedDict[tuple, _Entry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.inserted = 0
+        self.evicted = 0
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def pages_held(self) -> int:
+        """Allocator references currently held by the index (one/entry)."""
+        return len(self._entries)
+
+    def _chain(self, prompt: np.ndarray):
+        """Yield (key, page_index) for every FULL page of ``prompt``."""
+        key: tuple = ()
+        for j in range(len(prompt) // self.page_size):
+            key = key + (_digest(
+                prompt[j * self.page_size:(j + 1) * self.page_size]
+            ),)
+            yield key, j
+
+    def match(self, prompt: np.ndarray, *, need_state: bool = False,
+              record: bool = True
+              ) -> tuple[int, list[int], dict[str, Any] | None]:
+        """Longest indexed prefix of ``prompt``, in whole pages.
+
+        Returns ``(n_tokens, pages, state)``: the shared token count (a
+        multiple of ``page_size``), the physical pages backing it (NOT yet
+        retained — the caller retains once it commits to admission), and
+        the boundary's recurrent-state snapshot (``need_state`` only).
+
+        ``need_state`` restricts the match to boundaries carrying a
+        snapshot and strictly inside the prompt; without it a full-prompt
+        match is allowed (the caller rolls back one token and
+        copy-on-writes the boundary page to recompute its logits).
+
+        ``record=False`` makes the lookup a DRY RUN: no hit/miss counting
+        and no LRU reordering — the admission path probes with it on every
+        scheduler retry while blocked on the pool, then calls
+        :meth:`record` once it actually commits (otherwise a request
+        stalled for K steps would count K+1 hits and churn the LRU)."""
+        pages: list[int] = []
+        states: list[dict | None] = []
+        for key, _j in self._chain(prompt):
+            e = self._entries.get(key)
+            if e is None:
+                break
+            pages.append(e.page)
+            states.append(e.state)
+        if need_state:
+            # walk back to the deepest usable boundary: has a snapshot and
+            # leaves at least one prompt token to prefill
+            while pages and (
+                states[-1] is None
+                or len(pages) * self.page_size >= len(prompt)
+            ):
+                pages.pop()
+                states.pop()
+        n = len(pages) * self.page_size
+        if record:
+            self.record(prompt, n)  # ONE accounting path for both modes
+        if not pages:
+            return 0, [], None
+        return n, pages, (states[-1] if need_state else None)
+
+    def record(self, prompt: np.ndarray, n_tokens: int) -> None:
+        """Commit a ``record=False`` match: count the hit/miss and touch
+        the matched entries' LRU positions. Entries evicted between the
+        probe and the commit (the caller's own ``evict_for``) are simply
+        skipped — the caller retained their pages, so the reuse stands."""
+        if n_tokens == 0:
+            self.misses += 1
+            return
+        self.hits += 1
+        self.hit_tokens += n_tokens
+        for key, j in self._chain(prompt):
+            if (j + 1) * self.page_size > n_tokens:
+                break
+            if key in self._entries:
+                self._entries.move_to_end(key)
+
+    # -- mutation -----------------------------------------------------------
+
+    def insert(self, prompt: np.ndarray, pages: list[int],
+               states: dict[int, dict[str, Any]] | None = None) -> int:
+        """Register every full page of a COMPLETELY prefilled prompt.
+
+        ``pages`` is the request's logical page list (shared prefix pages
+        it retained at admission simply re-hit their existing entries —
+        no double reference). ``states`` maps boundary token counts
+        (``(j + 1) * page_size``) to recurrent-row snapshots; pages whose
+        boundary lacks one are still indexed for KV-only (llama) matching.
+        Returns the number of NEW entries created."""
+        new = 0
+        for key, j in self._chain(prompt):
+            if key in self._entries:
+                e = self._entries[key]
+                if e.state is None:  # a later request computed the boundary
+                    e.state = (states or {}).get((j + 1) * self.page_size)
+                self._entries.move_to_end(key)
+                continue
+            page = pages[j]
+            self.alloc.retain([page])
+            state = (states or {}).get((j + 1) * self.page_size)
+            self._entries[key] = _Entry(page=page, state=state)
+            new += 1
+        self.inserted += new
+        return new
+
+    def evict_for(self, n_pages: int) -> bool:
+        """Release LRU entries until ``n_pages`` can be allocated.
+
+        Only entries whose eviction actually RETURNS their page to the
+        pool are considered (a page some live request still retains stays
+        live when the index drops its ref — evicting such entries would
+        destroy cache value for zero gain; the transient pressure resolves
+        at the requests' retirement instead), and only CHAIN LEAVES (an
+        entry with descendants would orphan them — ``match`` walks from
+        the root, so a child of a missing ancestor is unreachable and its
+        page ref leaks; descendants become evictable themselves once the
+        leaves below them go). Victims are picked LRU-first among the
+        eligible, one page per eviction. Returns whether the allocation is
+        now possible. O(entries^2) victim scan — fine at pool scale."""
+        while not self.alloc.can_alloc(n_pages):
+            victim = None
+            for key in self._entries:  # LRU order
+                if self.alloc.refcount(self._entries[key].page) != 1:
+                    continue  # a live request still reads this page
+                if any(k != key and k[:len(key)] == key
+                       for k in self._entries):
+                    continue  # not a leaf: evicting would orphan children
+                victim = key
+                break
+            if victim is None:
+                return False  # nothing evictable frees a page: keep the cache
+            e = self._entries.pop(victim)
+            self.alloc.free([e.page])
+            self.evicted += 1
+        return True
+
+    def release_all(self) -> None:
+        """Drop every cached reference (explicit cache teardown)."""
+        while self._entries:
+            _, e = self._entries.popitem(last=False)
+            self.alloc.free([e.page])
+            self.evicted += 1
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "entries": len(self._entries),
+            "pages_held": self.pages_held,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "inserted": self.inserted,
+            "evicted": self.evicted,
+        }

@@ -27,6 +27,17 @@ on seeded stochastic sampling (host-side, reproducible via ``--seed``).
 ``BatchedServer.run(requests, on_token=...)`` streams tokens to the caller
 as they decode.
 
+``--prefix-cache`` (paged mode) turns on PREFIX SHARING: after a prompt is
+fully prefilled, its full KV pages are indexed by a chain hash of their
+token ids (``repro.kvcache.prefix``); a later request whose prompt starts
+with the same tokens retains the matched pages read-only into its own page
+table and prefills only the unmatched tail — fleets sharing a system
+prompt stop paying for the same prefix pages and prefill compute N times.
+Shared pages are copy-on-written before any write lands in one, and
+reservation accounting is net of shared pages. ``--shared-prefix N``
+prepends a common N-token prefix to every generated prompt (workload
+shaping for smokes/benches).
+
 ``--engine`` selects how quantized weights execute:
   fake    dequantized dense weights (the paper's fake-quant evaluation)
   packed  6-bit packed storage streamed through the fused Pallas kernels
@@ -45,8 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import PageAllocator, pages_for
-from repro.models.model import reset_slots
+from repro.kvcache import PageAllocator, PrefixIndex, copy_page, pages_for
+from repro.models.model import _RECURRENT_KEYS, reset_slots
 
 
 @dataclasses.dataclass
@@ -59,6 +70,11 @@ class Request:
     fed: int = 0                # prompt tokens already prefilled (chunked)
     pages: list = dataclasses.field(default_factory=list)  # owned page ids
     kv_reserved_bytes: int = 0  # KV bytes reserved for this request
+    start_len: int = 0          # prefix-cache hit: first position to prefill
+    preloaded: bool = False     # recurrent state installed at admission
+    indexed: bool = False       # prompt pages registered in the prefix index
+    snaps: dict = dataclasses.field(default_factory=dict)  # boundary -> state
+    rng: np.random.Generator | None = None  # per-request sampling stream
 
 
 def sample_token(
@@ -120,6 +136,21 @@ class BatchedServer:
     bounds one REQUEST (the page-table width), not the pool — the pool is
     ``num_pages`` and can be far below ``slots × max_len``.
 
+    Prefix sharing (``prefix_cache=True``, paged only): admission matches
+    the new prompt against the prefix index, retains the matched pages
+    read-only, and reserves only the tail — ``start_len`` makes prefill
+    begin past the shared prefix (positions, write offsets and masks all
+    ride the per-row ``len`` contract). A request never scatters into a
+    page with refcount > 1: the scheduler copy-on-writes first (fresh
+    page, device copy, page-table swap — only a full-prompt page-boundary
+    hit triggers it, to re-run the last token for logits). Recurrent
+    families (zamba2) additionally need the ssm/conv state at the
+    boundary: prefill waves are capped to end on page boundaries so every
+    boundary's state is snapshotted into the index, and a hit installs the
+    snapshot instead of resetting the slot. Requests admitted in the SAME
+    wave cannot share with each other (the index only learns a prompt once
+    it is fully prefilled).
+
     Chunked prefill: ``prefill_chunk > 0`` feeds prompts in chunk-sized
     waves; ``run`` alternates one prefill wave with one decode step so
     ongoing requests keep emitting tokens while a long prompt loads.
@@ -128,6 +159,7 @@ class BatchedServer:
     def __init__(self, model, params, batch_slots: int, max_len: int,
                  bucket_min: int = 8, *, paged: bool = False,
                  page_size: int = 16, num_pages: int | None = None,
+                 prefix_cache: bool = False,
                  prefill_chunk: int = 0, temperature: float = 0.0,
                  top_k: int = 0, top_p: float = 1.0, seed: int = 0):
         self.model = model
@@ -139,11 +171,15 @@ class BatchedServer:
         self.prefill_chunk = prefill_chunk
         self.sampling = {"temperature": temperature, "top_k": top_k,
                          "top_p": top_p}
-        self._rng = np.random.default_rng(seed)
+        self._seed = seed
         self._on_token: Callable | None = None
         self.active: list[Request | None] = [None] * batch_slots
         self.buckets_used: list[int] = []
         self.events: list[str] = []  # "prefill" / "decode" op trace
+        self.prefill_tokens = 0     # tokens actually fed through prefill
+        self.pages_allocated = 0    # fresh pages allocated (incl. COW copies)
+        if prefix_cache and not paged:
+            raise ValueError("prefix_cache requires paged=True")
 
         if paged:
             self.page_size = page_size
@@ -161,8 +197,17 @@ class BatchedServer:
                 if k in ("pages", "shared_pages")
             )
             self._page_bytes = pool_bytes // self.num_pages
+            self.prefix = (PrefixIndex(page_size, self.alloc)
+                           if prefix_cache else None)
+            # recurrent leaves are part of a prefix (KV pages alone are
+            # not): their boundary states ride the index as snapshots
+            self._recurrent = [k for k in _RECURRENT_KEYS if k in self.cache]
+            self._snap_boundaries = bool(self.prefix and self._recurrent)
         else:
             self.alloc = None
+            self.prefix = None
+            self._recurrent = []
+            self._snap_boundaries = False
             self.cache = model.init_cache(batch_slots, max_len)
             kv_bytes = sum(
                 v.nbytes for k, v in self.cache.items()
@@ -173,8 +218,9 @@ class BatchedServer:
 
         self._decode = jax.jit(model.decode_step)
 
-        def _prefill_fn(params, tokens, lengths, fresh, cache):
-            cache = reset_slots(cache, fresh)
+        def _prefill_fn(params, tokens, lengths, fresh, starts, cache):
+            # fresh rows restart at ``starts`` (0, or past a shared prefix)
+            cache = reset_slots(cache, fresh, starts)
             return model.prefill(
                 params, {"tokens": tokens, "lengths": lengths}, cache
             )
@@ -186,13 +232,18 @@ class BatchedServer:
     def _pick_tokens(self, logits) -> Callable[[int], int]:
         """Per-slot token chooser from device logits (B, 1, V). Greedy mode
         argmaxes ON DEVICE and transfers B ints; stochastic sampling needs
-        the full logits rows on the host (B x V, off the hot path)."""
+        the full logits rows on the host (B x V, off the hot path).
+
+        Each request draws from its OWN stream seeded by (server seed,
+        rid): the sampled tokens depend only on the request and the model,
+        not on which slot it landed in, what its neighbours were, or the
+        order the scheduler admitted it."""
         if self.sampling["temperature"] <= 0.0:
             toks = np.asarray(jnp.argmax(logits[:, 0], -1))
             return lambda i: int(toks[i])
         rows = np.asarray(logits[:, 0])
         return lambda i: sample_token(rows[i], **self.sampling,
-                                      rng=self._rng)
+                                      rng=self.active[i].rng)
 
     def _emit(self, req: Request, tok: int):
         req.out.append(tok)
@@ -221,6 +272,11 @@ class BatchedServer:
         # validate BEFORE mutating active/pending: a rejected request must
         # not strand its wave-mates admitted-but-never-prefilled
         for r in pending[:n]:
+            if r.rid < 0:
+                # the per-request sampling stream seeds from (seed, rid):
+                # SeedSequence rejects negatives, and failing AFTER pages
+                # are reserved would strand them assigned-but-unadmitted
+                raise ValueError(f"request rid must be >= 0, got {r.rid}")
             if len(r.prompt) == 0:
                 # lengths==0 means "frozen slot": an empty prompt would
                 # skip the slot reset and decode the previous occupant
@@ -248,22 +304,122 @@ class BatchedServer:
         for i in free[:n]:
             req = pending[0]
             if self.paged:
-                need = pages_for(len(req.prompt) + req.max_new - 1,
-                                 self.page_size)
-                if not self.alloc.can_alloc(need):
+                if not self._admit_paged(i, req):
                     break  # budget exhausted: the rest wait for retirements
-                req.pages = self.alloc.alloc(need)
-                self._table[i, : len(req.pages)] = req.pages
-                self._table_dirty = True
-                req.kv_reserved_bytes = len(req.pages) * self._page_bytes
             else:
                 req.kv_reserved_bytes = self._kv_row_bytes
+            req.rng = np.random.default_rng([self._seed, req.rid])
             pending.pop(0)
             self.active[i] = req
             admitted += 1
         if admitted:
             self._prefill_wave()
         return admitted
+
+    def _admit_paged(self, i: int, req: Request) -> bool:
+        """Reserve pages for ``req`` in slot ``i``; False when the pool
+        cannot host it yet (even after evicting cached prefixes).
+
+        With the prefix cache on, the prompt is matched against the index
+        first: matched pages are RETAINED (read-only, refcount + 1) into
+        the slot's page table, only the unmatched tail is allocated fresh,
+        and ``start_len``/``fed`` begin past the shared prefix. A
+        full-prompt match on a page boundary rolls back one token (its
+        logits must be recomputed to sample the first output) and
+        copy-on-writes the boundary page, so the shared copy is never
+        scattered into. Recurrent families additionally install the
+        boundary's state snapshot in place of the slot reset."""
+        np_need = pages_for(len(req.prompt) + req.max_new - 1,
+                            self.page_size)
+        shared_tok, shared_pages, state = 0, [], None
+        if self.prefix is not None:
+            # dry-run probe: stats count and LRU move only when admission
+            # actually commits (this path retries every scheduler step
+            # while blocked on the pool)
+            shared_tok, shared_pages, state = self.prefix.match(
+                req.prompt, need_state=bool(self._recurrent), record=False
+            )
+        m = len(shared_pages)
+        rollback = m > 0 and shared_tok == len(req.prompt)
+        # fresh pages = unmatched tail (+1 when the boundary page is COWed)
+        fresh_needed = np_need - m + (1 if rollback else 0)
+        if m:
+            # retain BEFORE any eviction: matched pages must stay live even
+            # if eviction drops their index entries
+            self.alloc.retain(shared_pages)
+        if not self.alloc.can_alloc(fresh_needed):
+            if self.prefix is None or not self.prefix.evict_for(fresh_needed):
+                if m:
+                    self.alloc.free(shared_pages)  # undo; retry after retire
+                return False
+        tail = self.alloc.alloc(np_need - m)
+        if self.prefix is not None:
+            self.prefix.record(req.prompt, shared_tok)  # admission commits
+        req.pages = shared_pages + tail
+        req.start_len = shared_tok - (1 if rollback else 0)
+        req.fed = req.start_len
+        self._table[i, : len(req.pages)] = req.pages
+        self._table_dirty = True
+        self.pages_allocated += np_need - m
+        req.kv_reserved_bytes = (np_need - m) * self._page_bytes
+        if rollback:
+            # the re-run token writes into the last SHARED page: make this
+            # slot its exclusive writer first
+            self._cow(i, req, req.start_len // self.page_size)
+        if state is not None:
+            # recurrent prefix: install the boundary snapshot instead of
+            # resetting the slot (the wave treats the row as mid-prompt)
+            self._install_state(i, state, req.start_len)
+            req.preloaded = True
+        return True
+
+    def _cow(self, i: int, req: Request, logical_page: int) -> None:
+        """Copy-on-write slot ``i``'s ``logical_page`` if it is shared:
+        fresh page, device copy of the contents, page-table swap. No-op for
+        pages this request already exclusively owns."""
+        old = int(self._table[i, logical_page])
+        new, copied = self.alloc.cow(old)
+        if not copied:
+            return
+        for key in ("pages", "shared_pages"):
+            if key in self.cache:
+                self.cache[key] = copy_page(self.cache[key], old, new)
+        req.pages[req.pages.index(old)] = new
+        self._table[i, logical_page] = new
+        self._table_dirty = True
+        self.pages_allocated += 1
+        req.kv_reserved_bytes += self._page_bytes
+
+    def _cow_guard(self, i: int, req: Request, start: int, n: int) -> None:
+        """Enforce the no-shared-writer invariant for a write of ``n``
+        tokens at logical positions ``[start, start + n)``: any touched
+        page still shared gets copy-on-written before the wave runs. After
+        admission this never fires (the boundary COW already ran) — it is
+        the structural guarantee, not a hot path."""
+        if self.prefix is None or n <= 0:
+            return
+        for lp in range(start // self.page_size,
+                        (start + n - 1) // self.page_size + 1):
+            self._cow(i, req, lp)
+
+    def _install_state(self, i: int, state: dict, start_len: int) -> None:
+        """Write a cached recurrent-state snapshot (and the matching fill
+        length) into slot ``i``'s cache rows. Admission-path host update —
+        off the jitted hot loop."""
+        for k, v in state.items():
+            self.cache[k] = self.cache[k].at[:, i].set(jnp.asarray(v))
+        self.cache["len"] = self.cache["len"].at[i].set(
+            jnp.int32(start_len)
+        )
+
+    def _index_prompt(self, req: Request) -> None:
+        """Register a fully prefilled prompt's full pages in the prefix
+        index (with any recurrent boundary snapshots captured en route)."""
+        if self.prefix is None or req.indexed:
+            return
+        req.indexed = True
+        self.prefix.insert(req.prompt, req.pages, states=req.snaps or None)
+        req.snaps = {}
 
     def _retire(self, i: int, req: Request, done: list[Request]):
         done.append(req)
@@ -283,27 +439,52 @@ class BatchedServer:
         if not rows:
             return False
         chunk = self.prefill_chunk or self.max_len
-        sizes = {i: min(chunk, len(r.prompt) - r.fed) for i, r in rows}
+        sizes = {}
+        for i, r in rows:
+            c = min(chunk, len(r.prompt) - r.fed)
+            if self._snap_boundaries:
+                # recurrent prefix caching: cap the wave at the next page
+                # boundary so its state can be snapshotted for the index
+                c = min(c, (r.fed // self.page_size + 1) * self.page_size
+                        - r.fed)
+            sizes[i] = c
         lb = min(_bucket(max(sizes.values()), self.bucket_min), self.max_len)
         self.buckets_used.append(lb)
         tokens = np.zeros((self.slots, lb), np.int32)
         lengths = np.zeros((self.slots,), np.int32)
         fresh = np.zeros((self.slots,), bool)
+        starts = np.zeros((self.slots,), np.int32)
         for i, r in rows:
             c = sizes[i]
             tokens[i, :c] = r.prompt[r.fed : r.fed + c]
             lengths[i] = c
-            fresh[i] = r.fed == 0
+            # first wave of a request resets the slot — unless its state
+            # was preloaded from the prefix index at admission
+            fresh[i] = r.fed == r.start_len and not r.preloaded
+            starts[i] = r.start_len
+            if self.paged:
+                self._cow_guard(i, r, r.fed, c)
             r.fed += c
+            self.prefill_tokens += c
         self._sync_table()
         logits, self.cache = self._prefill(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(fresh), self.cache,
+            jnp.asarray(fresh), jnp.asarray(starts), self.cache,
         )
         self.events.append("prefill")
+        if self._snap_boundaries:
+            for i, r in rows:
+                if (not r.indexed and r.fed > 0
+                        and r.fed % self.page_size == 0
+                        and r.fed not in r.snaps):
+                    r.snaps[r.fed] = {
+                        k: np.asarray(self.cache[k][:, i])
+                        for k in self._recurrent
+                    }
         pick = self._pick_tokens(logits)
         for i, r in rows:
             if r.fed == len(r.prompt):
+                self._index_prompt(r)
                 self._emit(r, pick(i))
         return True
 
@@ -318,6 +499,11 @@ class BatchedServer:
                     and r.fed == len(r.prompt)):
                 tokens[i, 0] = r.out[-1]
                 active[i] = True
+                if self.paged:
+                    # decode writes at len(prompt) + decoded steps — COW if
+                    # that page is somehow still shared (post-admission
+                    # invariant: it never is)
+                    self._cow_guard(i, r, len(r.prompt) + len(r.out) - 1, 1)
         if not active.any():
             return False
         self._sync_table()
@@ -377,6 +563,7 @@ class BatchedServer:
             "prefill_buckets": sorted(set(self.buckets_used)),
             "prefill_compiles": self._prefill._cache_size(),
             "decode_compiles": self._decode._cache_size(),
+            "prefill_tokens": self.prefill_tokens,
         }
         if done:
             reserved = [r.kv_reserved_bytes for r in done]
@@ -384,12 +571,27 @@ class BatchedServer:
                 "mean": int(np.mean(reserved)), "max": int(max(reserved)),
             }
         if self.paged:
+            cached = self.prefix.pages_held if self.prefix else 0
             stats["pages"] = {
                 **self.alloc.stats(),
                 "page_size": self.page_size,
-                "leaked": self.alloc.in_use,
+                "pages_allocated": self.pages_allocated,
+                "prefix_cached": cached,
+                # pages held past retirement are LEAKED unless the prefix
+                # cache deliberately holds them (drop_prefix_cache releases
+                # those and must return the pool to zero in use)
+                "leaked": self.alloc.in_use - cached,
             }
+            if self.prefix is not None:
+                stats["prefix"] = self.prefix.stats()
         return stats
+
+    def drop_prefix_cache(self) -> None:
+        """Release every page the prefix index holds (cache teardown).
+        With no live requests, the pool must return to zero pages in use —
+        anything left is a real leak."""
+        if self.prefix is not None:
+            self.prefix.release_all()
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -427,6 +629,15 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--num-pages", type=int, default=0,
                     help="KV page pool size (0 = batch * pages-per-row, "
                          "i.e. dense-equivalent capacity)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="share common prompt prefixes via page refcounts "
+                         "(paged mode): matched full pages are retained "
+                         "read-only, only the tail is prefilled")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common N-token prefix to every "
+                         "generated prompt (shared-prompt workload "
+                         "shaping for smokes/benches)")
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="split prompts into N-token prefill waves "
                          "interleaved with decode steps (0 = whole prompt)")
@@ -476,15 +687,22 @@ def main(argv=None):
     else:
         plens = [args.prompt_len]
     rng = np.random.default_rng(args.seed)
+    common = rng.integers(0, cfg.vocab_size, args.shared_prefix,
+                          dtype=np.int32)
     reqs = [
-        Request(i, rng.integers(0, cfg.vocab_size, plens[i % len(plens)],
-                                dtype=np.int32), args.gen)
+        Request(i, np.concatenate([
+            common,
+            rng.integers(0, cfg.vocab_size, plens[i % len(plens)],
+                         dtype=np.int32),
+        ]), args.gen)
         for i in range(args.requests)
     ]
     server = BatchedServer(
-        model, params, args.batch, max(plens) + args.gen + 8,
+        model, params, args.batch,
+        args.shared_prefix + max(plens) + args.gen + 8,
         paged=args.paged, page_size=args.page_size,
         num_pages=args.num_pages or None,
+        prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         seed=args.seed,
@@ -504,6 +722,17 @@ def main(argv=None):
     if args.paged and stats["pages"]["leaked"]:
         print(f"[serve] FAIL: {stats['pages']['leaked']} KV pages leaked")
         return 1
+    if args.prefix_cache:
+        if (args.shared_prefix and args.requests > 1
+                and stats["prefix"]["hits"] == 0):
+            print("[serve] FAIL: no prefix-cache hits on a shared-prefix "
+                  "workload")
+            return 1
+        server.drop_prefix_cache()
+        if server.alloc.in_use:
+            print(f"[serve] FAIL: {server.alloc.in_use} pages still in use "
+                  "after prefix-cache drop")
+            return 1
     return 0
 
 

@@ -220,6 +220,14 @@ def attention_block(
     paged-attention kernel; elsewhere (and for prefill) the logical gather
     feeds the exact same ``attend`` math as the dense path, so paged and
     contiguous decoding are bit-identical on CPU CI.
+
+    Prefix sharing rides on the same contract: several page-table rows may
+    alias one physical page read-only, and a fresh row's ``cache_len`` can
+    start PAST its shared prefix — writes then begin at that offset (the
+    scatter never touches the shared pages) while reads cover the full
+    logical strip, positions below ``cache_len`` included. The scheduler
+    guarantees every page written here has refcount 1 (copy-on-write
+    happens host-side before the wave — see ``kvcache.prefix``).
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd

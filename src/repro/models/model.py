@@ -37,15 +37,24 @@ def _dtype(cfg):
 _RECURRENT_KEYS = ("ssm", "conv", "wkv", "shift_t", "shift_c")
 
 
-def reset_slots(cache: dict, refill: jax.Array) -> dict:
+def reset_slots(cache: dict, refill: jax.Array,
+                start_len: jax.Array | None = None) -> dict:
     """Reset the batch rows selected by ``refill`` (B,) bool for reuse.
 
     Zeroes per-row ``len`` and recurrent-state rows. Positional KV rows are
     deliberately NOT zeroed: writes restart at position 0 and attention
     masks keys at ``>= len``, so stale entries are unreachable — skipping
-    the rewrite keeps slot recycling O(state), not O(cache)."""
+    the rewrite keeps slot recycling O(state), not O(cache).
+
+    ``start_len`` (B,) int32, when given, is each fresh row's STARTING fill
+    length instead of 0: a prefix-cache hit admits the request with its
+    shared pages already holding ``start_len`` tokens of KV, so prefill
+    positions, write offsets and attention masks all begin past the shared
+    prefix (the same per-row ``len`` contract that makes chunked prefill
+    exact). Rows not selected by ``refill`` ignore it."""
     out = dict(cache)
-    out["len"] = jnp.where(refill, 0, cache["len"]).astype(jnp.int32)
+    start = 0 if start_len is None else start_len.astype(jnp.int32)
+    out["len"] = jnp.where(refill, start, cache["len"]).astype(jnp.int32)
     for key in _RECURRENT_KEYS:
         if key in cache:
             leaf = cache[key]

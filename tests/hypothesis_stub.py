@@ -14,6 +14,12 @@ modules instead do::
 With the stub, strategy expressions evaluate to inert placeholders and
 ``@hypothesis.given(...)`` marks the test as skipped — the deterministic
 tests in the same module keep running unconditionally.
+
+The REAL package is preferred whenever importable: ``pip install -e
+.[dev]`` (or the ``property`` extra) pulls it in, and CI runs the
+property tests under it in a dedicated ``property-tests`` job that fails
+if they report as skipped — the stub is strictly the offline fallback,
+never the path of record.
 """
 from __future__ import annotations
 

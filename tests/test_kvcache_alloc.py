@@ -1,12 +1,19 @@
-"""PageAllocator invariants: no double-assignment, no leaks, refcounts.
+"""PageAllocator invariants: no double-assignment, no leaks, refcounts,
+copy-on-write writer exclusivity.
 
 Property-style: a deterministic seeded random walk over alloc / free /
-retain always runs (the hypothesis-driven variant rides along when
-hypothesis is installed; offline CI gets it via the stub as a skip). The
-invariants after EVERY operation:
+retain / cow always runs (the REAL hypothesis-driven variant rides along
+when the package is installed — CI runs it in its own job step; offline
+containers fall back to the stub, which skips it). The invariants after
+EVERY operation:
 
-* a live page is never handed out twice (all owner sets are disjoint),
-* ``free + in_use == total``,
+* a live page is never handed out twice (fresh pages never collide with
+  any live owner's),
+* ``free + in_use == total`` (and ``shared`` counts exactly the pages
+  with more than one owner),
+* NO DOUBLE WRITER: a page an owner is about to write has refcount 1 —
+  ``cow`` either confirms exclusivity or trades the claim for a fresh
+  private copy, never mutating other owners' views,
 * releasing every owner returns the pool to zero pages in use.
 """
 import numpy as np
@@ -27,7 +34,6 @@ def _random_walk(seed: int, num_pages: int, ops: int):
     rng = np.random.default_rng(seed)
     alloc = PageAllocator(num_pages)
     owners: list[list[int]] = []   # each entry = one owner's page list
-    live: list[int] = []           # multiset of live (page, owner) claims
 
     def check():
         assert alloc.free_pages + alloc.in_use == num_pages
@@ -41,10 +47,13 @@ def _random_walk(seed: int, num_pages: int, ops: int):
         for p, c in counts.items():
             assert alloc.refcount(p) == c, (p, c, alloc.refcount(p))
         assert alloc.in_use == len(counts)
+        # shared accounting: exactly the pages with more than one owner
+        assert alloc.shared == sum(1 for c in counts.values() if c > 1)
+        assert alloc.stats()["shared"] == alloc.shared
         assert 0.0 <= alloc.fragmentation() <= 1.0
 
     for _ in range(ops):
-        op = rng.integers(0, 3)
+        op = rng.integers(0, 4)
         if op == 0:  # alloc
             n = int(rng.integers(0, max(num_pages // 2, 1)) )
             if alloc.can_alloc(n):
@@ -65,6 +74,29 @@ def _random_walk(seed: int, num_pages: int, ops: int):
             shared = list(owners[idx])
             alloc.retain(shared)
             owners.append(shared)
+        elif op == 3 and owners:  # write intent: cow then "scatter"
+            idx = int(rng.integers(0, len(owners)))
+            own = owners[idx]
+            if own and alloc.refcount(own[0]) > 1 and not alloc.can_alloc(1):
+                with pytest.raises(OutOfPages):
+                    alloc.cow(own[0])  # shared + empty pool: no copy source
+            elif own and alloc.free_pages > 0:
+                j = int(rng.integers(0, len(own)))
+                before = {p for k, o in enumerate(owners) if k != idx
+                          for p in o}
+                was_shared = alloc.refcount(own[j]) > 1
+                page, copied = alloc.cow(own[j])
+                assert copied == was_shared
+                assert copied == (page != own[j])
+                own[j] = page
+                # NO DOUBLE WRITER: the page about to be written is now
+                # exclusively this owner's, and cow never moved any OTHER
+                # owner's claims
+                assert alloc.refcount(page) == 1, "shared page written"
+                assert page not in before, "cow stole a live page"
+                after = {p for k, o in enumerate(owners) if k != idx
+                         for p in o}
+                assert before == after, "cow mutated another owner"
         check()
     while owners:
         alloc.free(owners.pop())
@@ -99,6 +131,43 @@ def test_refcounted_page_survives_partial_free():
     alloc.free(pages)
     assert alloc.in_use == 2     # only `reuse` remains
     alloc.free(reuse)
+    assert alloc.in_use == 0
+
+
+def test_cow_shared_page_trades_claim_for_fresh_copy():
+    alloc = PageAllocator(4)
+    [p] = alloc.alloc(1)
+    alloc.retain([p])             # two owners: the page is read-only now
+    new, copied = alloc.cow(p)
+    assert copied and new != p
+    assert alloc.refcount(new) == 1   # caller is the exclusive writer
+    assert alloc.refcount(p) == 1     # the OTHER owner's view is untouched
+    assert alloc.cow_copies == 1
+    alloc.free([new])
+    alloc.free([p])
+    assert alloc.in_use == 0
+
+
+def test_cow_exclusive_page_is_identity():
+    alloc = PageAllocator(2)
+    [p] = alloc.alloc(1)
+    assert alloc.cow(p) == (p, False)
+    assert alloc.cow_copies == 0
+    alloc.free([p])
+    with pytest.raises(KeyError):
+        alloc.cow(p)  # cow of a free page
+
+
+def test_cow_shared_with_empty_pool_raises():
+    alloc = PageAllocator(1)
+    [p] = alloc.alloc(1)
+    alloc.retain([p])
+    with pytest.raises(OutOfPages):
+        alloc.cow(p)
+    # the failed cow must not have corrupted the refcount
+    assert alloc.refcount(p) == 2
+    alloc.free([p])
+    alloc.free([p])
     assert alloc.in_use == 0
 
 

@@ -27,6 +27,7 @@ from repro.kernels.paged_attention import (
     paged_attention_pallas,
     paged_attention_reference,
 )
+from repro.kvcache import pages_for
 from repro.launch.serve import BatchedServer, Request
 from repro.models import build_model
 from repro.models.attention import attention_block, init_attention
@@ -257,6 +258,138 @@ def test_chunked_prefill_recurrent_families(arch):
     for r in reqs:
         want = _isolated_decode(model, params, r.prompt, gen, max_len)
         assert r.out == want, (arch, r.rid, r.out, want)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: copy-on-write paged serving == isolated decoding
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_shared_serving_matches_isolated_and_saves_work():
+    """Acceptance: a common-system-prompt workload served with the prefix
+    cache produces token-for-token the isolated decodes, actually SHARES
+    (hits, retained pages, fewer prefill tokens than the prompts sum) and
+    leaks nothing — including after the cache itself is dropped."""
+    cfg, model, params = _tiny_model()
+    gen, max_len, page = 3, 64, 8
+    rng = np.random.default_rng(17)
+    common = rng.integers(0, cfg.vocab_size, 19, dtype=np.int32)
+    tails = [4, 9, 1, 6, 13]
+    reqs = [
+        Request(i, np.concatenate(
+            [common, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)]
+        ), gen)
+        for i, t in enumerate(tails)
+    ]
+    server = BatchedServer(model, params, batch_slots=2, max_len=max_len,
+                           paged=True, page_size=page, num_pages=24,
+                           prefix_cache=True)
+    stats = server.run(reqs)
+    assert stats["requests"] == len(tails)
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, len(r.prompt), r.out, want)
+    # sharing really happened: 19 common tokens = 2 full pages of 8
+    assert stats["prefix"]["hits"] > 0, stats["prefix"]
+    assert stats["prefix"]["hit_tokens"] > 0
+    assert stats["pages"]["peak_shared"] > 0, stats["pages"]
+    # the matched prefix was NOT recomputed
+    assert stats["prefill_tokens"] < sum(len(r.prompt) for r in reqs)
+    # reservation accounting is net of shared pages
+    assert stats["kv_bytes_reserved_per_request"]["mean"] < (
+        server._page_bytes * pages_for(len(reqs[0].prompt) + gen - 1, page)
+    )
+    assert stats["pages"]["leaked"] == 0, stats["pages"]
+    assert stats["decode_compiles"] == 1, stats
+    server.drop_prefix_cache()
+    assert server.alloc.in_use == 0
+
+
+def test_prefix_full_page_aligned_hit_copy_on_writes():
+    """A prompt matched IN FULL on a page boundary rolls back one token to
+    recompute its logits; that write would land in a shared page — the
+    scheduler must copy-on-write it, never scatter into refcount > 1."""
+    cfg, model, params = _tiny_model()
+    gen, page = 3, 8
+    rng = np.random.default_rng(23)
+    prompt = rng.integers(0, cfg.vocab_size, 2 * page, dtype=np.int32)
+    reqs = [Request(i, prompt.copy(), gen) for i in range(2)]
+    server = BatchedServer(model, params, batch_slots=1, max_len=32,
+                           paged=True, page_size=page, num_pages=10,
+                           prefix_cache=True)
+    stats = server.run(reqs)
+    want = _isolated_decode(model, params, prompt, gen, 32)
+    for r in reqs:
+        assert r.out == want, (r.rid, r.out, want)
+    assert stats["pages"]["cow_copies"] == 1, stats["pages"]
+    assert stats["prefix"]["hits"] == 1
+    # second request re-ran exactly ONE prompt token (the rollback)
+    assert stats["prefill_tokens"] == len(prompt) + 1
+    assert stats["pages"]["leaked"] == 0
+    server.drop_prefix_cache()
+    assert server.alloc.in_use == 0
+
+
+def test_prefix_cache_eviction_under_pool_pressure():
+    """When the pool cannot host a new request, cached prefixes are
+    evicted LRU-first instead of stalling admission forever."""
+    cfg, model, params = _tiny_model()
+    gen, page = 2, 4
+    # distinct prompts: each fills the index; a pool of 6 cannot hold the
+    # accumulated cache AND admit the next request
+    reqs = _requests(cfg, [11, 10, 12, 9], gen)
+    server = BatchedServer(model, params, batch_slots=1, max_len=20,
+                           paged=True, page_size=page, num_pages=6,
+                           prefix_cache=True)
+    stats = server.run(reqs)
+    assert stats["requests"] == 4
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, 20)
+        assert r.out == want, (r.rid, r.out, want)
+    assert stats["prefix"]["evicted"] > 0, stats["prefix"]
+    assert stats["pages"]["leaked"] == 0
+    server.drop_prefix_cache()
+    assert server.alloc.in_use == 0
+
+
+@pytest.mark.parametrize("arch", ["llama32-1b", "zamba2-1.2b"])
+def test_prefix_shared_differential_fuzz(arch):
+    """Differential fuzz: randomized prompt sets with overlapping prefixes
+    served through prefix-shared paged serving must be token-for-token
+    identical to isolated per-request decoding — attention (llama) and
+    hybrid recurrent (zamba2, boundary-state snapshots) cache families."""
+    cfg, model, params = _tiny_model(arch, n_layers=2, seed=1)
+    gen, max_len, page = 2, 40, 4
+    total_hits = 0
+    for trial in range(3):
+        rng = np.random.default_rng(1000 * trial + 7)
+        bases = [rng.integers(0, cfg.vocab_size, int(n), dtype=np.int32)
+                 for n in rng.integers(5, 14, size=2)]
+        prompts = []
+        for _ in range(5):
+            base = bases[int(rng.integers(0, 2))]
+            cut = int(rng.integers(1, len(base) + 1))
+            tail = rng.integers(0, cfg.vocab_size, int(rng.integers(0, 6)),
+                                dtype=np.int32)
+            p = np.concatenate([base[:cut], tail])
+            prompts.append(p[: max_len - gen - 1])
+        reqs = [Request(i, p, gen) for i, p in enumerate(prompts)]
+        server = BatchedServer(model, params, batch_slots=2,
+                               max_len=max_len, paged=True, page_size=page,
+                               num_pages=40, prefix_cache=True,
+                               prefill_chunk=int(rng.integers(0, 2)) * 8)
+        stats = server.run(reqs)
+        assert stats["requests"] == len(reqs)
+        for r in reqs:
+            want = _isolated_decode(model, params, r.prompt, gen, max_len)
+            assert r.out == want, (arch, trial, r.rid, list(r.prompt),
+                                   r.out, want)
+        assert stats["pages"]["leaked"] == 0, (arch, trial, stats["pages"])
+        total_hits += stats["prefix"]["hits"]
+        server.drop_prefix_cache()
+        assert server.alloc.in_use == 0, (arch, trial)
+    # across trials the overlapping prefixes must actually share
+    assert total_hits > 0, (arch, total_hits)
 
 
 # ---------------------------------------------------------------------------

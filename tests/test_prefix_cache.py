@@ -1,0 +1,281 @@
+"""PrefixIndex + copy-on-write unit tests: chain-hash matching, LRU
+eviction with chain descendants, reference accounting against the
+PageAllocator, and the device-side page copy.
+
+The serving-level contract (prefix-shared serving == isolated decoding,
+token for token) lives in tests/test_paged_kv.py; this file pins the
+host-side cache machinery in isolation.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    from hypothesis_stub import hypothesis, st
+
+from repro.kvcache import PageAllocator, PrefixIndex, copy_page, pages_for
+
+
+def _prompt(*chunks):
+    return np.concatenate([np.asarray(c, np.int32) for c in chunks])
+
+
+def test_match_walks_full_pages_only():
+    alloc = PageAllocator(16)
+    idx = PrefixIndex(4, alloc)
+    prompt = np.arange(10, dtype=np.int32)  # pages [0:4], [4:8]; tail 8:10
+    pages = alloc.alloc(3)
+    idx.insert(prompt, pages)
+    assert idx.pages_held == 2          # only the two FULL pages are cached
+    assert alloc.refcount(pages[0]) == 2
+    assert alloc.refcount(pages[2]) == 1  # partial page: never indexed
+
+    n, shared, state = idx.match(_prompt(np.arange(10), [99, 98]))
+    assert (n, shared, state) == (8, pages[:2], None)
+    # divergence INSIDE a page truncates the match to the boundary before
+    n, shared, _ = idx.match(_prompt(np.arange(6), [77, 76, 75, 74]))
+    assert (n, shared) == (4, pages[:1])
+    # divergence in the first page: no match
+    n, shared, _ = idx.match(_prompt([55], np.arange(9)))
+    assert (n, shared) == (0, [])
+
+
+def test_chain_keys_disambiguate_same_page_tokens():
+    """Two prompts sharing page 1's TOKENS but not page 0 must not match —
+    the chain key hashes the whole history, not the page in isolation."""
+    alloc = PageAllocator(8)
+    idx = PrefixIndex(2, alloc)
+    a = _prompt([1, 2], [3, 4])
+    idx.insert(a, alloc.alloc(2))
+    n, shared, _ = idx.match(_prompt([9, 9], [3, 4]))
+    assert (n, shared) == (0, [])
+
+
+def test_insert_rehit_takes_no_second_reference():
+    alloc = PageAllocator(8)
+    idx = PrefixIndex(4, alloc)
+    prompt = np.arange(8, dtype=np.int32)
+    pages = alloc.alloc(2)
+    idx.insert(prompt, pages)
+    # a second request with the same prompt re-inserts its (shared) pages
+    assert idx.insert(prompt, pages) == 0
+    assert alloc.refcount(pages[0]) == 2  # still exactly one index ref
+    idx.release_all()
+    assert alloc.refcount(pages[0]) == 1
+
+
+def test_eviction_takes_lru_chain_bottom_up_never_orphans():
+    alloc = PageAllocator(6)
+    idx = PrefixIndex(2, alloc)
+    a = _prompt([1, 2], [3, 4])     # 2-page chain
+    b = _prompt([7, 8])             # unrelated 1-page chain
+    pa = alloc.alloc(2)
+    idx.insert(a, pa)
+    alloc.free(pa)                  # request retires; only the cache holds on
+    pb = alloc.alloc(1)
+    idx.insert(b, pb)
+    alloc.free(pb)
+    idx.match(b)                    # touch b: a's chain is now LRU
+    alloc.alloc(3)                  # pool exhausted
+    assert idx.evict_for(2)         # needs 2: a's chain goes, leaf first
+    assert idx.pages_held == 1      # b survives (more recently used)
+    assert idx.match(b)[0] == 2
+    assert idx.match(a)[0] == 0     # both of a's entries gone: no orphan
+    assert alloc.can_alloc(2)
+    idx.release_all()
+
+
+def test_evict_for_spares_retained_ancestors_frees_leaf_only():
+    """A chain whose ROOT page a live request still reads must not be
+    collateral damage of freeing its refcount-1 leaf: eviction is
+    leaf-first among freeable pages, and a retained entry never goes."""
+    alloc = PageAllocator(4)
+    idx = PrefixIndex(2, alloc)
+    p = _prompt([1, 2], [3, 4])
+    pages = alloc.alloc(2)
+    idx.insert(p, pages)
+    alloc.free(pages)               # inserter retires
+    root = idx.match(_prompt([1, 2]), record=False)[1]
+    alloc.retain(root)              # a live request shares the root page
+    alloc.alloc(2)                  # pool exhausted
+    assert idx.evict_for(1)         # the leaf's page frees...
+    assert idx.pages_held == 1      # ...but the retained root SURVIVES
+    assert idx.match(_prompt([1, 2]), record=False)[0] == 2
+    alloc.alloc(1)                  # exhaust again
+    assert not idx.evict_for(1)     # root unevictable while retained
+    assert idx.pages_held == 1
+
+
+def test_evict_for_keeps_entries_whose_pages_cannot_be_freed():
+    """Entries whose pages a live request retains free NOTHING when
+    evicted — evict_for must report failure WITHOUT destroying them (the
+    pressure resolves at the request's retirement; the cache must still
+    be there for the fleet behind it)."""
+    alloc = PageAllocator(2)
+    idx = PrefixIndex(2, alloc)
+    prompt = _prompt([1, 2], [3, 4])
+    pages = alloc.alloc(2)          # the "live request" keeps its refs
+    idx.insert(prompt, pages)
+    assert not idx.evict_for(1)     # unsatisfiable: no page would free
+    assert idx.pages_held == 2      # ... and the cache survives intact
+    assert idx.match(prompt)[0] == 4
+    alloc.free(pages)               # the request retires
+    assert idx.evict_for(1)         # now evictable (and only as needed)
+    idx.release_all()
+    assert alloc.in_use == 0
+
+
+def test_dry_run_match_counts_and_touches_nothing_until_recorded():
+    """The admission path probes with record=False on every blocked retry:
+    a request stalled K steps must still count ONE hit, and the probes
+    must not churn the LRU order."""
+    alloc = PageAllocator(8)
+    idx = PrefixIndex(2, alloc)
+    a, b = _prompt([1, 2]), _prompt([5, 6])
+    for p in (a, b):                # serve-and-retire: cache keeps refs
+        pages = alloc.alloc(1)
+        idx.insert(p, pages)
+        alloc.free(pages)           # b is now most recently used
+    for _ in range(5):              # blocked-admission retries
+        n, pages, _ = idx.match(a, record=False)
+        assert n == 2 and len(pages) == 1
+    assert idx.stats()["hits"] == 0 and idx.stats()["misses"] == 0
+    # LRU untouched by the probes: a is still the eviction victim
+    alloc.alloc(6)
+    assert idx.evict_for(1)
+    assert idx.match(a, record=False)[0] == 0   # a evicted
+    assert idx.match(b, record=False)[0] == 2   # b survived
+    idx.record(b, 2)                # the admission that finally commits
+    idx.record(_prompt([9, 9]), 0)
+    s = idx.stats()
+    assert s["hits"] == 1 and s["hit_tokens"] == 2 and s["misses"] == 1
+    idx.release_all()
+
+
+def test_match_need_state_requires_snapshot_strictly_inside_prompt():
+    alloc = PageAllocator(8)
+    idx = PrefixIndex(2, alloc)
+    prompt = np.arange(6, dtype=np.int32)  # 3 full pages
+    pages = alloc.alloc(3)
+    snap = {"ssm": np.ones((2, 3))}
+    idx.insert(prompt, pages, states={2: snap, 4: snap})  # boundary 6: none
+    # KV-only matching takes all three pages (full-prompt match allowed)
+    assert idx.match(prompt)[0] == 6
+    # state-matching walks back to the deepest SNAPSHOTTED boundary that
+    # leaves at least one token to prefill
+    n, shared, state = idx.match(prompt, need_state=True)
+    assert (n, shared) == (4, pages[:2])
+    assert state is snap
+    # a longer prompt sharing the prefix can use boundary 4 too
+    n2, _, state2 = idx.match(_prompt(np.arange(6), [9, 9]),
+                              need_state=True)
+    assert n2 == 4 and state2 is snap
+    idx.release_all()
+    alloc.free(pages)
+    assert alloc.in_use == 0
+
+
+def test_release_all_returns_every_reference():
+    alloc = PageAllocator(12)
+    idx = PrefixIndex(3, alloc)
+    for seed in range(3):
+        rng = np.random.default_rng(seed)
+        prompt = rng.integers(0, 50, 9).astype(np.int32)
+        pages = alloc.alloc(3)
+        idx.insert(prompt, pages)
+        alloc.free(pages)           # the request retires; cache holds on
+    assert alloc.in_use == idx.pages_held > 0
+    idx.release_all()
+    assert alloc.in_use == 0 and idx.pages_held == 0
+    assert idx.stats()["evicted"] == idx.stats()["inserted"]
+
+
+def _prefix_walk(seed: int, page_size: int, num_pages: int, ops: int):
+    """Random insert / match / evict walk; every retiring owner frees its
+    refs immediately, so at every step the allocator's pages in use must
+    equal exactly what the index holds — and any match must be a true
+    token-prefix of some inserted prompt."""
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages)
+    idx = PrefixIndex(page_size, alloc)
+    inserted: list[np.ndarray] = []
+
+    def new_prompt():
+        n = int(rng.integers(1, 3 * page_size + 2))
+        return rng.integers(0, 40, n).astype(np.int32)
+
+    def query():
+        if inserted and rng.integers(0, 2):  # overlapping-prefix query
+            base = inserted[int(rng.integers(0, len(inserted)))]
+            cut = int(rng.integers(1, len(base) + 1))
+            tail = rng.integers(0, 40, int(rng.integers(0, 5)))
+            return np.concatenate([base[:cut], tail.astype(np.int32)])
+        return new_prompt()
+
+    for _ in range(ops):
+        op = int(rng.integers(0, 3))
+        if op == 0:  # serve-and-retire a request: cache keeps the prefix
+            p = query()
+            need = pages_for(len(p), page_size)
+            if alloc.can_alloc(need):
+                n, shared, _ = idx.match(p)
+                pages = shared + alloc.alloc(need - len(shared))
+                if shared:
+                    alloc.retain(shared)
+                idx.insert(p, pages)
+                alloc.free(pages)
+                inserted.append(p)
+        elif op == 1:  # pure lookup
+            q = query()
+            n, pages, _ = idx.match(q)
+            assert n % page_size == 0 and n <= len(q)
+            assert len(pages) == n // page_size
+            if n:
+                assert any(len(p) >= n and np.array_equal(p[:n], q[:n])
+                           for p in inserted), "match is not a real prefix"
+        else:  # pool-pressure eviction
+            idx.evict_for(int(rng.integers(0, num_pages + 1)))
+        assert alloc.in_use == idx.pages_held
+    idx.release_all()
+    assert alloc.in_use == 0, "prefix cache leaked pages"
+
+
+def test_prefix_walk_deterministic():
+    for seed in range(4):
+        _prefix_walk(seed, page_size=4, num_pages=11, ops=60)
+
+
+@hypothesis.given(st.integers(min_value=0, max_value=10_000),
+                  st.integers(min_value=1, max_value=8),
+                  st.integers(min_value=2, max_value=32),
+                  st.integers(min_value=1, max_value=80))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_prefix_walk_property(seed, page_size, num_pages, ops):
+    _prefix_walk(seed, page_size, num_pages, ops)
+
+
+def test_copy_page_moves_contents_across_all_layers():
+    pool = jnp.arange(2 * 2 * 4 * 3 * 2 * 2, dtype=jnp.float32).reshape(
+        2, 2, 4, 3, 2, 2
+    )  # (L, 2, P=4, page, KV, hd)
+    out = copy_page(pool, 1, 3)
+    np.testing.assert_array_equal(np.asarray(out[:, :, 3]),
+                                  np.asarray(pool[:, :, 1]))
+    # every other page untouched
+    for p in (0, 1, 2):
+        np.testing.assert_array_equal(np.asarray(out[:, :, p]),
+                                      np.asarray(pool[:, :, p]))
+
+
+def test_stats_shape():
+    alloc = PageAllocator(4)
+    idx = PrefixIndex(2, alloc)
+    idx.match(np.arange(4, dtype=np.int32))
+    s = idx.stats()
+    assert s["misses"] == 1 and s["hits"] == 0 and s["entries"] == 0
+    with pytest.raises(KeyError):
+        # inserting pages the allocator never handed out must blow up
+        idx.insert(np.arange(2, dtype=np.int32), [99])

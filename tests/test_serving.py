@@ -322,6 +322,64 @@ def test_stochastic_serving_reproducible_per_seed():
         return [r.out for r in reqs]
 
     assert serve(3) == serve(3)
+    assert serve(3) != serve(4)  # the seed actually reaches the streams
+
+
+def test_sampled_streams_deterministic_across_batch_slots():
+    """Each request draws from its OWN (seed, rid) stream: the sampled
+    tokens must not depend on how many slots the server packs requests
+    into (a neighbour's draws must not perturb mine)."""
+    cfg, model, params = _tiny_model()
+
+    def serve(slots):
+        reqs = _requests(cfg, [5, 7, 4], gen=4)
+        server = BatchedServer(model, params, batch_slots=slots, max_len=24,
+                               temperature=0.9, top_k=6, seed=11)
+        server.run(reqs)
+        return {r.rid: r.out for r in reqs}
+
+    assert serve(1) == serve(2) == serve(3)
+
+
+def test_sampled_streams_independent_of_admission_order():
+    """Reordering the request queue must not change any request's sampled
+    tokens — the per-request streams make sampling a function of
+    (seed, rid, model), not of scheduler interleaving."""
+    cfg, model, params = _tiny_model()
+
+    def serve(order):
+        reqs = _requests(cfg, [5, 7, 4], gen=3)
+        server = BatchedServer(model, params, batch_slots=2, max_len=24,
+                               temperature=0.9, top_p=0.9, seed=5)
+        server.run([reqs[i] for i in order])
+        return {r.rid: r.out for r in reqs}
+
+    assert serve([0, 1, 2]) == serve([2, 0, 1]) == serve([1, 2, 0])
+
+
+def test_sampled_streams_stable_under_prefix_sharing():
+    """Prefix-cache hits change the PREFILL work, not the logits — the
+    seeded sampled streams must be identical with and without sharing."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(31)
+    common = rng.integers(0, cfg.vocab_size, 9, dtype=np.int32)
+    prompts = [np.concatenate(
+        [common, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)]
+    ) for t in (3, 5, 2)]
+
+    def serve(prefix_cache):
+        reqs = [Request(i, p.copy(), 4) for i, p in enumerate(prompts)]
+        server = BatchedServer(model, params, batch_slots=1, max_len=32,
+                               paged=True, page_size=4, num_pages=24,
+                               prefix_cache=prefix_cache,
+                               temperature=0.8, top_k=8, seed=9)
+        stats = server.run(reqs)
+        return {r.rid: r.out for r in reqs}, stats
+
+    base, _ = serve(False)
+    shared, stats = serve(True)
+    assert base == shared
+    assert stats["prefix"]["hits"] > 0  # the shared run really shared
 
 
 def test_serve_cli_boolean_flags():
