@@ -43,7 +43,7 @@ def _time(f, *args, iters=5):
 
 def _serve_stats(engine: str, gen: int = 4,
                  prompt_lens: tuple[int, ...] = (8, 8),
-                 shared_prefix: int = 0,
+                 shared_prefix: int = 0, speculate: int = 0,
                  **server_kw) -> dict:
     """Tiny end-to-end serve run per engine path (reduced llama, CPU).
 
@@ -51,7 +51,10 @@ def _serve_stats(engine: str, gen: int = 4,
     page_size=8, num_pages=...`` for the paged KV cache, or
     ``prefill_chunk=N`` for chunked prefill. ``shared_prefix`` prepends a
     common token prefix to every prompt (the production system-prompt
-    pattern the prefix cache exists for)."""
+    pattern the prefix cache exists for). ``engine="fp"`` serves the
+    unquantized weights; ``speculate=k`` adds a packed-INT4 drafter of the
+    same weights (the self-speculation pairing: cheap quantized drafts,
+    full-precision verification)."""
     from repro.configs import get_config
     from repro.core import QuantPolicy, restructure
     from repro.engine import decode_weight_bytes
@@ -62,17 +65,25 @@ def _serve_stats(engine: str, gen: int = 4,
     cfg = get_config("llama32-1b").reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    qm = restructure(params, QuantPolicy(bits=4, packed=engine == "packed"))
-    if engine == "fake":
-        params = qm.materialize()
-    else:
-        params = qm.as_executable(group=True)
+    draft_params = None
+    if speculate:
+        draft_params = restructure(
+            params, QuantPolicy(bits=4, packed=True)
+        ).as_executable(group=True)
+    if engine != "fp":
+        qm = restructure(params,
+                         QuantPolicy(bits=4, packed=engine == "packed"))
+        if engine == "fake":
+            params = qm.materialize()
+        else:
+            params = qm.as_executable(group=True)
     common = np.random.default_rng(99).integers(
         0, cfg.vocab_size, shared_prefix, dtype=np.int32)
     with ops.count_launches() as launches:
         server = BatchedServer(
             model, params, batch_slots=2,
             max_len=shared_prefix + max(prompt_lens) + gen + 8,
+            speculate=speculate, draft_params=draft_params,
             **server_kw)
         reqs = [
             Request(i, np.concatenate([common, np.random.default_rng(i)
@@ -187,6 +198,34 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("serve/prefix_pages_leaked",
                  float(shared["pages"]["leaked"]),
                  "pages neither owned nor cached after retirement"))
+
+    # speculative decoding: fp target + packed INT4 drafter (the paper's
+    # accuracy result cashed in as serving latency) vs the SAME workload
+    # decoded plainly — accepted tokens per target forward is the win
+    spec_kw = dict(gen=12, prompt_lens=(6, 14), paged=True, page_size=8,
+                   num_pages=16)
+    spec_base = _serve_stats("fp", **spec_kw)
+    serve["spec_baseline_fp"] = spec_base
+    for k in (2, 4):
+        st = _serve_stats("fp", **spec_kw, speculate=k)
+        serve[f"spec_k{k}_fp"] = st
+        sp = st["spec"]
+        rows.append((f"serve/spec_k{k}_emitted_per_target_forward",
+                     sp["emitted_per_target_forward"],
+                     f"{sp['emitted']} tokens / {sp['target_forwards']} "
+                     f"target forwards (accept rate "
+                     f"{sp['acceptance_rate']:.2f})"))
+        rows.append((f"serve/spec_k{k}_target_forwards_per_token",
+                     sp["target_forwards_per_token"],
+                     f"vs 1 decode forward/token non-speculative (k={k})"))
+        rows.append((f"serve/spec_k{k}_tok_per_s", st["tok_per_s"],
+                     f"vs {spec_base['tok_per_s']:.1f} baseline (CPU "
+                     "interpret wall time: not TPU-representative; the "
+                     "forwards/token column is)"))
+        rows.append((f"serve/spec_k{k}_pages_leaked",
+                     float(st["pages"]["leaked"]
+                           + sp["draft_pages_leaked"]),
+                     "target + draft pools after rollback-heavy serving"))
 
     # quantized-storage bytes/token: packed (6 bit/wt) vs 3-plane (12 bit/wt)
     from repro.configs import get_config

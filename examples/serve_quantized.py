@@ -3,11 +3,19 @@ batching): heterogeneous prompt lengths share fixed batch slots via the
 per-slot KV cache lengths, with power-of-two prompt bucketing so slot
 swaps don't recompile per prompt length.
 
-The second run uses the PAGED KV cache: each request reserves only the
-pages its prompt + generation needs from a shared pool (no batch x max_len
-strips), a long prompt is prefilled in chunk waves interleaved with decode
-steps, and tokens stream back through the ``on_token`` callback with
-seeded top-k sampling.
+The second run exercises the paged serving stack end to end: PAGED KV
+cache (each request reserves only the pages its prompt + generation needs
+from a shared pool), CHUNKED PREFILL (the long prompt is fed in 8-token
+waves interleaved with its neighbours' decode steps), the PREFIX CACHE (a
+24-token shared system prompt is prefilled once and its pages retained
+read-only by every later request — cross-wave dedup serializes identical
+prefixes arriving together), and seeded top-k sampling streamed through
+``on_token``.
+
+The third run turns on SPECULATIVE DECODING: the packed INT4 executable
+drafts 4 tokens per request and the fp target verifies them in one
+batched forward — greedy output is bit-identical to plain decoding, with
+fewer target forwards than emitted tokens.
 
     PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -18,13 +26,24 @@ if __name__ == "__main__":
         "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
         "--batch", "4", "--prompt-lens", "4,16,23,9", "--gen", "8",
     ])
-    # paged KV + chunked prefill + seeded top-k sampling: the 40-token
-    # prompt is fed in 8-token waves between decode steps of its neighbours
+    # paged KV + chunked prefill + prefix cache + seeded top-k sampling:
+    # the 40-token prompt is fed in 8-token waves between decode steps of
+    # its neighbours, and the 24-token shared prefix (3 full pages of 8)
+    # is prefilled once, then served from retained read-only pages
     rc = rc or main([
         "--arch", "llama32-1b", "--bits", "4", "--requests", "6",
         "--batch", "2", "--prompt-lens", "4,40,9", "--gen", "6",
-        "--paged", "--page-size", "8", "--num-pages", "14",
-        "--prefill-chunk", "8", "--temperature", "0.7", "--top-k", "16",
-        "--seed", "11",
+        "--paged", "--page-size", "8", "--num-pages", "24",
+        "--prefill-chunk", "8", "--shared-prefix", "24", "--prefix-cache",
+        "--temperature", "0.7", "--top-k", "16", "--seed", "11",
+    ])
+    # speculative decoding: fp target + packed INT4 drafter of the same
+    # weights; exits nonzero on zero acceptance, any leaked page (either
+    # pool), or a verify recompile
+    rc = rc or main([
+        "--arch", "llama32-1b", "--bits", "0", "--requests", "4",
+        "--batch", "2", "--prompt-lens", "6,14", "--gen", "10",
+        "--paged", "--page-size", "8", "--num-pages", "16",
+        "--speculate", "4", "--draft-engine", "packed",
     ])
     raise SystemExit(rc)

@@ -8,7 +8,14 @@ Pallas paged-attention decode kernel lives with the other kernels in
 ``repro.kernels.paged_attention``.
 """
 from repro.kvcache.allocator import OutOfPages, PageAllocator
-from repro.kvcache.paged import copy_page, logical_view, paged_write, pages_for
+from repro.kvcache.paged import (
+    copy_page,
+    logical_view,
+    paged_write,
+    pages_for,
+    restore_rows,
+    rewind,
+)
 from repro.kvcache.prefix import PrefixIndex
 
 __all__ = [
@@ -19,4 +26,6 @@ __all__ = [
     "logical_view",
     "paged_write",
     "pages_for",
+    "restore_rows",
+    "rewind",
 ]

@@ -106,6 +106,22 @@ class PageAllocator:
         self.cow_copies += 1
         return fresh, True
 
+    def truncate(self, pages: list[int], keep: int) -> list[int]:
+        """Release the TAIL of an owner's page list: drops one reference
+        from each of ``pages[keep:]`` (shared pages survive under their
+        other owners) and returns the kept prefix.
+
+        This is the early-release half of speculative rollback: an
+        owner whose logical high-water mark shrank permanently — e.g. the
+        draft cache of a request that can no longer draft (the drafter is
+        done one round before the target retires) — returns its unused
+        tail to the pool without waiting for retirement. ``keep=0`` is a
+        full release."""
+        if keep < 0:
+            raise ValueError(f"cannot keep {keep} pages")
+        self.free(pages[keep:])
+        return list(pages[:keep])
+
     def free(self, pages: Iterable[int]) -> None:
         """Drop one owner per page; pages at refcount 0 return to the pool."""
         for p in pages:

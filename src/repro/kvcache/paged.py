@@ -34,6 +34,44 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 
 
+def rewind(cache_len: jax.Array, mask: jax.Array,
+           new_len: jax.Array) -> jax.Array:
+    """Rewind per-slot fill lengths: rows selected by ``mask`` (B,) bool
+    take ``new_len``; others keep theirs.
+
+    This is how speculative decoding UN-WRITES rejected draft tokens: the
+    verify forward scattered KV for all k+1 fed positions, and a rejection
+    pulls ``len`` back to the accepted count — the rejected positions
+    become unreachable (attention masks keys ``>= len``) and the next wave
+    overwrites them, exactly the invariant that makes recycled slots and
+    stale dense rows safe. No page changes hands: reservation math is
+    untouched, and every rewound position sits in a page the slot
+    exclusively owns (the scheduler's COW guard ran before the write), so
+    nothing is leaked or double-written."""
+    return jnp.where(mask, new_len, cache_len).astype(jnp.int32)
+
+
+def restore_rows(cache: dict, snap: dict, mask: jax.Array,
+                 keys: list[str]) -> dict:
+    """Restore snapshot rows of recurrent cache leaves for the batch
+    slots selected by ``mask`` (B,) bool.
+
+    Recurrent state cannot be un-written by a length rewind (it has no
+    positional axis to mask), so speculative rollback restores a
+    pre-write snapshot instead — for the slots that absorbed rejected
+    tokens only. All recurrent leaves are laid out ``(L, B, ...)``
+    (``models.model._RECURRENT_KEYS``); that batch-on-axis-1 convention
+    lives HERE, shared by the target verifier and the drafter. Snapshots
+    are plain references (jax arrays are immutable), so this is one
+    ``where`` per leaf, no copies held."""
+    out = dict(cache)
+    for key in keys:
+        leaf = cache[key]
+        sel = mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+        out[key] = jnp.where(sel, snap[key], leaf)
+    return out
+
+
 def copy_page(pool: jax.Array, src: int, dst: int) -> jax.Array:
     """Copy one physical page's contents onto another (copy-on-write).
 

@@ -68,14 +68,32 @@ def _digest(tokens: np.ndarray) -> bytes:
 class _Entry:
     page: int                      # physical page id (index holds one ref)
     state: dict[str, Any] | None   # recurrent rows at the boundary, or None
+    state_bytes: int = 0           # host bytes the snapshot pins (0 if None)
+
+
+def _state_nbytes(state: dict[str, Any]) -> int:
+    return sum(np.asarray(v).nbytes for v in state.values())
 
 
 class PrefixIndex:
-    """Chain-hash map from full prompt pages to shared physical pages."""
+    """Chain-hash map from full prompt pages to shared physical pages.
 
-    def __init__(self, page_size: int, allocator: PageAllocator):
+    ``state_budget`` (bytes, 0 = unbounded) caps the TOTAL host memory the
+    recurrent boundary-state snapshots may pin. Snapshots are a per-entry
+    sidecar, not the entry itself: when the budget is exceeded, the
+    least-recently-used entries lose their snapshot (``state = None``)
+    while their page entry — and the KV reuse it enables for attention
+    families — stays indexed. A recurrent-family ``match(need_state=True)``
+    simply walks back to the deepest boundary that still has one (or
+    misses and prefills in full), so budget pressure degrades hit DEPTH,
+    never correctness. A single snapshot larger than the whole budget is
+    refused outright."""
+
+    def __init__(self, page_size: int, allocator: PageAllocator,
+                 state_budget: int = 0):
         self.page_size = page_size
         self.alloc = allocator
+        self.state_budget = state_budget
         # key = tuple of per-page digests for pages 0..j; LRU order
         self._entries: OrderedDict[tuple, _Entry] = OrderedDict()
         self.hits = 0
@@ -83,6 +101,8 @@ class PrefixIndex:
         self.hit_tokens = 0
         self.inserted = 0
         self.evicted = 0
+        self.state_bytes = 0       # snapshot bytes currently held
+        self.states_evicted = 0    # snapshots dropped (budget or refused)
 
     # -- queries ------------------------------------------------------------
 
@@ -177,16 +197,53 @@ class PrefixIndex:
             if key in self._entries:
                 e = self._entries[key]
                 if e.state is None:  # a later request computed the boundary
-                    e.state = (states or {}).get((j + 1) * self.page_size)
+                    self._store_state(
+                        e, (states or {}).get((j + 1) * self.page_size)
+                    )
                 self._entries.move_to_end(key)
                 continue
             page = pages[j]
             self.alloc.retain([page])
-            state = (states or {}).get((j + 1) * self.page_size)
-            self._entries[key] = _Entry(page=page, state=state)
+            e = _Entry(page=page, state=None)
+            self._entries[key] = e
+            self._store_state(e, (states or {}).get((j + 1) * self.page_size))
             new += 1
         self.inserted += new
         return new
+
+    def _store_state(self, entry: _Entry, state: dict[str, Any] | None):
+        """Attach a boundary snapshot to ``entry`` under the size budget:
+        over-budget storage drops snapshots from LRU entries first (the
+        fresh one is hottest); a snapshot alone exceeding the budget is
+        refused."""
+        if state is None:
+            return
+        nbytes = _state_nbytes(state)
+        if self.state_budget and nbytes > self.state_budget:
+            self.states_evicted += 1  # refused at the door
+            return
+        entry.state = state
+        entry.state_bytes = nbytes
+        self.state_bytes += nbytes
+        if not self.state_budget:
+            return
+        while self.state_bytes > self.state_budget:
+            victim = next(
+                (e for e in self._entries.values()
+                 if e.state is not None and e is not entry),
+                None,
+            )
+            if victim is None:
+                break
+            self._drop_state(victim)
+
+    def _drop_state(self, entry: _Entry) -> None:
+        if entry.state is None:
+            return
+        entry.state = None
+        self.state_bytes -= entry.state_bytes
+        entry.state_bytes = 0
+        self.states_evicted += 1
 
     def evict_for(self, n_pages: int) -> bool:
         """Release LRU entries until ``n_pages`` can be allocated.
@@ -215,6 +272,7 @@ class PrefixIndex:
             if victim is None:
                 return False  # nothing evictable frees a page: keep the cache
             e = self._entries.pop(victim)
+            self._drop_state(e)
             self.alloc.free([e.page])
             self.evicted += 1
         return True
@@ -223,6 +281,7 @@ class PrefixIndex:
         """Drop every cached reference (explicit cache teardown)."""
         while self._entries:
             _, e = self._entries.popitem(last=False)
+            self._drop_state(e)
             self.alloc.free([e.page])
             self.evicted += 1
 
@@ -237,4 +296,9 @@ class PrefixIndex:
             "hit_tokens": self.hit_tokens,
             "inserted": self.inserted,
             "evicted": self.evicted,
+            "states_held": sum(
+                1 for e in self._entries.values() if e.state is not None
+            ),
+            "state_bytes": self.state_bytes,
+            "states_evicted": self.states_evicted,
         }

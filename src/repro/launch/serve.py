@@ -44,6 +44,19 @@ shaping for smokes/benches).
           with grouped QKV / gate+up launches (4 quantized matmul launches
           per block instead of 7) — the real deployment path
   planes  paper-faithful 3-plane storage through the fused k-plane kernel
+
+``--speculate k`` (paged mode) turns on SPECULATIVE DECODING: a draft
+model — by default the packed INT4 executable of the SAME weights
+(``--draft-engine``/``--draft-bits``), the paper's accuracy result turned
+into a latency win — proposes k tokens per request over its own paged KV
+cache (``repro.spec``), and the target model scores all k+1 positions in
+ONE batched forward (drafted tokens are just a prefill chunk whose logits
+we keep). Accepted drafts are emitted in bulk; rejected ones rewind each
+slot's ``cache["len"]`` (and, for recurrent families, restore + recompute
+the boundary state) with no page leaked or double-written. Greedy decoding
+is BIT-IDENTICAL to non-speculative serving; with sampling, standard
+rejection sampling against the per-request seeded streams keeps each
+emitted token an exact draw from the target distribution.
 """
 from __future__ import annotations
 
@@ -58,6 +71,8 @@ import numpy as np
 
 from repro.kvcache import PageAllocator, PrefixIndex, copy_page, pages_for
 from repro.models.model import _RECURRENT_KEYS, reset_slots
+from repro.spec import Drafter, SpecStats, Verifier
+from repro.spec.policy import accept_greedy, accept_speculative, shaped_probs
 
 
 @dataclasses.dataclass
@@ -75,6 +90,7 @@ class Request:
     indexed: bool = False       # prompt pages registered in the prefix index
     snaps: dict = dataclasses.field(default_factory=dict)  # boundary -> state
     rng: np.random.Generator | None = None  # per-request sampling stream
+    dfed: int = 0               # prompt tokens prefilled into the DRAFT cache
 
 
 def sample_token(
@@ -87,27 +103,15 @@ def sample_token(
 ) -> int:
     """One token from a (V,) logits row. ``temperature <= 0`` is greedy
     argmax (the deterministic default the serving tests pin); otherwise
-    temperature -> top-k filter -> top-p nucleus -> seeded draw."""
-    logits = np.asarray(logits, np.float64)
+    temperature -> top-k filter -> top-p nucleus -> seeded draw. The
+    shaping lives in ``spec.policy.shaped_probs`` — the SAME distribution
+    the speculative rejection sampler verifies against."""
     if temperature <= 0.0:
-        return int(np.argmax(logits))
+        return int(np.argmax(np.asarray(logits)))
     if rng is None:
         rng = np.random.default_rng()
-    logits = logits / temperature
-    if 0 < top_k < logits.size:
-        kth = np.partition(logits, -top_k)[-top_k]
-        logits = np.where(logits < kth, -np.inf, logits)
-    logits = logits - logits.max()
-    probs = np.exp(logits)
-    probs /= probs.sum()
-    if top_p < 1.0:
-        order = np.argsort(-probs)
-        cum = np.cumsum(probs[order])
-        # minimal prefix whose mass reaches top_p (always >= 1 token)
-        cut = int(np.searchsorted(cum, top_p)) + 1
-        nucleus = np.zeros_like(probs)
-        nucleus[order[:cut]] = probs[order[:cut]]
-        probs = nucleus / nucleus.sum()
+    probs = shaped_probs(np.asarray(logits), temperature=temperature,
+                         top_k=top_k, top_p=top_p)
     return int(rng.choice(probs.size, p=probs))
 
 
@@ -159,9 +163,11 @@ class BatchedServer:
     def __init__(self, model, params, batch_slots: int, max_len: int,
                  bucket_min: int = 8, *, paged: bool = False,
                  page_size: int = 16, num_pages: int | None = None,
-                 prefix_cache: bool = False,
+                 prefix_cache: bool = False, prefix_state_budget: int = 0,
                  prefill_chunk: int = 0, temperature: float = 0.0,
-                 top_k: int = 0, top_p: float = 1.0, seed: int = 0):
+                 top_k: int = 0, top_p: float = 1.0, seed: int = 0,
+                 speculate: int = 0, draft_params=None,
+                 draft_num_pages: int | None = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -175,11 +181,26 @@ class BatchedServer:
         self._on_token: Callable | None = None
         self.active: list[Request | None] = [None] * batch_slots
         self.buckets_used: list[int] = []
-        self.events: list[str] = []  # "prefill" / "decode" op trace
+        self.events: list[str] = []  # "prefill" / "verify" / "decode" trace
         self.prefill_tokens = 0     # tokens actually fed through prefill
         self.pages_allocated = 0    # fresh pages allocated (incl. COW copies)
+        self.prefix_deferrals = 0   # admissions held back for cross-wave dedup
         if prefix_cache and not paged:
             raise ValueError("prefix_cache requires paged=True")
+        if speculate and not paged:
+            raise ValueError("speculate requires paged=True (draft KV and "
+                             "verify rollback ride the paged cache)")
+        if speculate and draft_params is None:
+            raise ValueError("speculate requires draft_params (the draft "
+                             "model's executable tree)")
+        if speculate and speculate + 1 > max_len:
+            raise ValueError(f"speculate={speculate} verify chunk exceeds "
+                             f"max_len={max_len}")
+        if speculate and (model.cfg.encdec or model.cfg.family == "vlm"):
+            raise ValueError(
+                f"{model.cfg.name}: speculative decoding covers token-only "
+                "LM families (enc-dec / VLM verify_step is a follow-on)"
+            )
 
         if paged:
             self.page_size = page_size
@@ -197,8 +218,11 @@ class BatchedServer:
                 if k in ("pages", "shared_pages")
             )
             self._page_bytes = pool_bytes // self.num_pages
-            self.prefix = (PrefixIndex(page_size, self.alloc)
-                           if prefix_cache else None)
+            self.prefix = (
+                PrefixIndex(page_size, self.alloc,
+                            state_budget=prefix_state_budget)
+                if prefix_cache else None
+            )
             # recurrent leaves are part of a prefix (KV pages alone are
             # not): their boundary states ride the index as snapshots
             self._recurrent = [k for k in _RECURRENT_KEYS if k in self.cache]
@@ -215,6 +239,20 @@ class BatchedServer:
             )
             # contiguous strips reserve max_len rows per slot up front
             self._kv_row_bytes = kv_bytes // batch_slots
+
+        self.speculate = speculate
+        if speculate:
+            self.drafter = Drafter(
+                model, draft_params, batch_slots, max_len,
+                page_size=page_size, width=speculate + 1,
+                num_pages=draft_num_pages,
+            )
+            self.verifier = Verifier(model, params, self._recurrent)
+            self.spec = SpecStats(k=speculate)
+        else:
+            self.drafter = None
+            self.verifier = None
+            self.spec = None
 
         self._decode = jax.jit(model.decode_step)
 
@@ -261,17 +299,78 @@ class BatchedServer:
             self.cache["page_table"] = jnp.asarray(self._table)
             self._table_dirty = False
 
+    def _wants_draft(self, r: Request) -> bool:
+        """Speculation needs at least one draftable step: ``kk = min(k,
+        max_new - emitted - 1)`` is positive for some round only when
+        ``max_new >= 3`` — shorter requests ride the verify wave as plain
+        single-token rows and never touch the draft cache."""
+        return self.drafter is not None and r.max_new >= 3
+
+    def _common_prefix_pages(self, a: np.ndarray, b: np.ndarray) -> int:
+        """Leading FULL pages on which two prompts are token-identical."""
+        ps = self.page_size
+        n = 0
+        for j in range(min(len(a), len(b)) // ps):
+            if not np.array_equal(a[j * ps:(j + 1) * ps],
+                                  b[j * ps:(j + 1) * ps]):
+                break
+            n += 1
+        return n
+
+    def _select_candidates(self, pending: list[Request],
+                           n_free: int) -> list[Request]:
+        """Pick up to ``n_free`` pending requests to admit, DEFERRING any
+        whose prompt shares more full pages with a not-yet-indexed request
+        (already active, or chosen earlier for this same wave) than the
+        prefix index can currently serve: admitting it now would prefill
+        the common prefix twice, because the index only learns a prompt
+        once it is fully prefilled. Serializing just those requests turns
+        same-wave duplicates into ordinary cache hits one wave later — the
+        deferral resolves as soon as the overlapping request finishes
+        prefilling (it is driven by the same run loop), so no deadlock."""
+        if self.prefix is None:
+            return pending[:n_free]
+        unindexed = [r for r in self.active
+                     if r is not None and not r.indexed]
+        cands: list[Request] = []
+        for req in pending:
+            if len(cands) == n_free:
+                break
+            others = unindexed + cands
+            if not others:
+                # nothing mid-prefill to duplicate against: admit without
+                # probing — the steady blocked-on-pool retry path (every
+                # active already indexed) never re-hashes prompts
+                cands.append(req)
+                continue
+            overlap = max(self._common_prefix_pages(req.prompt, o.prompt)
+                          for o in others)
+            if overlap == 0:
+                cands.append(req)
+                continue
+            matched, _, _ = self.prefix.match(
+                req.prompt, need_state=bool(self._recurrent), record=False
+            )
+            if overlap * self.page_size > matched:
+                self.prefix_deferrals += 1
+                continue
+            cands.append(req)
+        return cands
+
     def _fill_slots(self, pending: list[Request]) -> int:
         """Admit waiting requests into free slots, then run one prefill
         wave. Returns the number of requests admitted (0 when the free-page
-        budget is exhausted — callers wait for retirements)."""
+        budget is exhausted — callers wait for retirements — or when every
+        pending candidate is deferred for cross-wave prefix dedup)."""
         free = [i for i in range(self.slots) if self.active[i] is None]
-        n = min(len(free), len(pending))
-        if not n:
+        if not free or not pending:
+            return 0
+        cands = self._select_candidates(pending, len(free))
+        if not cands:
             return 0
         # validate BEFORE mutating active/pending: a rejected request must
         # not strand its wave-mates admitted-but-never-prefilled
-        for r in pending[:n]:
+        for r in cands:
             if r.rid < 0:
                 # the per-request sampling stream seeds from (seed, rid):
                 # SeedSequence rejects negatives, and failing AFTER pages
@@ -301,16 +400,22 @@ class BatchedServer:
                     f"{self.num_pages}"
                 )
         admitted = 0
-        for i in free[:n]:
-            req = pending[0]
+        for i, req in zip(free, cands):
             if self.paged:
                 if not self._admit_paged(i, req):
                     break  # budget exhausted: the rest wait for retirements
             else:
                 req.kv_reserved_bytes = self._kv_row_bytes
             req.rng = np.random.default_rng([self._seed, req.rid])
-            pending.pop(0)
+            for qi, p in enumerate(pending):  # identity removal: Request
+                if p is req:                  # __eq__ compares ndarrays
+                    del pending[qi]
+                    break
             self.active[i] = req
+            if self._wants_draft(req):
+                # draft high-water: one row less than the target's — the
+                # drafter never ingests the final emitted token
+                self.drafter.admit(i, len(req.prompt) + req.max_new - 2)
             admitted += 1
         if admitted:
             self._prefill_wave()
@@ -428,16 +533,50 @@ class BatchedServer:
             self.alloc.free(req.pages)
             self._table[i] = 0  # cosmetic: stale ids are unreachable anyway
             self._table_dirty = True
+        if self._wants_draft(req):
+            self.drafter.release(i)  # normally already released (kk hit 0)
+
+    def _draft_prefill_wave(self) -> bool:
+        """Mirror prefill into the DRAFT cache: the drafter scores
+        continuations of the same prompt, so it must ingest the prompt too
+        (always from position 0 — a target-side prefix hit shares no pages
+        with the draft pool). Runs on the same wave cadence as the target
+        prefill; logits are discarded."""
+        if self.drafter is None:
+            return False
+        rows = [(i, r) for i, r in enumerate(self.active)
+                if r is not None and self._wants_draft(r)
+                and r.dfed < len(r.prompt)]
+        if not rows:
+            return False
+        chunk = self.prefill_chunk or self.max_len
+        sizes = {i: min(chunk, len(r.prompt) - r.dfed) for i, r in rows}
+        lb = min(_bucket(max(sizes.values()), self.bucket_min), self.max_len)
+        tokens = np.zeros((self.slots, lb), np.int32)
+        lengths = np.zeros((self.slots,), np.int32)
+        fresh = np.zeros((self.slots,), bool)
+        fed_after: dict[int, int] = {}
+        for i, r in rows:
+            c = sizes[i]
+            tokens[i, :c] = r.prompt[r.dfed : r.dfed + c]
+            lengths[i] = c
+            fresh[i] = r.dfed == 0
+            r.dfed += c
+            fed_after[i] = r.dfed
+        self.drafter.prefill_wave(tokens, lengths, fresh, fed_after)
+        self.events.append("draft_prefill")
+        return True
 
     def _prefill_wave(self) -> bool:
         """ONE batched prefill advancing every mid-prompt row by one chunk
         (the whole remaining prompt when ``prefill_chunk == 0``). Rows whose
         prompt completes get their first token sampled from this wave's
         logits at their own last real position."""
+        drafted = self._draft_prefill_wave()
         rows = [(i, r) for i, r in enumerate(self.active)
                 if r is not None and r.fed < len(r.prompt)]
         if not rows:
-            return False
+            return drafted
         chunk = self.prefill_chunk or self.max_len
         sizes = {}
         for i, r in rows:
@@ -518,6 +657,121 @@ class BatchedServer:
                 self._emit(r, pick(i))
         return True
 
+    def _spec_ready(self, i: int, r: Request | None) -> bool:
+        """Decode-ready for a speculative round: target prompt fully
+        prefilled AND (for drafting requests) the draft cache too — a
+        prefix-cache hit can finish the target's prefill first, in which
+        case the request waits a wave for its drafter rather than decode
+        un-drafted."""
+        if r is None or r.done or not r.out or r.fed < len(r.prompt):
+            return False
+        if self._wants_draft(r) and r.dfed < len(r.prompt):
+            return False
+        return True
+
+    def _spec_round(self) -> bool:
+        """One draft -> verify -> accept/rollback round for every
+        decode-ready slot (spec mode's replacement for :meth:`step`).
+
+        Each drafting slot proposes ``kk = min(k, remaining - 1)`` tokens
+        (clamped so the verify chunk NEVER writes past the request's
+        standard page reservation — speculation needs no extra pages);
+        slots out of draft budget ride the same verify wave as plain
+        single-token rows, so the target model runs exactly ONE forward
+        per round regardless of the mix, and ``decode_step`` is never
+        traced in spec mode."""
+        rows = [(i, r) for i, r in enumerate(self.active)
+                if self._spec_ready(i, r)]
+        if not rows:
+            return False
+        greedy = self.sampling["temperature"] <= 0.0
+        kks: dict[int, int] = {}
+        jobs = []
+        for i, r in rows:
+            kk = (min(self.speculate, r.max_new - len(r.out) - 1)
+                  if self._wants_draft(r) else 0)
+            kks[i] = kk
+            if kk > 0:
+                jobs.append((
+                    i,
+                    np.concatenate([r.prompt,
+                                    np.asarray(r.out, np.int32)]),
+                    kk,
+                ))
+        drafts: dict[int, list[int]] = {i: [] for i, _ in rows}
+        qdists: dict[int, np.ndarray] = {}
+        if jobs:
+            d, q = self.drafter.draft_round(
+                jobs, sampling=self.sampling,
+                rngs={i: self.active[i].rng for i, _, _ in jobs},
+            )
+            drafts.update(d)
+            qdists.update(q)
+        # one verify forward scores every row's chunk at once
+        width = self.speculate + 1
+        tokens = np.zeros((self.slots, width), np.int32)
+        lengths = np.zeros((self.slots,), np.int32)
+        base = np.zeros((self.slots,), np.int32)
+        for i, r in rows:
+            di = drafts[i]
+            base[i] = len(r.prompt) + len(r.out) - 1
+            tokens[i, 0] = r.out[-1]
+            tokens[i, 1 : 1 + len(di)] = di
+            lengths[i] = 1 + len(di)
+            if self.paged:
+                self._cow_guard(i, r, int(base[i]), 1 + len(di))
+        self._sync_table()
+        scores, self.cache, snap = self.verifier.score(
+            self.cache, tokens, lengths, greedy=greedy
+        )
+        self.events.append("verify")
+        self.spec.rounds += 1
+        self.spec.target_forwards += 1
+        # host-side acceptance per request, then one batched rollback
+        new_lens = base + lengths  # post-verify lens
+        rejected = np.zeros((self.slots,), bool)
+        verdicts: dict[int, int] = {}
+        emits: dict[int, int] = {}
+        for i, r in rows:
+            di = drafts[i]
+            if greedy:
+                m, tok = accept_greedy(di, scores[i])
+            else:
+                p = np.stack([
+                    shaped_probs(scores[i, j], **self.sampling)
+                    for j in range(len(di) + 1)
+                ])
+                m, tok = accept_speculative(di, qdists.get(i), p, r.rng)
+            self.spec.drafted += len(di)
+            self.spec.accepted += m
+            if kks[i] > 0:
+                verdicts[i] = m
+            if m < len(di):  # rejected suffix: un-write it
+                rejected[i] = True
+                new_lens[i] = base[i] + m + 1
+            emits[i] = tok
+        if rejected.any():
+            self.cache = self.verifier.rollback(
+                self.cache, snap, base, new_lens, rejected, tokens
+            )
+            if self._recurrent:
+                self.spec.recompute_forwards += 1
+                self.spec.target_forwards += 1
+        if verdicts:
+            self.drafter.finish_round(verdicts)
+        for i, r in rows:
+            for t in drafts[i][: verdicts.get(i, 0)]:
+                self._emit(r, t)
+                self.spec.emitted += 1
+            self._emit(r, emits[i])
+            self.spec.emitted += 1
+            if (self._wants_draft(r)
+                    and r.max_new - len(r.out) - 1 <= 0):
+                # out of draft budget: the drafter is done with this slot
+                # one round before the target retires — release its pages
+                self.drafter.release(i)
+        return True
+
     def run(self, requests: list[Request],
             on_token: Callable[[Request, int], None] | None = None) -> dict:
         """Serve ``requests`` to completion. ``on_token(request, token)``
@@ -540,7 +794,8 @@ class BatchedServer:
                 # interleave: one chunk of prompt feeding, then one decode
                 # step — a long prompt never stalls ongoing decodes
                 fed = self._prefill_wave()
-                stepped = self.step()
+                stepped = (self._spec_round() if self.speculate
+                           else self.step())
                 if stepped:
                     steps += 1
                 if fed or stepped:
@@ -584,6 +839,17 @@ class BatchedServer:
             }
             if self.prefix is not None:
                 stats["prefix"] = self.prefix.stats()
+                stats["prefix"]["admission_deferrals"] = self.prefix_deferrals
+        if self.speculate:
+            self.spec.draft_forwards = self.drafter.forwards
+            stats["spec"] = {
+                **self.spec.summary(),
+                "verify_compiles": self.verifier.compiles,
+                "draft_compiles": self.drafter.compiles(),
+                # the draft pool must drain like the target pool: a draft
+                # page alive after every request retired is a real leak
+                "draft_pages_leaked": self.drafter.alloc.in_use,
+            }
         return stats
 
     def drop_prefix_cache(self) -> None:
@@ -634,6 +900,21 @@ def build_parser() -> argparse.ArgumentParser:
                     help="share common prompt prefixes via page refcounts "
                          "(paged mode): matched full pages are retained "
                          "read-only, only the tail is prefilled")
+    ap.add_argument("--prefix-state-budget", type=int, default=0,
+                    help="byte cap on recurrent boundary-state snapshots "
+                         "held by the prefix index (0 = unbounded); over "
+                         "budget, LRU entries lose their snapshot but keep "
+                         "their KV pages")
+    ap.add_argument("--speculate", type=int, default=0,
+                    help="speculative decoding: draft k tokens per request "
+                         "with the quantized draft model and verify them "
+                         "in one target forward (paged mode; 0 = off)")
+    ap.add_argument("--draft-engine", default="packed",
+                    choices=("fake", "packed", "planes"),
+                    help="execution path for the draft model (built from "
+                         "the same weights; packed INT4 is the point)")
+    ap.add_argument("--draft-bits", type=int, default=4,
+                    help="draft-model quantization bits (SplitQuantV2)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token prefix to every "
                          "generated prompt (shared-prompt workload "
@@ -665,6 +946,23 @@ def main(argv=None):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     w_bytes = decode_weight_bytes(params, tie_embeddings=cfg.tie_embeddings)
+    draft_params = None
+    if args.speculate:
+        # the drafter quantizes the SAME weights the target serves —
+        # self-speculation is the paper's accuracy claim cashed in as
+        # serving latency (built before the target tree replaces params)
+        t0 = time.time()
+        qd = restructure(params, QuantPolicy(
+            bits=args.draft_bits, split=args.split,
+            packed=args.draft_engine == "packed",
+        ))
+        if args.draft_engine == "fake":
+            draft_params = qd.materialize()
+        else:
+            draft_params = qd.as_executable(group=not args.no_group)
+        print(f"[serve] draft model: SplitQuantV2 INT{args.draft_bits} "
+              f"({args.draft_engine} engine), {time.time()-t0:.1f}s, "
+              f"{weight_bytes(draft_params)/1e6:.2f} MB weights")
     if args.bits:
         t0 = time.time()
         qm = restructure(params, QuantPolicy(
@@ -703,9 +1001,11 @@ def main(argv=None):
         paged=args.paged, page_size=args.page_size,
         num_pages=args.num_pages or None,
         prefix_cache=args.prefix_cache,
+        prefix_state_budget=args.prefix_state_budget,
         prefill_chunk=args.prefill_chunk,
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         seed=args.seed,
+        speculate=args.speculate, draft_params=draft_params,
     )
     stats = server.run(reqs)
     # decode reads every weight once per step: bytes/token on one chip
@@ -732,6 +1032,19 @@ def main(argv=None):
         if server.alloc.in_use:
             print(f"[serve] FAIL: {server.alloc.in_use} pages still in use "
                   "after prefix-cache drop")
+            return 1
+    if args.speculate:
+        sp = stats["spec"]
+        if sp["drafted"] and sp["acceptance_rate"] <= 0:
+            print("[serve] FAIL: speculation accepted zero draft tokens")
+            return 1
+        if sp["draft_pages_leaked"]:
+            print(f"[serve] FAIL: {sp['draft_pages_leaked']} DRAFT KV "
+                  "pages leaked")
+            return 1
+        if sp["verify_compiles"] > 1:
+            print(f"[serve] FAIL: verify compiled {sp['verify_compiles']}x "
+                  "(fixed k+1 chunk must compile at most once)")
             return 1
     return 0
 

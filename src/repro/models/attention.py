@@ -228,6 +228,19 @@ def attention_block(
     logical strip, positions below ``cache_len`` included. The scheduler
     guarantees every page written here has refcount 1 (copy-on-write
     happens host-side before the wave — see ``kvcache.prefix``).
+
+    Speculative verification is the MULTI-TOKEN decode case of the paged
+    branch: ``S = k + 1`` drafted tokens scatter at each row's
+    ``cache_len`` offset and attend causally over the row's logical strip
+    with ``k_len = cache_len + seq_lens`` — exactly a prefill chunk, which
+    is why verify logits match sequential decoding position for position.
+    The Pallas paged-decode kernel stays on the ``S == 1`` fast path
+    (scalar-prefetch page lookups assume one query row); multi-token
+    verify takes the gather path on every backend. Rejected drafts are
+    un-written by REWINDING the row's length afterwards
+    (``kvcache.rewind``) — the scattered KV past the rewound length is
+    unreachable here (``k < k_len`` masks it) and the next wave's scatter
+    overwrites it, so no wipe pass is ever needed.
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd

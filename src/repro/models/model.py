@@ -74,6 +74,7 @@ class Model:
     train_loss: Callable[..., tuple[jax.Array, dict]]
     prefill: Callable[..., tuple[jax.Array, Any]]
     decode_step: Callable[..., tuple[jax.Array, Any]]
+    verify_step: Callable[..., tuple[jax.Array, Any]]
     init_cache: Callable[..., Any]
     init_paged_cache: Callable[..., Any]
     input_specs: Callable[[ShapeConfig], dict]
@@ -278,6 +279,34 @@ def build_model(cfg: ArchConfig) -> Model:
         logits = tfm.logits_fn(cfg, params, hidden)
         return logits, cache
 
+    def verify_step(params, tokens, lengths, cache):
+        """Score a multi-token chunk at EVERY position. tokens: (B, S).
+
+        The speculative-decoding verifier: row ``b`` feeds its
+        ``lengths[b]`` drafted tokens as a prefill-style chunk continuing
+        at its own ``cache["len"]`` (positions, KV write offsets and
+        attention masks all ride the per-row contract that makes chunked
+        prefill exact), and the returned logits ``(B, S, V)`` hold the
+        target distribution after the context, after draft 1, ... —
+        everything acceptance needs from ONE forward. Rows with
+        ``lengths == 0`` are frozen (no write, no length advance), same as
+        inactive decode slots. Unlike :func:`prefill` there is no slot
+        reset and no last-position gather; the caller rewinds
+        ``cache["len"]`` past any rejected suffix (``kvcache.rewind``)."""
+        if cfg.encdec or cfg.family == "vlm":
+            raise NotImplementedError(
+                f"{cfg.name}: verify_step covers token-only LM families "
+                "(enc-dec / VLM speculative decoding is a follow-on)"
+            )
+        x = tfm.embed_tokens(cfg, params, tokens)
+        b, s = tokens.shape
+        pos = _lm_positions(b, s) + cache["len"].astype(jnp.int32)[:, None]
+        hidden, new_cache, _ = tfm.decoder_forward(
+            cfg, params, x, pos, cache=cache, seq_lens=lengths
+        )
+        logits = tfm.logits_fn(cfg, params, hidden)
+        return logits, new_cache
+
     def decode_step(params, tokens, cache, pos3=None, active=None):
         """One new token per sequence. tokens: (B, 1).
 
@@ -362,6 +391,7 @@ def build_model(cfg: ArchConfig) -> Model:
     return Model(
         cfg=cfg, init=lambda rng: tfm.init_params(rng, cfg),
         train_loss=train_loss, prefill=prefill, decode_step=decode_step,
+        verify_step=verify_step,
         init_cache=init_cache, init_paged_cache=init_paged_cache,
         input_specs=input_specs, cache_specs=cache_specs,
     )

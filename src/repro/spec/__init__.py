@@ -1,0 +1,25 @@
+"""Speculative decoding: INT4 SplitQuant drafter + batched verify/rollback.
+
+``drafter`` runs the packed INT4 executable for k draft tokens per request
+over its own paged KV cache; ``verify`` scores all k+1 positions in one
+target-model forward (the chunked-prefill scatter contract) and rolls
+rejected tokens back without leaking a page; ``policy`` is the host-side
+acceptance math — greedy (bit-identical to target-only decoding) and
+standard rejection sampling (distribution-preserving).
+"""
+from repro.spec.drafter import Drafter
+from repro.spec.policy import (
+    accept_greedy,
+    accept_speculative,
+    shaped_probs,
+)
+from repro.spec.verify import SpecStats, Verifier
+
+__all__ = [
+    "Drafter",
+    "SpecStats",
+    "Verifier",
+    "accept_greedy",
+    "accept_speculative",
+    "shaped_probs",
+]

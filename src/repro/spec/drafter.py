@@ -1,0 +1,247 @@
+"""INT4 draft model: the packed SplitQuant executable as a drafter.
+
+SplitQuantV2's result — GPU-free INT4 quantization that tracks the fp
+model's outputs — is exactly the property a *draft* model needs for
+self-speculative decoding: the packed executable streams 6 bits/weight
+through the fused Pallas kernels (a fraction of the target's decode
+bandwidth) and proposes k tokens per round that the fp target verifies in
+ONE batched forward. The drafter here is a miniature paged server:
+
+* its own paged KV cache over its own :class:`PageAllocator` pool (sized
+  dense-equivalent by default so draft admission can never fail once
+  target admission succeeded) — the draft cache never aliases target
+  pages, and the DRAFT pool must also return to zero in use (a leaked
+  draft page is as real a leak as a target one),
+* slot-aligned with the target server: slot ``i`` of the draft cache
+  serves the same request as slot ``i`` of the target cache,
+* a ``valid`` watermark per slot — the number of COMMITTED tokens
+  (prompt + emitted) whose KV the draft cache holds. Every round starts
+  with a catch-up chunk feeding ``committed[valid:]`` (normally just the
+  token the last verification emitted) through ``model.verify_step`` to
+  get the first draft distribution, then greedy/sampled decode steps for
+  the remaining drafts.
+
+Rollback mirrors the verifier: rejected drafts rewind the draft
+``cache["len"]`` to the committed watermark; recurrent families restore
+the post-catch-up snapshot (state at exactly ``committed`` tokens) and
+let the NEXT round's catch-up chunk re-feed the accepted drafts — which
+bounds the catch-up width at ``k + 1`` so the chunk forward never
+recompiles.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kvcache import PageAllocator, pages_for
+from repro.kvcache.paged import restore_rows, rewind
+from repro.models.model import _RECURRENT_KEYS, reset_slots
+from repro.spec.policy import shaped_probs
+
+
+class Drafter:
+    """Paged draft-model runner, slot-aligned with a BatchedServer."""
+
+    def __init__(self, model, params, slots: int, max_len: int, *,
+                 page_size: int, width: int, num_pages: int | None = None):
+        self.params = params
+        self.slots = slots
+        self.page_size = page_size
+        self.width = width  # catch-up chunk width == speculate + 1
+        pages_per_row = pages_for(max_len, page_size)
+        self.num_pages = num_pages or slots * pages_per_row
+        self.cache = model.init_paged_cache(
+            slots, max_len, page_size=page_size, num_pages=self.num_pages
+        )
+        self.alloc = PageAllocator(self.num_pages)
+        self._table = np.zeros((slots, pages_per_row), np.int32)
+        self._dirty = False
+        self._pages: list[list[int]] = [[] for _ in range(slots)]
+        self.valid = np.zeros((slots,), np.int32)  # committed tokens cached
+        self._recurrent = [k for k in _RECURRENT_KEYS if k in self.cache]
+        self._snap: dict = {}
+        self._round: dict[int, tuple[int, int]] = {}  # slot -> (C, kk)
+        self.forwards = 0
+
+        # private closures: see Verifier — sharing the raw model functions
+        # with the server's jits would pool their compile counts
+        def _decode_fn(params, tokens, cache, active):
+            return model.decode_step(params, tokens, cache, active=active)
+
+        def _chunk_fn(params, tokens, lengths, cache):
+            return model.verify_step(params, tokens, lengths, cache)
+
+        self._decode = jax.jit(_decode_fn)
+        self._chunk = jax.jit(_chunk_fn)
+
+        def _prefill_fn(params, tokens, lengths, fresh, starts, cache):
+            cache = reset_slots(cache, fresh, starts)
+            return model.prefill(
+                params, {"tokens": tokens, "lengths": lengths}, cache
+            )
+
+        self._prefill = jax.jit(_prefill_fn)
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def compiles(self) -> dict:
+        return {
+            "prefill": self._prefill._cache_size(),
+            "chunk": self._chunk._cache_size(),
+            "decode": self._decode._cache_size(),
+        }
+
+    def admit(self, slot: int, n_tokens: int) -> None:
+        """Reserve draft pages for a request needing ``n_tokens`` KV rows
+        (the draft high-water mark — one row less than the target's, the
+        final emitted token is never fed to the drafter)."""
+        self._pages[slot] = self.alloc.alloc(pages_for(n_tokens,
+                                                       self.page_size))
+        self._table[slot, : len(self._pages[slot])] = self._pages[slot]
+        self._dirty = True
+        self.valid[slot] = 0
+
+    def release(self, slot: int) -> None:
+        """Free the slot's draft pages (idempotent). Called as soon as a
+        request can no longer draft — one round BEFORE target retirement —
+        via ``allocator.truncate``: the draft KV's useful length dropped
+        to zero while the target's is still live."""
+        self._pages[slot] = self.alloc.truncate(self._pages[slot], 0)
+        self.valid[slot] = 0
+
+    def _sync_table(self):
+        if self._dirty:
+            self.cache = dict(self.cache)
+            self.cache["page_table"] = jnp.asarray(self._table)
+            self._dirty = False
+
+    # -- prompt prefill (mirrors the server's waves) ------------------------
+
+    def prefill_wave(self, tokens: np.ndarray, lengths: np.ndarray,
+                     fresh: np.ndarray, fed_after: dict[int, int]) -> None:
+        """One batched prefill wave into the draft cache. The server
+        builds the arrays exactly as for the target wave — except the
+        drafter always starts at position 0 (it holds no shared prefix
+        pages, so a target-side prefix hit still prefills the DRAFT cache
+        in full). Logits are discarded: the first emitted token comes from
+        the target's prefill. ``fed_after`` maps the wave's slots to their
+        prompt-token watermark after this wave; other slots keep theirs."""
+        self._sync_table()
+        _, self.cache = self._prefill(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(fresh), jnp.zeros((self.slots,), jnp.int32),
+            self.cache,
+        )
+        self.forwards += 1
+        for slot, fed in fed_after.items():
+            self.valid[slot] = fed
+
+    # -- drafting -----------------------------------------------------------
+
+    def draft_round(self, jobs: list[tuple[int, np.ndarray, int]], *,
+                    sampling: dict, rngs: dict[int, np.random.Generator],
+                    ) -> tuple[dict[int, list[int]], dict[int, np.ndarray]]:
+        """Propose drafts for ``jobs`` = [(slot, committed_tokens, kk)].
+
+        Returns ``(drafts, qdists)``: per slot the kk drafted token ids
+        and (sampling mode only) the (kk, V) shaped distributions each was
+        drawn from — the ``q`` the rejection sampler needs. Greedy mode
+        drafts the draft-model argmax and returns no distributions."""
+        greedy = sampling["temperature"] <= 0.0
+        tokens = np.zeros((self.slots, self.width), np.int32)
+        lengths = np.zeros((self.slots,), np.int32)
+        self._round = {}
+        for slot, committed, kk in jobs:
+            w = len(committed) - int(self.valid[slot])
+            if not 1 <= w <= self.width:
+                raise AssertionError(
+                    f"draft catch-up width {w} out of [1, {self.width}] "
+                    f"(slot {slot})"
+                )
+            tokens[slot, :w] = committed[self.valid[slot]:]
+            lengths[slot] = w
+            self._round[slot] = (len(committed), kk)
+        self._sync_table()
+        logits, self.cache = self._chunk(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            self.cache,
+        )
+        self.forwards += 1
+        # snapshot recurrent state at exactly the committed watermark:
+        # restore-on-rejection re-enters the next round from here, so the
+        # catch-up width stays <= accepted + 1 <= width
+        self._snap = {k: self.cache[k] for k in self._recurrent}
+        # greedy drafts only need token ids: argmax on device, transfer
+        # (slots, width) ints instead of full-vocab logits rows
+        rows = np.asarray(jnp.argmax(logits, -1) if greedy else logits)
+        drafts: dict[int, list[int]] = {}
+        qdists: dict[int, list[np.ndarray]] = {}
+        for slot, committed, kk in jobs:
+            row = rows[slot, int(lengths[slot]) - 1]
+            drafts[slot] = [self._pick(slot, row, greedy, sampling, rngs,
+                                       qdists)]
+        step = 1
+        while True:
+            live = [(s, c, kk) for s, c, kk in jobs if kk > step]
+            if not live:
+                break
+            feed = np.zeros((self.slots, 1), np.int32)
+            active = np.zeros((self.slots,), bool)
+            for slot, _, _ in live:
+                feed[slot, 0] = drafts[slot][-1]
+                active[slot] = True
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(feed), self.cache,
+                active=jnp.asarray(active),
+            )
+            self.forwards += 1
+            rows = np.asarray(jnp.argmax(logits, -1) if greedy else logits)
+            for slot, _, _ in live:
+                drafts[slot].append(self._pick(slot, rows[slot, 0], greedy,
+                                               sampling, rngs, qdists))
+            step += 1
+        qarr = {s: np.stack(v) for s, v in qdists.items()}
+        return drafts, qarr
+
+    def _pick(self, slot, row, greedy, sampling, rngs, qdists) -> int:
+        """One draft token from ``row``: the device-argmaxed token id in
+        greedy mode, the full logits row (shaped + sampled from the
+        request's own stream, distribution recorded for the rejection
+        sampler) otherwise."""
+        if greedy:
+            return int(row)
+        q = shaped_probs(row, **sampling)
+        qdists.setdefault(slot, []).append(q)
+        return int(rngs[slot].choice(q.size, p=q))
+
+    # -- rollback -----------------------------------------------------------
+
+    def finish_round(self, accepted: dict[int, int]) -> None:
+        """Reconcile the draft cache with the verifier's verdicts:
+        ``accepted[slot] = m`` drafts survived. The committed watermark
+        advances to ``C + min(m, kk - 1)`` (draft ``kk`` is proposed but
+        never fed, so its KV is not cached); recurrent slots whose state
+        absorbed a rejected draft (``m < kk - 1``) restore the
+        post-catch-up snapshot and fall back to ``C`` — the next catch-up
+        chunk re-feeds their accepted drafts."""
+        restore = np.zeros((self.slots,), bool)
+        touched = np.zeros((self.slots,), bool)
+        new_valid = self.valid.copy()
+        for slot, m in accepted.items():
+            committed, kk = self._round[slot]
+            touched[slot] = True
+            if self._recurrent and m < kk - 1:
+                restore[slot] = True
+                new_valid[slot] = committed
+            else:
+                new_valid[slot] = committed + min(m, kk - 1)
+        self.cache = dict(self.cache)
+        if restore.any():
+            self.cache = restore_rows(self.cache, self._snap,
+                                      jnp.asarray(restore), self._recurrent)
+        self.cache["len"] = rewind(
+            self.cache["len"], jnp.asarray(touched), jnp.asarray(new_valid)
+        )
+        self.valid = new_valid
+        self._round = {}

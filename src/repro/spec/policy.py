@@ -1,0 +1,122 @@
+"""Speculative-decoding acceptance policies (host-side, pure numpy).
+
+Two verification modes against the per-position target distributions that
+one batched verify forward produces:
+
+* ``accept_greedy`` — deterministic: accept drafted tokens while they
+  equal the target argmax, emit the target argmax at the first mismatch
+  (or at the bonus position when every draft survives). The emitted
+  sequence is BIT-IDENTICAL to target-only greedy decoding no matter how
+  good or bad the drafter is — speculation only changes how many target
+  forwards it takes to produce it.
+
+* ``accept_speculative`` — standard rejection sampling (Leviathan et al.
+  2023; Chen et al. 2023): draft token ``x ~ q`` is accepted with
+  probability ``min(1, p(x)/q(x))``; on rejection the emitted token is
+  drawn from the residual ``norm(max(p - q, 0))``; if every draft is
+  accepted a bonus token is drawn from the target's next-position
+  distribution. The marginal distribution of each emitted token is
+  EXACTLY ``p`` — the target model's own sampling distribution — which is
+  what makes speculative decoding a latency optimization and not an
+  accuracy trade (pinned by tests/test_spec.py: empirical acceptance
+  equals ``sum(min(p, q))`` and the emitted-token marginal matches ``p``).
+
+Both policies compare SHAPED distributions: :func:`shaped_probs` applies
+the same temperature -> top-k -> top-p transform the server's
+``sample_token`` draws from, because rejection sampling is only correct
+when ``q`` is the distribution the draft was actually sampled from and
+``p`` the distribution the target would have sampled from.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def shaped_probs(
+    logits: np.ndarray,
+    *,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    top_p: float = 1.0,
+) -> np.ndarray:
+    """(V,) sampling distribution after temperature/top-k/top-p shaping.
+
+    ``temperature <= 0`` collapses to the greedy one-hot (argmax mass 1) —
+    the distribution greedy "sampling" draws from. This is the single
+    source of truth for logit shaping: ``launch.serve.sample_token`` draws
+    from exactly this distribution, so draft/target comparisons in the
+    acceptance policies see the same support and mass the sampler does."""
+    logits = np.asarray(logits, np.float64)
+    if temperature <= 0.0:
+        probs = np.zeros(logits.shape[-1], np.float64)
+        probs[int(np.argmax(logits))] = 1.0
+        return probs
+    logits = logits / temperature
+    if 0 < top_k < logits.size:
+        kth = np.partition(logits, -top_k)[-top_k]
+        logits = np.where(logits < kth, -np.inf, logits)
+    logits = logits - logits.max()
+    probs = np.exp(logits)
+    probs /= probs.sum()
+    if top_p < 1.0:
+        order = np.argsort(-probs)
+        cum = np.cumsum(probs[order])
+        # minimal prefix whose mass reaches top_p (always >= 1 token)
+        cut = int(np.searchsorted(cum, top_p)) + 1
+        nucleus = np.zeros_like(probs)
+        nucleus[order[:cut]] = probs[order[:cut]]
+        probs = nucleus / nucleus.sum()
+    return probs
+
+
+def accept_greedy(
+    drafts: list[int],
+    target_argmax: np.ndarray,  # (k+1,) target argmax token ids
+) -> tuple[int, int]:
+    """Greedy verification. Returns ``(n_accepted, emitted_token)``.
+
+    ``target_argmax[j]`` is the target's greedy token AFTER the context
+    plus drafts ``0..j-1`` (argmaxed ON DEVICE — greedy verification
+    never needs the full logits rows on the host); the emitted token is
+    always ``target_argmax[n_accepted]`` — the correction at the first
+    mismatch, or the free bonus token when all ``k`` drafts matched."""
+    m = 0
+    for d in drafts:
+        if int(d) != int(target_argmax[m]):
+            break
+        m += 1
+    return m, int(target_argmax[m])
+
+
+def accept_speculative(
+    drafts: list[int],
+    draft_probs: np.ndarray,    # (k, V) shaped draft distributions
+    target_probs: np.ndarray,   # (k+1, V) shaped target distributions
+    rng: np.random.Generator,
+) -> tuple[int, int]:
+    """Rejection-sample the drafts against the target distributions.
+
+    Returns ``(n_accepted, emitted_token)``. The emitted token comes from
+    the residual ``norm(max(p - q, 0))`` at the first rejection, or from
+    ``target_probs[k]`` (the bonus position) when every draft survives —
+    the construction that makes each emitted token an exact sample from
+    the target distribution. Draws come from ``rng`` — the caller passes
+    the request's own seeded stream so speculation stays deterministic per
+    (seed, rid) and independent of batch slots and admission order."""
+    for j, d in enumerate(drafts):
+        d = int(d)
+        p, q = float(target_probs[j][d]), float(draft_probs[j][d])
+        # d was sampled from q so q[d] > 0; guard anyway for callers
+        # feeding externally produced drafts
+        ratio = 1.0 if q <= 0.0 and p > 0.0 else min(1.0, p / max(q, 1e-300))
+        if rng.random() < ratio:
+            continue
+        residual = np.maximum(target_probs[j] - draft_probs[j], 0.0)
+        total = residual.sum()
+        if total <= 0.0:
+            # p == q everywhere: any residual draw is measure-zero; fall
+            # back to the target distribution itself (still exact)
+            residual, total = target_probs[j], target_probs[j].sum()
+        return j, int(rng.choice(residual.size, p=residual / total))
+    k = len(drafts)
+    return k, int(rng.choice(target_probs[k].size, p=target_probs[k]))

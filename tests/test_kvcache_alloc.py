@@ -53,7 +53,7 @@ def _random_walk(seed: int, num_pages: int, ops: int):
         assert 0.0 <= alloc.fragmentation() <= 1.0
 
     for _ in range(ops):
-        op = rng.integers(0, 4)
+        op = rng.integers(0, 5)
         if op == 0:  # alloc
             n = int(rng.integers(0, max(num_pages // 2, 1)) )
             if alloc.can_alloc(n):
@@ -97,6 +97,20 @@ def _random_walk(seed: int, num_pages: int, ops: int):
                 after = {p for k, o in enumerate(owners) if k != idx
                          for p in o}
                 assert before == after, "cow mutated another owner"
+        elif op == 4 and owners:  # truncate: shrink an owner's tail
+            idx = int(rng.integers(0, len(owners)))
+            own = owners[idx]
+            keep = int(rng.integers(0, len(own) + 1))
+            dropped = own[keep:]
+            owners[idx] = alloc.truncate(own, keep)
+            assert owners[idx] == own[:keep]
+            # dropped pages lose exactly ONE reference (shared pages
+            # survive under their other owners)
+            for p in dropped:
+                expect = sum(o.count(p) for o in owners)
+                assert alloc.refcount(p) == expect, (p, expect)
+            if not owners[idx]:
+                owners.pop(idx)
         check()
     while owners:
         alloc.free(owners.pop())
@@ -117,6 +131,25 @@ def test_random_walk_never_double_assigns_never_leaks():
 @hypothesis.settings(max_examples=25, deadline=None)
 def test_random_walk_property(seed, num_pages, ops):
     _random_walk(seed, num_pages, ops)
+
+
+def test_truncate_frees_tail_keeps_prefix():
+    """truncate releases an owner's tail pages (the speculative drafter's
+    early release) without touching other owners' claims."""
+    alloc = PageAllocator(8)
+    pages = alloc.alloc(5)
+    kept = alloc.truncate(pages, 2)
+    assert kept == pages[:2]
+    assert alloc.in_use == 2
+    # shared tails survive under the other owner
+    alloc.retain(kept)
+    rest = alloc.truncate(kept, 0)  # full release of THIS owner's claim
+    assert rest == []
+    assert alloc.in_use == 2 and all(alloc.refcount(p) == 1 for p in kept)
+    alloc.free(kept)
+    assert alloc.in_use == 0
+    with pytest.raises(ValueError):
+        alloc.truncate([0], -1)
 
 
 def test_refcounted_page_survives_partial_free():

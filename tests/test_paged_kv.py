@@ -352,6 +352,91 @@ def test_prefix_cache_eviction_under_pool_pressure():
     assert server.alloc.in_use == 0
 
 
+def test_cross_wave_identical_prefix_dedup():
+    """Requests with identical prefixes arriving in the SAME wave used to
+    all prefill in full (the index only learns a prompt once it is fully
+    prefilled). Admission now detects the pending overlap and serializes
+    just their prefill: the first request admits alone, the rest admit one
+    wave later as ordinary cache hits."""
+    cfg, model, params = _tiny_model()
+    gen, max_len, page = 3, 32, 8
+    rng = np.random.default_rng(29)
+    common = rng.integers(0, cfg.vocab_size, 2 * page, dtype=np.int32)
+    tails = [3, 5, 2]
+    prompts = [np.concatenate(
+        [common, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)]
+    ) for t in tails]
+
+    def serve(slots):
+        reqs = [Request(i, p.copy(), gen) for i, p in enumerate(prompts)]
+        server = BatchedServer(model, params, batch_slots=slots,
+                               max_len=max_len, paged=True, page_size=page,
+                               num_pages=24, prefix_cache=True)
+        stats = server.run(reqs)
+        server.drop_prefix_cache()
+        assert server.alloc.in_use == 0
+        return reqs, stats
+
+    # 3 slots, 3 requests: without dedup they would all admit in wave 1
+    # and share NOTHING; with it, every later request hits the cache
+    reqs, stats = serve(3)
+    assert stats["prefix"]["hits"] == len(tails) - 1, stats["prefix"]
+    assert stats["prefix"]["admission_deferrals"] > 0, stats["prefix"]
+    # the shared prefix prefilled ONCE, not three times
+    assert stats["prefill_tokens"] < sum(len(p) for p in prompts)
+    assert stats["pages"]["leaked"] == 0
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, r.out, want)
+    # sharing behaviour must be slot-count independent in outcome
+    reqs1, stats1 = serve(1)
+    assert [r.out for r in reqs1] == [r.out for r in reqs]
+    assert stats1["prefix"]["hits"] == len(tails) - 1
+
+
+def test_prefix_state_budget_degrades_depth_not_correctness():
+    """zamba2 with a snapshot budget too small for ANY boundary state:
+    recurrent prefix hits disappear (match walks back to nothing) but
+    every request still decodes exactly — the budget trades hit depth for
+    memory, never correctness."""
+    cfg, model, params = _tiny_model("zamba2-1.2b", n_layers=2, seed=1)
+    gen, max_len, page = 2, 32, 4
+    rng = np.random.default_rng(13)
+    common = rng.integers(0, cfg.vocab_size, 2 * page, dtype=np.int32)
+    prompts = [np.concatenate(
+        [common, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)]
+    ) for t in (3, 5)]
+    reqs = [Request(i, p.copy(), gen) for i, p in enumerate(prompts)]
+    server = BatchedServer(model, params, batch_slots=1, max_len=max_len,
+                           paged=True, page_size=page, num_pages=24,
+                           prefix_cache=True, prefix_state_budget=1)
+    stats = server.run(reqs)
+    for r in reqs:
+        want = _isolated_decode(model, params, r.prompt, gen, max_len)
+        assert r.out == want, (r.rid, r.out, want)
+    assert stats["prefix"]["states_held"] == 0, stats["prefix"]
+    assert stats["prefix"]["states_evicted"] > 0, stats["prefix"]
+    assert stats["pages"]["leaked"] == 0
+    server.drop_prefix_cache()
+    assert server.alloc.in_use == 0
+
+
+def test_cross_wave_dedup_no_deadlock_on_distinct_prompts():
+    """Distinct prompts must never defer — admission proceeds exactly as
+    before when there is nothing to share."""
+    cfg, model, params = _tiny_model()
+    reqs = _requests(cfg, [9, 11, 6], gen=2)
+    server = BatchedServer(model, params, batch_slots=3, max_len=24,
+                           paged=True, page_size=4, num_pages=24,
+                           prefix_cache=True)
+    stats = server.run(reqs)
+    assert stats["requests"] == 3
+    assert stats["prefix"]["admission_deferrals"] == 0, stats["prefix"]
+    assert stats["pages"]["leaked"] == 0
+    server.drop_prefix_cache()
+    assert server.alloc.in_use == 0
+
+
 @pytest.mark.parametrize("arch", ["llama32-1b", "zamba2-1.2b"])
 def test_prefix_shared_differential_fuzz(arch):
     """Differential fuzz: randomized prompt sets with overlapping prefixes

@@ -257,6 +257,76 @@ def test_prefix_walk_property(seed, page_size, num_pages, ops):
     _prefix_walk(seed, page_size, num_pages, ops)
 
 
+def test_state_budget_evicts_snapshots_lru_keeps_page_entries():
+    """Snapshots are a sidecar under ``state_budget``: over budget, LRU
+    entries lose their state but KEEP their page entry (KV-only matching
+    still works), and ``match(need_state=True)`` degrades to a shallower
+    boundary instead of breaking."""
+    alloc = PageAllocator(16)
+    snap = {"ssm": np.ones((4, 8), np.float32)}   # 128 bytes
+    idx = PrefixIndex(2, alloc, state_budget=2 * 128)
+    prompts = [np.asarray([10 * i, 10 * i + 1], np.int32) for i in range(4)]
+    pages = []
+    for p in prompts:                # 4 snapshots, budget holds 2
+        pg = alloc.alloc(1)
+        idx.insert(p, pg, states={2: snap})
+        alloc.free(pg)
+        pages.append(pg[0])
+    s = idx.stats()
+    assert s["entries"] == 4                      # no page entry lost
+    assert s["states_held"] == 2, s               # budget: 2 snapshots
+    assert s["state_bytes"] == 2 * 128, s
+    assert s["states_evicted"] == 2, s
+    # the LRU entries (earliest inserts) lost their snapshot first
+    longer = [np.concatenate([p, np.asarray([7], np.int32)])
+              for p in prompts]
+    assert idx.match(longer[0], need_state=True, record=False)[0] == 0
+    assert idx.match(longer[3], need_state=True, record=False)[0] == 2
+    # KV-only matching is untouched by snapshot eviction
+    assert idx.match(longer[0], record=False)[0] == 2
+    idx.release_all()
+    assert alloc.in_use == 0 and idx.state_bytes == 0
+
+
+def test_state_budget_walks_back_to_surviving_boundary():
+    """A chain whose DEEP boundary lost its snapshot must fall back to the
+    deepest boundary that still has one."""
+    alloc = PageAllocator(16)
+    small = {"s": np.zeros(16, np.uint8)}         # 16 bytes
+    idx = PrefixIndex(2, alloc, state_budget=100)
+    prompt = np.arange(8, dtype=np.int32)         # 4 full pages
+    pg = alloc.alloc(4)
+    idx.insert(prompt, pg, states={2: small, 4: small, 6: small})
+    alloc.free(pg)
+    n0, _, _ = idx.match(prompt, need_state=True, record=False)
+    assert n0 == 6
+    # shrink the budget by inserting a big snapshot elsewhere: the LRU
+    # snapshots (the first-stored boundaries) drop first
+    big = {"s": np.zeros(80, np.uint8)}
+    other = np.asarray([90, 91], np.int32)
+    pg2 = alloc.alloc(1)
+    idx.insert(other, pg2, states={2: big})
+    alloc.free(pg2)
+    assert idx.stats()["state_bytes"] <= 100
+    n1, _, state = idx.match(prompt, need_state=True, record=False)
+    assert n1 < 6 or state is not None  # degraded depth, never corrupt
+    idx.release_all()
+    assert alloc.in_use == 0
+
+
+def test_state_budget_refuses_oversized_snapshot():
+    alloc = PageAllocator(4)
+    idx = PrefixIndex(2, alloc, state_budget=8)
+    huge = {"s": np.zeros(64, np.uint8)}
+    pg = alloc.alloc(1)
+    idx.insert(np.asarray([1, 2], np.int32), pg, states={2: huge})
+    alloc.free(pg)
+    s = idx.stats()
+    assert s["entries"] == 1 and s["states_held"] == 0, s
+    assert s["state_bytes"] == 0 and s["states_evicted"] == 1, s
+    idx.release_all()
+
+
 def test_copy_page_moves_contents_across_all_layers():
     pool = jnp.arange(2 * 2 * 4 * 3 * 2 * 2, dtype=jnp.float32).reshape(
         2, 2, 4, 3, 2, 2

@@ -1,0 +1,321 @@
+"""Speculative decoding: drafts never change WHAT is decoded, only how
+fast.
+
+The contract under test (the speculative-serving tentpole):
+* greedy speculation is BIT-IDENTICAL to non-speculative serving (which
+  test_paged_kv pins against isolated decoding) for attention (llama) and
+  hybrid recurrent (zamba2) families — even with an adversarially BAD
+  drafter that gets every draft rejected (rollback-heavy: every round
+  rewinds ``cache["len"]`` and, for zamba2, restores + recomputes
+  recurrent state),
+* rollback leaks nothing: target pool AND draft pool return to zero pages
+  in use after every workload, including rejection-on-every-round,
+* the rejection sampler is distribution-preserving: empirical acceptance
+  matches ``sum(min(p, q))`` and the emitted-token marginal matches the
+  target distribution exactly (Leviathan et al. 2023),
+* sampled speculative streams stay a function of (seed, rid, model) —
+  independent of batch slots, like PR 4 pinned for plain sampling,
+* speculation composes with the prefix cache (COW guard + shared pages)
+  and with chunked prefill,
+* compile discipline: the k+1 verify chunk compiles exactly once;
+  ``decode_step`` is never traced by the target in spec mode.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    from hypothesis_stub import hypothesis, st
+
+from repro.configs import get_config
+from repro.core import QuantPolicy, restructure
+from repro.launch.serve import BatchedServer, Request
+from repro.models import build_model
+from repro.spec.policy import accept_greedy, accept_speculative, shaped_probs
+
+
+def _tiny_model(arch="llama32-1b", n_layers=2, seed=0):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, gen, seed0=100):
+    return [
+        Request(i, np.random.default_rng(seed0 + i).integers(
+            0, cfg.vocab_size, ln, dtype=np.int32), gen)
+        for i, ln in enumerate(lens)
+    ]
+
+
+def _serve(model, params, reqs, **kw):
+    server = BatchedServer(model, params, **kw)
+    stats = server.run(reqs)
+    stats["_events"] = server.events
+    return {r.rid: r.out for r in reqs}, stats
+
+
+# ---------------------------------------------------------------------------
+# Differential pin: greedy speculation == non-speculative serving
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,n_layers", [("llama32-1b", 2),
+                                           ("zamba2-1.2b", 4)])
+def test_greedy_speculation_bit_identical(arch, n_layers):
+    """Acceptance: with --speculate k (greedy), emitted tokens are
+    bit-identical to non-speculative decode — INT4 packed drafter against
+    the fp target, both cache families."""
+    cfg, model, params = _tiny_model(arch, n_layers=n_layers)
+    draft = restructure(
+        params, QuantPolicy(bits=4, packed=True)
+    ).as_executable(group=True)
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=24)
+    gen, lens = 6, [6, 11, 4, 9]
+    base, bstats = _serve(model, params, _requests(cfg, lens, gen), **kw)
+    spec, sstats = _serve(model, params, _requests(cfg, lens, gen),
+                          speculate=3, draft_params=draft, **kw)
+    assert spec == base, (arch, spec, base)
+    sp = sstats["spec"]
+    assert sp["rounds"] > 0 and sp["drafted"] > 0, sp
+    # one target forward per round serves the whole batch: strictly fewer
+    # target forwards than emitted tokens even before counting acceptance
+    assert sp["target_forwards_per_token"] < 1.0, sp
+    assert sp["verify_compiles"] == 1, sp
+    # the target never runs a plain decode step in spec mode: every
+    # decode-ready slot rides a verify wave
+    assert "decode" not in sstats["_events"], sstats["_events"]
+    assert "verify" in sstats["_events"]
+    assert sstats["pages"]["leaked"] == 0, sstats["pages"]
+    assert sp["draft_pages_leaked"] == 0, sp
+
+
+@pytest.mark.parametrize("arch,n_layers", [("llama32-1b", 2),
+                                           ("zamba2-1.2b", 4)])
+def test_rollback_heavy_workload_identical_and_leak_free(arch, n_layers):
+    """An adversarial drafter (different random weights — essentially zero
+    agreement with the target) forces a rejection every round: greedy
+    output must STILL be bit-identical, and both page pools must drain.
+    This is the rollback stress: every round rewinds ``len`` and, for
+    zamba2, restores + recomputes recurrent state."""
+    cfg, model, params = _tiny_model(arch, n_layers=n_layers)
+    bad_draft = model.init(jax.random.PRNGKey(99))
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=24)
+    gen, lens = 6, [6, 11, 4]
+    base, _ = _serve(model, params, _requests(cfg, lens, gen), **kw)
+    spec, stats = _serve(model, params, _requests(cfg, lens, gen),
+                         speculate=3, draft_params=bad_draft, **kw)
+    assert spec == base, (arch, spec, base)
+    sp = stats["spec"]
+    assert sp["acceptance_rate"] < 0.5, sp  # the drafter really is bad
+    if arch == "zamba2-1.2b":
+        assert sp["recompute_forwards"] > 0, sp  # recurrent rollback ran
+    assert stats["pages"]["leaked"] == 0, stats["pages"]
+    assert sp["draft_pages_leaked"] == 0, sp
+
+
+def test_speculation_composes_with_prefix_cache():
+    """Spec + prefix sharing: shared prompt pages are retained read-only
+    while verify waves scatter into the tail — the COW guard must keep
+    every written page exclusive, outputs identical, and dropping the
+    prefix cache must return the pool to zero."""
+    cfg, model, params = _tiny_model()
+    draft = restructure(
+        params, QuantPolicy(bits=4, packed=True)
+    ).as_executable(group=True)
+    rng = np.random.default_rng(17)
+    common = rng.integers(0, cfg.vocab_size, 9, dtype=np.int32)
+    prompts = [np.concatenate(
+        [common, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)]
+    ) for t in (3, 5, 2)]
+    gen = 5
+
+    def serve(**extra):
+        reqs = [Request(i, p.copy(), gen) for i, p in enumerate(prompts)]
+        server = BatchedServer(model, params, batch_slots=2, max_len=32,
+                               paged=True, page_size=4, num_pages=32,
+                               **extra)
+        stats = server.run(reqs)
+        return {r.rid: r.out for r in reqs}, stats, server
+
+    base, _, _ = serve()
+    spec, stats, server = serve(speculate=3, draft_params=draft,
+                                prefix_cache=True)
+    assert spec == base, (spec, base)
+    assert stats["prefix"]["hits"] > 0, stats["prefix"]
+    assert stats["pages"]["leaked"] == 0, stats["pages"]
+    assert stats["spec"]["draft_pages_leaked"] == 0
+    server.drop_prefix_cache()
+    assert server.alloc.in_use == 0
+
+
+def test_speculation_composes_with_chunked_prefill():
+    """A long prompt fed in chunk waves while neighbours speculate —
+    mid-prefill slots must stay frozen through verify waves."""
+    cfg, model, params = _tiny_model()
+    draft = restructure(
+        params, QuantPolicy(bits=4, packed=True)
+    ).as_executable(group=True)
+    kw = dict(batch_slots=2, max_len=48, paged=True, page_size=8,
+              num_pages=16, prefill_chunk=8)
+    gen, lens = 6, [5, 33, 6]
+    base, _ = _serve(model, params, _requests(cfg, lens, gen), **kw)
+    reqs = _requests(cfg, lens, gen)
+    server = BatchedServer(model, params, speculate=4, draft_params=draft,
+                           **kw)
+    stats = server.run(reqs)
+    assert {r.rid: r.out for r in reqs} == base
+    # interleave proof: a verify wave ran BETWEEN two prefill waves (the
+    # long prompt must not stall its neighbour's speculative decode)
+    ev = server.events
+    first_p = ev.index("prefill")
+    last_p = len(ev) - 1 - ev[::-1].index("prefill")
+    assert "verify" in ev[first_p:last_p], ev
+    assert stats["pages"]["leaked"] == 0
+    assert stats["spec"]["draft_pages_leaked"] == 0
+
+
+def test_sampled_speculation_independent_of_batch_slots():
+    """Sampled spec streams must stay a function of (seed, rid, model):
+    slot count changes scheduling and round composition, but every draw
+    rides the request's own rng."""
+    cfg, model, params = _tiny_model()
+    draft = restructure(
+        params, QuantPolicy(bits=4, packed=True)
+    ).as_executable(group=True)
+
+    def serve(slots):
+        reqs = _requests(cfg, [5, 7, 4], gen=5)
+        server = BatchedServer(model, params, batch_slots=slots, max_len=32,
+                               paged=True, page_size=4, num_pages=36,
+                               temperature=0.9, top_k=6, seed=11,
+                               speculate=3, draft_params=draft)
+        server.run(reqs)
+        return {r.rid: r.out for r in reqs}
+
+    assert serve(1) == serve(2) == serve(3)
+
+
+def test_gen_too_short_to_draft_still_served():
+    """Requests with max_new < 3 never draft (kk would be 0): they ride
+    verify waves as single-token rows and the draft pool is never touched
+    for them."""
+    cfg, model, params = _tiny_model()
+    draft = restructure(
+        params, QuantPolicy(bits=4, packed=True)
+    ).as_executable(group=True)
+    kw = dict(batch_slots=2, max_len=24, paged=True, page_size=4,
+              num_pages=16)
+    for gen in (1, 2):
+        base, _ = _serve(model, params, _requests(cfg, [5, 8], gen), **kw)
+        spec, stats = _serve(model, params, _requests(cfg, [5, 8], gen),
+                             speculate=3, draft_params=draft, **kw)
+        assert spec == base, (gen, spec, base)
+        assert stats["spec"]["drafted"] == 0, (gen, stats["spec"])
+        assert stats["spec"]["draft_pages_leaked"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Rejection-sampling policy: distribution preservation
+# ---------------------------------------------------------------------------
+
+
+def _rand_dist(rng, v):
+    p = rng.random(v) ** 3 + 1e-9
+    return p / p.sum()
+
+
+def test_acceptance_rate_matches_min_p_q():
+    """P(accept draft at position 0) must equal sum_x min(p(x), q(x)) —
+    the defining identity of speculative rejection sampling."""
+    rng = np.random.default_rng(0)
+    v, trials = 8, 20000
+    q, p = _rand_dist(rng, v), _rand_dist(rng, v)
+    want = np.minimum(p, q).sum()
+    hits = 0
+    for _ in range(trials):
+        d = int(rng.choice(v, p=q))
+        m, _ = accept_speculative([d], q[None], np.stack([p, p]), rng)
+        hits += m
+    got = hits / trials
+    assert abs(got - want) < 0.02, (got, want)
+
+
+def test_emitted_token_marginal_matches_target():
+    """The emitted first token (accepted draft OR residual resample) must
+    be an EXACT sample from p, regardless of q: this is what makes
+    speculation an optimization rather than an approximation."""
+    rng = np.random.default_rng(1)
+    v, trials = 6, 40000
+    q, p = _rand_dist(rng, v), _rand_dist(rng, v)
+    counts = np.zeros(v)
+    for _ in range(trials):
+        d = int(rng.choice(v, p=q))
+        m, tok = accept_speculative([d], q[None], np.stack([p, p]), rng)
+        counts[d if m >= 1 else tok] += 1
+    emp = counts / trials
+    np.testing.assert_allclose(emp, p, atol=0.015)
+
+
+def test_greedy_accept_is_prefix_match():
+    top = np.array([1, 0, 2])  # device-argmaxed target ids per position
+    # all drafts match -> bonus token from the last position
+    assert accept_greedy([1, 0], top) == (2, 2)
+    # first mismatch stops acceptance and emits the target argmax there
+    assert accept_greedy([1, 2], top) == (1, 0)
+    assert accept_greedy([0, 0], top) == (0, 1)
+    assert accept_greedy([], top[:1]) == (0, 1)
+
+
+def test_shaped_probs_matches_sampler_shaping():
+    """shaped_probs is the single source of truth sample_token draws from:
+    greedy collapses to a one-hot, top-k zeroes the tail, top-p keeps the
+    minimal nucleus."""
+    logits = np.array([0.5, 3.0, 2.5, -1.0, 2.9])
+    assert shaped_probs(logits).tolist() == [0, 1, 0, 0, 0]
+    pk = shaped_probs(logits, temperature=1.0, top_k=3)
+    assert (pk > 0).sum() == 3 and pk.argmax() == 1
+    assert abs(pk.sum() - 1.0) < 1e-12
+    pp = shaped_probs(logits, temperature=0.5, top_p=0.45)
+    assert (pp > 0).sum() == 1 and pp[1] == 1.0
+
+
+@hypothesis.given(
+    st.integers(min_value=2, max_value=12),
+    st.integers(min_value=1, max_value=4),
+    st.integers(min_value=0, max_value=2 ** 31 - 1),
+)
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_accept_speculative_invariants(v, k, seed):
+    """Structural invariants over random distributions: 0 <= m <= k, the
+    emitted token is in the target support, q == p accepts everything and
+    emits a p-sample, and greedy acceptance length equals the prefix-match
+    length with the target argmaxes."""
+    rng = np.random.default_rng(seed)
+    q = np.stack([_rand_dist(rng, v) for _ in range(k)])
+    p = np.stack([_rand_dist(rng, v) for _ in range(k + 1)])
+    drafts = [int(rng.choice(v, p=q[j])) for j in range(k)]
+    m, tok = accept_speculative(drafts, q, p, rng)
+    assert 0 <= m <= k
+    assert p[m][tok] > 0  # emitted token lies in the target support
+    # identical distributions: everything accepted, bonus from p[k]
+    m2, tok2 = accept_speculative(drafts, p[:k], p, rng)
+    assert m2 == k and p[k][tok2] > 0
+    # greedy: acceptance length == longest prefix matching target argmax
+    top = np.argmax(p, axis=-1)
+    gm, gtok = accept_greedy(drafts, top)
+    want = 0
+    for j, d in enumerate(drafts):
+        if d != int(top[j]):
+            break
+        want += 1
+    assert gm == want and gtok == int(top[gm])
