@@ -44,7 +44,7 @@ def _time(f, *args, iters=5):
 def _serve_stats(engine: str, gen: int = 4,
                  prompt_lens: tuple[int, ...] = (8, 8),
                  shared_prefix: int = 0, speculate: int = 0,
-                 **server_kw) -> dict:
+                 batch_slots: int = 2, **server_kw) -> dict:
     """Tiny end-to-end serve run per engine path (reduced llama, CPU).
 
     ``server_kw`` forwards to BatchedServer — e.g. ``paged=True,
@@ -81,7 +81,7 @@ def _serve_stats(engine: str, gen: int = 4,
         0, cfg.vocab_size, shared_prefix, dtype=np.int32)
     with ops.count_launches() as launches:
         server = BatchedServer(
-            model, params, batch_slots=2,
+            model, params, batch_slots=batch_slots,
             max_len=shared_prefix + max(prompt_lens) + gen + 8,
             speculate=speculate, draft_params=draft_params,
             **server_kw)
@@ -226,6 +226,32 @@ def run() -> list[tuple[str, float, str]]:
                      float(st["pages"]["leaked"]
                            + sp["draft_pages_leaked"]),
                      "target + draft pools after rollback-heavy serving"))
+
+    # serving under pressure: prompt-only reservation with on-demand page
+    # growth vs full end-to-end reservation on the SAME 6-page pool — the
+    # overcommit admits strictly more concurrent requests, repaid with
+    # victim preemption + exact replay instead of admission stalls
+    pressure_kw = dict(gen=8, prompt_lens=(8, 8, 8, 8), batch_slots=4,
+                       paged=True, page_size=8, num_pages=6)
+    full = _serve_stats("packed", **pressure_kw)
+    grow = _serve_stats("packed", **pressure_kw, page_growth=True)
+    serve["pressure_full"] = full
+    serve["pressure_growth"] = grow
+    fres, gres = full["resilience"], grow["resilience"]
+    rows.append(("serve/pressure_full_peak_concurrency",
+                 float(fres["peak_concurrency"]),
+                 "full reservation: 2 pages/request up front on 6 pages"))
+    rows.append(("serve/pressure_growth_peak_concurrency",
+                 float(gres["peak_concurrency"]),
+                 "prompt-only reservation + per-tick growth, same pool "
+                 "(must admit strictly more than full reservation)"))
+    rows.append(("serve/pressure_growth_preemptions",
+                 float(gres["preemptions"]),
+                 f"victims preempted to honor the overcommit "
+                 f"({gres['replay_tokens']} tokens replayed exactly)"))
+    rows.append(("serve/pressure_pages_leaked",
+                 float(full["pages"]["leaked"] + grow["pages"]["leaked"]),
+                 "both pools after pressure serving"))
 
     # quantized-storage bytes/token: packed (6 bit/wt) vs 3-plane (12 bit/wt)
     from repro.configs import get_config

@@ -122,8 +122,15 @@ class PageAllocator:
         self.free(pages[keep:])
         return list(pages[:keep])
 
-    def free(self, pages: Iterable[int]) -> None:
-        """Drop one owner per page; pages at refcount 0 return to the pool."""
+    def free(self, pages: Iterable[int]) -> int:
+        """Drop one owner per page; pages at refcount 0 return to the pool.
+
+        Returns how many pages were actually RETURNED to the free pool.
+        Victim-preemption accounting relies on the distinction: a page
+        shared with the prefix index (or another request) merely loses
+        this owner's reference and stays live — shared pages are never
+        victim-released, only private ones relieve pressure."""
+        returned = 0
         for p in pages:
             ref = self._refs.get(p)
             if ref is None:
@@ -131,8 +138,35 @@ class PageAllocator:
             if ref == 1:
                 del self._refs[p]
                 self._free.append(p)
+                returned += 1
             else:
                 self._refs[p] = ref - 1
+        return returned
+
+    def audit(self) -> None:
+        """Structural invariant check; raises AssertionError on corruption.
+
+        Cheap enough (O(total pages)) to run after every preemption /
+        growth event in the serving runtime and after every op in the
+        property-test walk: free list has no duplicates and no live
+        pages, every live page has refcount >= 1, every id is in range,
+        and ``free + in_use == total`` holds exactly."""
+        if len(set(self._free)) != len(self._free):
+            raise AssertionError("free list contains duplicates")
+        for p in self._free:
+            if not 0 <= p < self.num_pages:
+                raise AssertionError(f"free page {p} out of range")
+            if p in self._refs:
+                raise AssertionError(f"page {p} is both free and live")
+        for p, ref in self._refs.items():
+            if not 0 <= p < self.num_pages:
+                raise AssertionError(f"live page {p} out of range")
+            if ref < 1:
+                raise AssertionError(f"live page {p} has refcount {ref}")
+        if len(self._free) + len(self._refs) != self.num_pages:
+            raise AssertionError(
+                f"free ({len(self._free)}) + in_use ({len(self._refs)}) "
+                f"!= total ({self.num_pages})")
 
     # -- stats --------------------------------------------------------------
 

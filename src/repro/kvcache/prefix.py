@@ -277,6 +277,28 @@ class PrefixIndex:
             self.evicted += 1
         return True
 
+    def audit(self) -> None:
+        """Invariant check against the allocator; raises AssertionError.
+
+        Every indexed page must still be LIVE in the allocator with at
+        least the index's own reference — if a victim preemption had
+        returned an index-held page to the free pool, the next prefix hit
+        would retain a recycled page and serve another request's KV rows
+        (use-after-free). The serving runtime calls this after every
+        preemption: shared pages are never victim-released, they only
+        lose the victim's reference. Also checks the snapshot-bytes
+        ledger matches the entries' sidecars."""
+        for key, e in self._entries.items():
+            if self.alloc.refcount(e.page) < 1:
+                raise AssertionError(
+                    f"prefix entry (depth {len(key)}) holds freed page "
+                    f"{e.page}")
+        held = sum(e.state_bytes for e in self._entries.values())
+        if held != self.state_bytes:
+            raise AssertionError(
+                f"state-bytes ledger {self.state_bytes} != sum of entry "
+                f"sidecars {held}")
+
     def release_all(self) -> None:
         """Drop every cached reference (explicit cache teardown)."""
         while self._entries:

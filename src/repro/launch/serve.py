@@ -57,6 +57,29 @@ the boundary state) with no page leaked or double-written. Greedy decoding
 is BIT-IDENTICAL to non-speculative serving; with sampling, standard
 rejection sampling against the per-request seeded streams keeps each
 emitted token an exact draw from the target distribution.
+
+SERVING UNDER PRESSURE (``--page-growth`` / ``--preemption`` /
+``--spec-floor`` / ``--inject`` / ``--max-wall-s``): on-demand page
+growth admits requests with a prompt-only (+ ``--growth-headroom``)
+reservation and grows their page lists per decode tick, so the same pool
+admits MORE concurrent requests than full reservation — at the price of
+possible mid-decode exhaustion. When the pool runs dry the scheduler
+first evicts cached prefixes, then PREEMPTS a victim (lowest priority,
+then youngest-by-emitted-tokens; the oldest live request is always
+exempt, which makes forward progress provable — see
+``runtime.resilience``): the victim's non-shared pages are released and
+it is re-admitted later by replaying prompt + emitted tokens through the
+ordinary prefill path, bit-identically for greedy streams. Speculative
+requests degrade gracefully: under pool pressure, or when the trailing
+acceptance rate sits below ``--spec-floor`` over ``--spec-window``
+drafted tokens, a request decodes plainly for the round instead of
+failing. SIGTERM (via ``PreemptionGuard``) and the ``--max-wall-s`` soft
+deadline drain in-flight requests — finish the current wave, mark live
+requests ``preempted`` with their partial streams, free every page. A
+seeded fault injector (``--inject oop@tick7,fail@tick3``, see
+``runtime.faultinject``) forces pool exhaustion / transient step
+failures / latency at chosen decode ticks so chaos tests can assert the
+recovery paths are exact.
 """
 from __future__ import annotations
 
@@ -71,6 +94,10 @@ import numpy as np
 
 from repro.kvcache import PageAllocator, PrefixIndex, copy_page, pages_for
 from repro.models.model import _RECURRENT_KEYS, reset_slots
+from repro.runtime.fault import PreemptionGuard, run_with_retries
+from repro.runtime.faultinject import FaultInjector
+from repro.runtime.resilience import (AcceptanceWindow, SchedulerStall,
+                                      SlotDiag, pick_victim, replay_sequence)
 from repro.spec import Drafter, SpecStats, Verifier
 from repro.spec.policy import accept_greedy, accept_speculative, shaped_probs
 
@@ -91,6 +118,15 @@ class Request:
     snaps: dict = dataclasses.field(default_factory=dict)  # boundary -> state
     rng: np.random.Generator | None = None  # per-request sampling stream
     dfed: int = 0               # prompt tokens prefilled into the DRAFT cache
+    priority: int = 0           # victim policy: lower preempts first
+    status: str = "ok"          # "ok" | "preempted" (drained with a partial
+    #                             stream; mid-run preemptions restore to "ok")
+    seq_no: int = -1            # admission order; the oldest live request is
+    #                             growth-exempt (assigned once, survives replay)
+    replay: np.ndarray | None = None  # preempted: tokens to re-prefill
+    preemptions: int = 0        # times this request was preempted
+    draft_on: bool = False      # drafting decision, frozen at (re)admission
+    acc: "AcceptanceWindow | None" = None  # trailing draft acceptance
 
 
 def sample_token(
@@ -167,7 +203,13 @@ class BatchedServer:
                  prefill_chunk: int = 0, temperature: float = 0.0,
                  top_k: int = 0, top_p: float = 1.0, seed: int = 0,
                  speculate: int = 0, draft_params=None,
-                 draft_num_pages: int | None = None):
+                 draft_num_pages: int | None = None,
+                 page_growth: bool = False, growth_headroom: int = 0,
+                 preemption: bool = True, spec_floor: float = 0.0,
+                 spec_window: int = 16,
+                 inject: "FaultInjector | str | None" = None,
+                 guard: PreemptionGuard | None = None,
+                 max_wall_s: float = 0.0):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -185,6 +227,25 @@ class BatchedServer:
         self.prefill_tokens = 0     # tokens actually fed through prefill
         self.pages_allocated = 0    # fresh pages allocated (incl. COW copies)
         self.prefix_deferrals = 0   # admissions held back for cross-wave dedup
+        # -- resilience (see module docstring + runtime.resilience) ---------
+        self.page_growth = page_growth
+        self.growth_headroom = growth_headroom
+        self.preemption = preemption
+        self.spec_floor = spec_floor
+        self.spec_window = spec_window
+        self.inject = (FaultInjector(inject, seed=seed)
+                       if isinstance(inject, str) else inject)
+        self.guard = guard
+        self.max_wall_s = max_wall_s
+        self.preemptions = 0        # victim preemptions (pool pressure)
+        self.replays = 0            # preempted requests re-admitted
+        self.replay_tokens = 0      # tokens re-prefilled by those replays
+        self.peak_concurrency = 0   # most slots simultaneously live
+        self.drained = False        # run ended via SIGTERM / wall-clock drain
+        self._seq_counter = 0       # admission order for the growth exemption
+        self._pending: list[Request] = []
+        if page_growth and not paged:
+            raise ValueError("page_growth requires paged=True")
         if prefix_cache and not paged:
             raise ValueError("prefix_cache requires paged=True")
         if speculate and not paged:
@@ -299,12 +360,49 @@ class BatchedServer:
             self.cache["page_table"] = jnp.asarray(self._table)
             self._table_dirty = False
 
-    def _wants_draft(self, r: Request) -> bool:
-        """Speculation needs at least one draftable step: ``kk = min(k,
-        max_new - emitted - 1)`` is positive for some round only when
-        ``max_new >= 3`` — shorter requests ride the verify wave as plain
-        single-token rows and never touch the draft cache."""
-        return self.drafter is not None and r.max_new >= 3
+    def _seq(self, r: Request) -> np.ndarray:
+        """The token sequence the prefill path feeds for ``r``: its prompt,
+        or — after a preemption — the replay sequence (prompt + emitted
+        tokens except the last, see ``resilience.replay_sequence``)."""
+        return r.replay if r.replay is not None else r.prompt
+
+    def _need_rows(self, r: Request) -> int:
+        """KV rows ``r`` still needs END-TO-END from its current sequence:
+        prefill writes ``len(seq)`` rows, decode one more per remaining
+        token except the last. For a fresh request this is the classic
+        ``prompt + max_new - 1``; for a replay it already nets out the
+        rows the emitted tokens no longer need."""
+        return len(self._seq(r)) + (r.max_new - len(r.out)) - 1
+
+    def _call(self, seam: str, fn: Callable):
+        """Run one device step through the fault boundary. With no
+        injector installed this is a direct call (the hot path pays
+        nothing). Under injection, the seam's slow/fail hooks fire first
+        and transient failures retry via ``run_with_retries`` — safe
+        because every step is a pure jitted function over an immutable
+        cache pytree (re-running cannot double-apply a write), with
+        ``OutOfPages`` excluded (deterministic resource condition: the
+        scheduler's relief path owns it, not the retry loop)."""
+        if self.inject is None:
+            return fn()
+
+        def step():
+            self.inject.on_step(seam)
+            return fn()
+
+        return run_with_retries(step, max_retries=3, base_delay_s=0.0,
+                                retriable=(RuntimeError,))
+
+    def _draftable(self, r: Request) -> bool:
+        """Drafting decision, frozen into ``r.draft_on`` at (re)admission:
+        speculation needs at least one draftable step — ``kk = min(k,
+        max_new - emitted - 1)`` positive for some future round. Fresh
+        requests need ``max_new >= 3``; a replayed request re-decides from
+        its emitted count (a nearly-finished victim re-admits as a plain
+        verify-wave rider and never re-touches the draft cache)."""
+        if self.drafter is None:
+            return False
+        return r.max_new - (len(r.out) or 1) >= 2
 
     def _common_prefix_pages(self, a: np.ndarray, b: np.ndarray) -> int:
         """Leading FULL pages on which two prompts are token-identical."""
@@ -343,13 +441,16 @@ class BatchedServer:
                 # active already indexed) never re-hashes prompts
                 cands.append(req)
                 continue
-            overlap = max(self._common_prefix_pages(req.prompt, o.prompt)
-                          for o in others)
+            overlap = max(
+                self._common_prefix_pages(self._seq(req), self._seq(o))
+                for o in others
+            )
             if overlap == 0:
                 cands.append(req)
                 continue
             matched, _, _ = self.prefix.match(
-                req.prompt, need_state=bool(self._recurrent), record=False
+                self._seq(req), need_state=bool(self._recurrent),
+                record=False
             )
             if overlap * self.page_size > matched:
                 self.prefix_deferrals += 1
@@ -385,11 +486,13 @@ class BatchedServer:
                 # prefill still writes the full prompt — in paged mode the
                 # tail would scatter into a page owned by a live neighbour
                 raise ValueError(f"request {r.rid}: max_new must be >= 1")
-            # prefill writes len(prompt) KV rows, decode max_new-1 more
-            need = len(r.prompt) + r.max_new - 1
+            # prefill writes len(seq) KV rows, decode the rest; this bound
+            # is ALSO the deadlock-freedom anchor of on-demand growth: a
+            # lone request's end-to-end need always fits the pool
+            need = self._need_rows(r)
             if need > self.max_len:
                 raise ValueError(
-                    f"request {r.rid}: prompt {len(r.prompt)} + gen "
+                    f"request {r.rid}: prompt {len(self._seq(r))} + gen "
                     f"{r.max_new} needs {need} cache rows > "
                     f"max_len={self.max_len}"
                 )
@@ -406,16 +509,36 @@ class BatchedServer:
                     break  # budget exhausted: the rest wait for retirements
             else:
                 req.kv_reserved_bytes = self._kv_row_bytes
-            req.rng = np.random.default_rng([self._seed, req.rid])
+            if req.rng is None:
+                # NOT reset on re-admission: a preempted request's sampling
+                # stream continues where it stopped, so sampled streams
+                # survive preemption exactly like greedy ones
+                req.rng = np.random.default_rng([self._seed, req.rid])
+            if req.seq_no < 0:
+                # admission order, assigned ONCE: a replayed request keeps
+                # its original seq_no, so re-admission restores (not
+                # resets) its growth-exemption seniority
+                req.seq_no = self._seq_counter
+                self._seq_counter += 1
+            if req.replay is not None:
+                self.replays += 1
+                self.replay_tokens += len(req.replay) - req.start_len
+                self.events.append(f"replay:{req.rid}")
             for qi, p in enumerate(pending):  # identity removal: Request
                 if p is req:                  # __eq__ compares ndarrays
                     del pending[qi]
                     break
             self.active[i] = req
-            if self._wants_draft(req):
+            req.status = "ok"
+            req.draft_on = self._draftable(req)
+            if req.draft_on:
                 # draft high-water: one row less than the target's — the
-                # drafter never ingests the final emitted token
+                # drafter never ingests the final emitted token (absolute
+                # positions, so replay does not change it)
                 self.drafter.admit(i, len(req.prompt) + req.max_new - 2)
+                if self.spec_floor > 0.0 and req.acc is None:
+                    req.acc = AcceptanceWindow(self.spec_floor,
+                                               self.spec_window)
             admitted += 1
         if admitted:
             self._prefill_wave()
@@ -433,21 +556,35 @@ class BatchedServer:
         logits must be recomputed to sample the first output) and
         copy-on-writes the boundary page, so the shared copy is never
         scattered into. Recurrent families additionally install the
-        boundary's state snapshot in place of the slot reset."""
-        np_need = pages_for(len(req.prompt) + req.max_new - 1,
-                            self.page_size)
+        boundary's state snapshot in place of the slot reset.
+
+        On-demand growth (``page_growth=True``) reserves only the pages
+        the SEQUENCE (+ ``growth_headroom`` tokens) needs — the rest grow
+        per decode tick via :meth:`_ensure_rows` — so the same pool
+        admits more concurrent requests than full reservation."""
+        seq = self._seq(req)
+        np_need = pages_for(self._need_rows(req), self.page_size)
+        if self.page_growth:
+            goal = max(
+                pages_for(min(self._need_rows(req),
+                              len(seq) + self.growth_headroom),
+                          self.page_size),
+                pages_for(len(seq), self.page_size),  # always hold the seq
+            )
+        else:
+            goal = np_need
         shared_tok, shared_pages, state = 0, [], None
         if self.prefix is not None:
             # dry-run probe: stats count and LRU move only when admission
             # actually commits (this path retries every scheduler step
             # while blocked on the pool)
             shared_tok, shared_pages, state = self.prefix.match(
-                req.prompt, need_state=bool(self._recurrent), record=False
+                seq, need_state=bool(self._recurrent), record=False
             )
         m = len(shared_pages)
-        rollback = m > 0 and shared_tok == len(req.prompt)
+        rollback = m > 0 and shared_tok == len(seq)
         # fresh pages = unmatched tail (+1 when the boundary page is COWed)
-        fresh_needed = np_need - m + (1 if rollback else 0)
+        fresh_needed = goal - m + (1 if rollback else 0)
         if m:
             # retain BEFORE any eviction: matched pages must stay live even
             # if eviction drops their index entries
@@ -457,16 +594,16 @@ class BatchedServer:
                 if m:
                     self.alloc.free(shared_pages)  # undo; retry after retire
                 return False
-        tail = self.alloc.alloc(np_need - m)
+        tail = self.alloc.alloc(goal - m)
         if self.prefix is not None:
-            self.prefix.record(req.prompt, shared_tok)  # admission commits
+            self.prefix.record(seq, shared_tok)  # admission commits
         req.pages = shared_pages + tail
         req.start_len = shared_tok - (1 if rollback else 0)
         req.fed = req.start_len
         self._table[i, : len(req.pages)] = req.pages
         self._table_dirty = True
-        self.pages_allocated += np_need - m
-        req.kv_reserved_bytes = (np_need - m) * self._page_bytes
+        self.pages_allocated += goal - m
+        req.kv_reserved_bytes = (goal - m) * self._page_bytes
         if rollback:
             # the re-run token writes into the last SHARED page: make this
             # slot its exclusive writer first
@@ -519,11 +656,14 @@ class BatchedServer:
 
     def _index_prompt(self, req: Request) -> None:
         """Register a fully prefilled prompt's full pages in the prefix
-        index (with any recurrent boundary snapshots captured en route)."""
+        index (with any recurrent boundary snapshots captured en route).
+        A replayed sequence indexes like a prompt — its full pages are as
+        reusable (and a future replay of the same request hits them)."""
         if self.prefix is None or req.indexed:
             return
         req.indexed = True
-        self.prefix.insert(req.prompt, req.pages, states=req.snaps or None)
+        self.prefix.insert(self._seq(req), req.pages,
+                           states=req.snaps or None)
         req.snaps = {}
 
     def _retire(self, i: int, req: Request, done: list[Request]):
@@ -533,8 +673,100 @@ class BatchedServer:
             self.alloc.free(req.pages)
             self._table[i] = 0  # cosmetic: stale ids are unreachable anyway
             self._table_dirty = True
-        if self._wants_draft(req):
-            self.drafter.release(i)  # normally already released (kk hit 0)
+        if self.drafter is not None:
+            self.drafter.release(i)  # idempotent; usually already released
+
+    # -- preemption / on-demand growth (see runtime.resilience) -------------
+
+    def _preempt(self, i: int, req: Request) -> None:
+        """Evict ``req`` from slot ``i`` mid-flight: release its pages
+        (shared prefix pages are never victim-released — they only lose
+        this owner's reference, see ``PageAllocator.free``), invalidate
+        its draft state, and requeue it at the FRONT of the pending queue
+        with a replay sequence that restores it exactly."""
+        req.replay = replay_sequence(req.prompt, req.out)
+        req.fed = 0
+        req.dfed = 0
+        req.start_len = 0
+        req.preloaded = False
+        req.indexed = False
+        req.snaps = {}
+        req.preemptions += 1
+        self.preemptions += 1
+        self.alloc.free(req.pages)
+        req.pages = []
+        self._table[i] = 0
+        self._table_dirty = True
+        if self.drafter is not None:
+            self.drafter.release(i)
+        self.active[i] = None
+        self._pending.insert(0, req)
+        self.events.append(f"preempt:{req.rid}")
+        # structural guarantee, not a hot path: preemption is the one op
+        # that frees pages other parties may still reference
+        self.alloc.audit()
+        if self.prefix is not None:
+            self.prefix.audit()
+
+    def _preempt_one(self) -> Request | None:
+        """Preempt the policy victim (lowest priority, then youngest, then
+        latest-admitted; the oldest live request is always exempt — the
+        deadlock-freedom anchor). Returns the victim, or None when only
+        the exempt request remains."""
+        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
+        if len(live) <= 1:
+            return None
+        exempt = min(r.seq_no for _, r in live)
+        pick = pick_victim(live, exempt)
+        if pick is None:
+            return None
+        vi, victim = pick
+        self._preempt(vi, victim)
+        return victim
+
+    def _ensure_rows(self, i: int, req: Request, rows: int, *,
+                     preempt: bool = True) -> bool:
+        """Grow slot ``i``'s page list to cover ``rows`` KV rows.
+
+        Relief order on exhaustion: prefix-cache eviction first (free
+        capacity, no one loses work), then victim preemption. Returns
+        False when the request cannot proceed THIS tick — it was itself
+        chosen as the victim, or relief is exhausted/disabled
+        (``preempt=False`` is the degradation probe: speculative headroom
+        is not worth preempting a neighbour for). A False from a
+        non-probe call just skips the row for one tick; retirement or
+        relief unblocks it later, and greedy streams are invariant to the
+        skipped tick.
+
+        The injector's forced ``oop`` fires here (non-probe calls only)
+        and preempts a victim even when the pool could serve the need —
+        that is what makes chaos-test preemptions land at exact ticks."""
+        need = pages_for(rows, self.page_size) - len(req.pages)
+        if (preempt and self.inject is not None
+                and self.inject.take("oop")):
+            if not self.preemption:
+                return False  # behave like unrelieved exhaustion: skip
+            self._preempt_one()
+            if self.active[i] is not req:
+                return False  # the requester itself was the chosen victim
+        if need <= 0:
+            return True
+        while not self.alloc.can_alloc(need):
+            if self.prefix is not None and self.prefix.evict_for(need):
+                break
+            if not (preempt and self.preemption):
+                return False
+            if self._preempt_one() is None:
+                return False  # only the exempt oldest remains
+            if self.active[i] is not req:
+                return False
+        grown = self.alloc.alloc(need)
+        self._table[i, len(req.pages): len(req.pages) + need] = grown
+        req.pages.extend(grown)
+        self._table_dirty = True
+        self.pages_allocated += need
+        req.kv_reserved_bytes += need * self._page_bytes
+        return True
 
     def _draft_prefill_wave(self) -> bool:
         """Mirror prefill into the DRAFT cache: the drafter scores
@@ -545,12 +777,12 @@ class BatchedServer:
         if self.drafter is None:
             return False
         rows = [(i, r) for i, r in enumerate(self.active)
-                if r is not None and self._wants_draft(r)
-                and r.dfed < len(r.prompt)]
+                if r is not None and r.draft_on
+                and r.dfed < len(self._seq(r))]
         if not rows:
             return False
         chunk = self.prefill_chunk or self.max_len
-        sizes = {i: min(chunk, len(r.prompt) - r.dfed) for i, r in rows}
+        sizes = {i: min(chunk, len(self._seq(r)) - r.dfed) for i, r in rows}
         lb = min(_bucket(max(sizes.values()), self.bucket_min), self.max_len)
         tokens = np.zeros((self.slots, lb), np.int32)
         lengths = np.zeros((self.slots,), np.int32)
@@ -558,7 +790,7 @@ class BatchedServer:
         fed_after: dict[int, int] = {}
         for i, r in rows:
             c = sizes[i]
-            tokens[i, :c] = r.prompt[r.dfed : r.dfed + c]
+            tokens[i, :c] = self._seq(r)[r.dfed : r.dfed + c]
             lengths[i] = c
             fresh[i] = r.dfed == 0
             r.dfed += c
@@ -574,13 +806,13 @@ class BatchedServer:
         logits at their own last real position."""
         drafted = self._draft_prefill_wave()
         rows = [(i, r) for i, r in enumerate(self.active)
-                if r is not None and r.fed < len(r.prompt)]
+                if r is not None and r.fed < len(self._seq(r))]
         if not rows:
             return drafted
         chunk = self.prefill_chunk or self.max_len
         sizes = {}
         for i, r in rows:
-            c = min(chunk, len(r.prompt) - r.fed)
+            c = min(chunk, len(self._seq(r)) - r.fed)
             if self._snap_boundaries:
                 # recurrent prefix caching: cap the wave at the next page
                 # boundary so its state can be snapshotted for the index
@@ -595,7 +827,7 @@ class BatchedServer:
         starts = np.zeros((self.slots,), np.int32)
         for i, r in rows:
             c = sizes[i]
-            tokens[i, :c] = r.prompt[r.fed : r.fed + c]
+            tokens[i, :c] = self._seq(r)[r.fed : r.fed + c]
             lengths[i] = c
             # first wave of a request resets the slot — unless its state
             # was preloaded from the prefix index at admission
@@ -606,10 +838,14 @@ class BatchedServer:
             r.fed += c
             self.prefill_tokens += c
         self._sync_table()
-        logits, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(fresh), jnp.asarray(starts), self.cache,
-        )
+
+        def _wave():
+            return self._prefill(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                jnp.asarray(fresh), jnp.asarray(starts), self.cache,
+            )
+
+        logits, self.cache = self._call("prefill", _wave)
         self.events.append("prefill")
         if self._snap_boundaries:
             for i, r in rows:
@@ -622,34 +858,58 @@ class BatchedServer:
                     }
         pick = self._pick_tokens(logits)
         for i, r in rows:
-            if r.fed == len(r.prompt):
+            if r.fed == len(self._seq(r)):
                 self._index_prompt(r)
-                self._emit(r, pick(i))
+                if not r.out:
+                    # replayed requests skip this: their first token(s)
+                    # were emitted before preemption — the replay tail's
+                    # logits would re-derive out[-1], which the next
+                    # decode step re-feeds instead
+                    self._emit(r, pick(i))
         return True
 
     def step(self) -> bool:
         """One decode step for all decode-ready slots; finished, empty and
         mid-prefill slots are masked out (no cache write, no length
-        advance)."""
+        advance). In growth mode each ready row first secures the page its
+        write lands in (:meth:`_ensure_rows`) — a row whose growth fails,
+        or that gets preempted by a NEIGHBOUR'S growth, sits the tick out
+        (greedy streams are invariant to the skipped tick)."""
+        ready = [(i, r) for i, r in enumerate(self.active)
+                 if (r is not None and not r.done and r.out
+                     and r.fed == len(self._seq(r)))]
+        grown: dict[int, bool] = {}
+        if self.paged:
+            for i, r in ready:
+                if self.active[i] is not r:
+                    continue  # preempted by an earlier row's growth
+                # decode writes ONE row at len(prompt) + len(out) - 1
+                grown[i] = self._ensure_rows(i, r,
+                                             len(r.prompt) + len(r.out))
         tokens = np.zeros((self.slots, 1), np.int32)
         active = np.zeros((self.slots,), bool)
-        for i, r in enumerate(self.active):
-            if (r is not None and not r.done and r.out
-                    and r.fed == len(r.prompt)):
-                tokens[i, 0] = r.out[-1]
-                active[i] = True
-                if self.paged:
-                    # decode writes at len(prompt) + decoded steps — COW if
-                    # that page is somehow still shared (post-admission
-                    # invariant: it never is)
-                    self._cow_guard(i, r, len(r.prompt) + len(r.out) - 1, 1)
+        for i, r in ready:
+            if self.active[i] is not r:
+                continue  # a LATER row's growth preempted this one
+            if self.paged and not grown.get(i, False):
+                continue
+            tokens[i, 0] = r.out[-1]
+            active[i] = True
+            if self.paged:
+                # COW if the write page is somehow still shared
+                # (post-admission invariant: it never is)
+                self._cow_guard(i, r, len(r.prompt) + len(r.out) - 1, 1)
         if not active.any():
             return False
         self._sync_table()
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.cache,
-            active=jnp.asarray(active),
-        )
+
+        def _step():
+            return self._decode(
+                self.params, jnp.asarray(tokens), self.cache,
+                active=jnp.asarray(active),
+            )
+
+        logits, self.cache = self._call("decode", _step)
         self.events.append("decode")
         pick = self._pick_tokens(logits)
         for i, r in enumerate(self.active):
@@ -663,9 +923,9 @@ class BatchedServer:
         prefix-cache hit can finish the target's prefill first, in which
         case the request waits a wave for its drafter rather than decode
         un-drafted."""
-        if r is None or r.done or not r.out or r.fed < len(r.prompt):
+        if r is None or r.done or not r.out or r.fed < len(self._seq(r)):
             return False
-        if self._wants_draft(r) and r.dfed < len(r.prompt):
+        if r.draft_on and r.dfed < len(self._seq(r)):
             return False
         return True
 
@@ -685,18 +945,44 @@ class BatchedServer:
         if not rows:
             return False
         greedy = self.sampling["temperature"] <= 0.0
+        # capacity + degradation phase BEFORE any drafting: decide each
+        # row's draft budget under pool pressure / acceptance history
         kks: dict[int, int] = {}
+        for i, r in rows:
+            if self.active[i] is not r:
+                continue  # preempted by an earlier row's growth
+            kk = (min(self.speculate, r.max_new - len(r.out) - 1)
+                  if r.draft_on else 0)
+            if kk > 0 and r.acc is not None and r.acc.degraded():
+                # persistent drafter divergence: decode plainly this round;
+                # aging the window lets drafting re-probe later
+                r.acc.age()
+                kk = 0
+                self.spec.degraded_rounds += 1
+            base_rows = len(r.prompt) + len(r.out)  # plain width-1 write
+            if self.paged and kk > 0:
+                if not self._ensure_rows(i, r, base_rows + kk,
+                                         preempt=False):
+                    # pool pressure: speculative HEADROOM is not worth
+                    # preempting a neighbour — fall back to plain decode
+                    # for this round
+                    kk = 0
+                    self.spec.degraded_rounds += 1
+            if self.paged and not self._ensure_rows(i, r, base_rows + kk):
+                continue  # preempted or blocked: sits this round out
+            kks[i] = kk
+        rows = [(i, r) for i, r in rows
+                if self.active[i] is r and i in kks]
+        if not rows:
+            return False
         jobs = []
         for i, r in rows:
-            kk = (min(self.speculate, r.max_new - len(r.out) - 1)
-                  if self._wants_draft(r) else 0)
-            kks[i] = kk
-            if kk > 0:
+            if kks[i] > 0:
                 jobs.append((
                     i,
                     np.concatenate([r.prompt,
                                     np.asarray(r.out, np.int32)]),
-                    kk,
+                    kks[i],
                 ))
         drafts: dict[int, list[int]] = {i: [] for i, _ in rows}
         qdists: dict[int, np.ndarray] = {}
@@ -721,9 +1007,12 @@ class BatchedServer:
             if self.paged:
                 self._cow_guard(i, r, int(base[i]), 1 + len(di))
         self._sync_table()
-        scores, self.cache, snap = self.verifier.score(
-            self.cache, tokens, lengths, greedy=greedy
-        )
+
+        def _score():
+            return self.verifier.score(self.cache, tokens, lengths,
+                                       greedy=greedy)
+
+        scores, self.cache, snap = self._call("verify", _score)
         self.events.append("verify")
         self.spec.rounds += 1
         self.spec.target_forwards += 1
@@ -744,6 +1033,8 @@ class BatchedServer:
                 m, tok = accept_speculative(di, qdists.get(i), p, r.rng)
             self.spec.drafted += len(di)
             self.spec.accepted += m
+            if r.acc is not None and len(di):
+                r.acc.record(len(di), m)
             if kks[i] > 0:
                 verdicts[i] = m
             if m < len(di):  # rejected suffix: un-write it
@@ -765,32 +1056,90 @@ class BatchedServer:
                 self.spec.emitted += 1
             self._emit(r, emits[i])
             self.spec.emitted += 1
-            if (self._wants_draft(r)
-                    and r.max_new - len(r.out) - 1 <= 0):
+            if r.draft_on and r.max_new - len(r.out) - 1 <= 0:
                 # out of draft budget: the drafter is done with this slot
                 # one round before the target retires — release its pages
                 self.drafter.release(i)
         return True
+
+    def _stall(self) -> SchedulerStall:
+        """Build the diagnostic stall exception from live-slot state."""
+        diags = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            pend = 0
+            if self.paged:
+                # end-of-decode row need, valid mid-flight (``_need_rows``
+                # is admission-time: it folds emitted tokens into the
+                # replay sequence, which a live slot hasn't built)
+                end_rows = len(r.prompt) + r.max_new - 1
+                pend = max(pages_for(end_rows, self.page_size)
+                           - len(r.pages), 0)
+            diags.append(SlotDiag(
+                slot=i, rid=r.rid, seq_len=len(self._seq(r)), fed=r.fed,
+                emitted=len(r.out), max_new=r.max_new,
+                pages_held=len(r.pages), pages_pending=pend,
+            ))
+        return SchedulerStall(
+            diags, self.alloc.free_pages if self.paged else None)
+
+    def _drain_due(self, t0: float) -> bool:
+        if self.guard is not None and self.guard.requested:
+            return True
+        return bool(self.max_wall_s) and time.time() - t0 > self.max_wall_s
+
+    def _drain(self, done: list[Request]) -> None:
+        """Graceful shutdown: the current wave already finished (checked
+        at the loop top), so live requests retire with their partial
+        streams (tokens were streamed via ``on_token`` as they decoded)
+        under ``status='preempted'``; nothing new is admitted; every page
+        is freed — a drained server must leak nothing."""
+        self.drained = True
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            if not r.done:  # a finished row retires normally, status "ok"
+                r.status = "preempted"
+                r.done = True
+            self._retire(i, r, done)
+        for r in self._pending:
+            r.status = "preempted"
+        self.events.append("drain")
 
     def run(self, requests: list[Request],
             on_token: Callable[[Request, int], None] | None = None) -> dict:
         """Serve ``requests`` to completion. ``on_token(request, token)``
         streams each decoded token to the caller as it is sampled."""
         self._on_token = on_token
-        pending = list(requests)
+        self._pending = list(requests)
         done: list[Request] = []
         steps = 0
         t0 = time.time()
         try:
             while True:
+                if self.inject is not None:
+                    # decode-step counter = the chaos tick clock
+                    self.inject.set_tick(steps)
+                if self._drain_due(t0):
+                    self._drain(done)
+                    break
                 # retire finished slots — including requests whose single
                 # token came straight from the previous prefill wave
                 for i, r in enumerate(self.active):
                     if r is not None and r.done:
                         self._retire(i, r, done)
-                if pending and any(s is None for s in self.active):
-                    if self._fill_slots(pending):
+                if self._pending and any(s is None for s in self.active):
+                    if self._fill_slots(self._pending):
+                        self.peak_concurrency = max(
+                            self.peak_concurrency,
+                            sum(1 for r in self.active if r is not None),
+                        )
                         continue  # retire prefill-finished, refill more
+                self.peak_concurrency = max(
+                    self.peak_concurrency,
+                    sum(1 for r in self.active if r is not None),
+                )
                 # interleave: one chunk of prompt feeding, then one decode
                 # step — a long prompt never stalls ongoing decodes
                 fed = self._prefill_wave()
@@ -803,8 +1152,8 @@ class BatchedServer:
                 if any(r is not None and r.done for r in self.active):
                     continue  # retire at loop top
                 if any(r is not None for r in self.active):
-                    raise RuntimeError("scheduler stalled with live slots")
-                if pending:
+                    raise self._stall()
+                if self._pending:
                     continue  # slots all free: next _fill_slots admits
                 break
         finally:
@@ -820,6 +1169,23 @@ class BatchedServer:
             "decode_compiles": self._decode._cache_size(),
             "prefill_tokens": self.prefill_tokens,
         }
+        stats["resilience"] = {
+            "page_growth": self.page_growth,
+            "preemptions": self.preemptions,
+            "replays": self.replays,
+            "replay_tokens": self.replay_tokens,
+            "degraded_rounds": (self.spec.degraded_rounds
+                                if self.spec else 0),
+            "peak_concurrency": self.peak_concurrency,
+            "drained": self.drained,
+            "preempted_requests": sum(1 for r in done
+                                      if r.status == "preempted"),
+            "unserved": len(self._pending),
+        }
+        if self.inject is not None:
+            stats["resilience"]["injected"] = self.inject.summary()
+        if self.paged:
+            self.alloc.audit()  # end-of-run structural check
         if done:
             reserved = [r.kv_reserved_bytes for r in done]
             stats["kv_bytes_reserved_per_request"] = {
@@ -922,6 +1288,35 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="split prompts into N-token prefill waves "
                          "interleaved with decode steps (0 = whole prompt)")
+    ap.add_argument("--page-growth", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="admit with a prompt-only (+headroom) page "
+                         "reservation and grow per decode tick (paged "
+                         "mode): more admitted concurrency, preemption "
+                         "handles mid-decode exhaustion")
+    ap.add_argument("--growth-headroom", type=int, default=0,
+                    help="extra tokens reserved beyond the prompt at "
+                         "admission in growth mode")
+    ap.add_argument("--preemption", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="preempt+replay victims on pool exhaustion; "
+                         "--no-preemption skips ticks instead and may "
+                         "stall (SchedulerStall)")
+    ap.add_argument("--spec-floor", type=float, default=0.0,
+                    help="trailing draft acceptance-rate floor below "
+                         "which a request decodes plainly for the round "
+                         "(0 = never degrade)")
+    ap.add_argument("--spec-window", type=int, default=16,
+                    help="drafted tokens in the acceptance window")
+    ap.add_argument("--inject", default="",
+                    help="fault plan, e.g. oop@tick7,fail@tick3,slow@tick5 "
+                         "(see repro.runtime.faultinject); with greedy "
+                         "sampling the CLI re-runs the workload cleanly "
+                         "and FAILS unless streams match bit-exactly")
+    ap.add_argument("--max-wall-s", type=float, default=0.0,
+                    help="soft deadline: drain in-flight requests (partial "
+                         "streams, status=preempted, zero leaks) and exit "
+                         "cleanly after S seconds (0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0,
@@ -984,35 +1379,69 @@ def main(argv=None):
         plens = [int(x) for x in args.prompt_lens.split(",")]
     else:
         plens = [args.prompt_len]
-    rng = np.random.default_rng(args.seed)
-    common = rng.integers(0, cfg.vocab_size, args.shared_prefix,
-                          dtype=np.int32)
-    reqs = [
-        Request(i, np.concatenate([
-            common,
-            rng.integers(0, cfg.vocab_size, plens[i % len(plens)],
-                         dtype=np.int32),
-        ]), args.gen)
-        for i in range(args.requests)
-    ]
-    server = BatchedServer(
-        model, params, args.batch,
-        args.shared_prefix + max(plens) + args.gen + 8,
-        paged=args.paged, page_size=args.page_size,
-        num_pages=args.num_pages or None,
-        prefix_cache=args.prefix_cache,
-        prefix_state_budget=args.prefix_state_budget,
-        prefill_chunk=args.prefill_chunk,
-        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-        seed=args.seed,
-        speculate=args.speculate, draft_params=draft_params,
-    )
-    stats = server.run(reqs)
+
+    def make_reqs():
+        # deterministic workload: the --inject self-check rebuilds the
+        # identical request list for its clean reference run
+        rng = np.random.default_rng(args.seed)
+        common = rng.integers(0, cfg.vocab_size, args.shared_prefix,
+                              dtype=np.int32)
+        return [
+            Request(i, np.concatenate([
+                common,
+                rng.integers(0, cfg.vocab_size, plens[i % len(plens)],
+                             dtype=np.int32),
+            ]), args.gen)
+            for i in range(args.requests)
+        ]
+
+    def make_server(*, inject=None, guard=None, max_wall_s=0.0):
+        return BatchedServer(
+            model, params, args.batch,
+            args.shared_prefix + max(plens) + args.gen + 8,
+            paged=args.paged, page_size=args.page_size,
+            num_pages=args.num_pages or None,
+            prefix_cache=args.prefix_cache,
+            prefix_state_budget=args.prefix_state_budget,
+            prefill_chunk=args.prefill_chunk,
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, seed=args.seed,
+            speculate=args.speculate, draft_params=draft_params,
+            page_growth=args.page_growth,
+            growth_headroom=args.growth_headroom,
+            preemption=args.preemption, spec_floor=args.spec_floor,
+            spec_window=args.spec_window, inject=inject, guard=guard,
+            max_wall_s=max_wall_s,
+        )
+
+    greedy = args.temperature <= 0.0
+    ref_out = None
+    if args.inject and greedy:
+        # clean reference first: the injected run must reproduce these
+        # streams bit-exactly despite forced preemptions/faults
+        ref_reqs = make_reqs()
+        make_server().run(ref_reqs)
+        ref_out = {r.rid: list(r.out) for r in ref_reqs}
+
+    guard = PreemptionGuard().install()
+    try:
+        reqs = make_reqs()
+        server = make_server(inject=args.inject or None, guard=guard,
+                             max_wall_s=args.max_wall_s)
+        stats = server.run(reqs)
+    finally:
+        guard.uninstall()
     # decode reads every weight once per step: bytes/token on one chip
     stats["weight_bytes_per_token"] = w_bytes
     stats["engine"] = args.engine if args.bits else "fp"
     print(f"[serve] {stats}")
-    if stats["requests"] != len(reqs):
+    drained = stats["resilience"]["drained"]
+    if drained:
+        res = stats["resilience"]
+        print(f"[serve] drained cleanly: {stats['requests']} retired "
+              f"({res['preempted_requests']} partial), "
+              f"{res['unserved']} unserved")
+    if not drained and stats["requests"] != len(reqs):
         print(f"[serve] FAIL: served {stats['requests']}/{len(reqs)}")
         return 1
     if stats["decode_compiles"] > 1:
@@ -1022,6 +1451,21 @@ def main(argv=None):
     if args.paged and stats["pages"]["leaked"]:
         print(f"[serve] FAIL: {stats['pages']['leaked']} KV pages leaked")
         return 1
+    if ref_out is not None and not drained:
+        got = {r.rid: list(r.out) for r in reqs}
+        if got != ref_out:
+            bad = sorted(rid for rid in ref_out
+                         if got.get(rid) != ref_out[rid])
+            print(f"[serve] FAIL: injected-run streams diverge from the "
+                  f"clean run for rids {bad}")
+            return 1
+        if "oop" in args.inject and not stats["resilience"]["preemptions"]:
+            print("[serve] FAIL: oop injection fired no preemption "
+                  "(tick beyond the run, or nothing preemptible)")
+            return 1
+        print(f"[serve] chaos OK: streams bit-identical across "
+              f"{stats['resilience']['preemptions']} preemption(s) / "
+              f"{stats['resilience']['replays']} replay(s)")
     if args.prefix_cache:
         if (args.shared_prefix and args.requests > 1
                 and stats["prefix"]["hits"] == 0):

@@ -51,7 +51,15 @@ def reset_slots(cache: dict, refill: jax.Array,
     shared pages already holding ``start_len`` tokens of KV, so prefill
     positions, write offsets and attention masks all begin past the shared
     prefix (the same per-row ``len`` contract that makes chunked prefill
-    exact). Rows not selected by ``refill`` ignore it."""
+    exact). Rows not selected by ``refill`` ignore it.
+
+    This contract is also what makes PREEMPTION RESTORE exact (see
+    ``runtime.resilience``): a preempted request re-enters through an
+    ordinary ``reset_slots`` + ``prefill`` of prompt + emitted tokens —
+    positions, masks and recurrent state are all recomputed from ``len``
+    alone, so the rebuilt cache is indistinguishable from one that never
+    lost its pages, and the serving tests pin the resumed greedy stream
+    bit-identical."""
     out = dict(cache)
     start = 0 if start_len is None else start_len.astype(jnp.int32)
     out["len"] = jnp.where(refill, start, cache["len"]).astype(jnp.int32)

@@ -131,15 +131,30 @@ def run_with_retries(
     step_fn: Callable[[], None], *, max_retries: int = 3,
     on_failure: Callable[[int, Exception], None] | None = None,
     retriable: tuple[type[Exception], ...] = (RuntimeError, OSError),
+    non_retriable: tuple[type[Exception], ...] | None = None,
+    base_delay_s: float = 1.0,
 ):
-    """Execute one training step with bounded retries (transient XLA/runtime
-    faults at scale: preempted collectives, flaky interconnect)."""
+    """Execute one step with bounded retries (transient XLA/runtime faults
+    at scale: preempted collectives, flaky interconnect).
+
+    ``non_retriable`` exceptions surface immediately even when they
+    subclass a retriable type. The default excludes ``OutOfPages``: pool
+    exhaustion is a RuntimeError but it is a *deterministic* resource
+    condition — retrying it would spin through the backoff loop while the
+    scheduler (which owns preemption/eviction relief) never hears about
+    it. ``base_delay_s`` scales the exponential backoff; pass 0 in tests
+    and chaos harnesses so injected transient faults retry instantly."""
+    if non_retriable is None:
+        from repro.kvcache.allocator import OutOfPages
+        non_retriable = (OutOfPages,)
     for attempt in range(max_retries + 1):
         try:
             return step_fn()
+        except non_retriable:
+            raise
         except retriable as e:  # noqa: PERF203
             if attempt == max_retries:
                 raise
             if on_failure is not None:
                 on_failure(attempt, e)
-            time.sleep(min(2.0 ** attempt, 30.0))
+            time.sleep(min(base_delay_s * (2.0 ** attempt), 30.0))

@@ -1,0 +1,133 @@
+"""Deterministic fault injection for the serving runtime.
+
+A seeded :class:`FaultInjector` is threaded through the server's
+allocator / prefill / decode / verify seams and fires faults at chosen
+decode ticks, so chaos tests can force the exact failure they want to
+study and assert recovery is EXACT (preempted-and-restored greedy
+streams bit-identical to the uninterrupted run, zero page leaks).
+
+Plan syntax — comma-separated entries, each ``kind[.seam]@when``::
+
+    oop@tick7              force pool exhaustion at decode tick 7
+                           (the server preempts a victim)
+    fail@tick3             transient step failure (TransientFault) at
+                           tick 3, retried by run_with_retries
+    fail.decode@tick3      same, but only at the decode seam
+    slow@tick5             inject latency at tick 5
+    fail@p0.05             probabilistic: fire with prob 0.05 per
+                           consult, from the injector's seeded rng
+
+Tick entries are single-shot: they fire once at the first matching
+consult and are then spent. Probability entries persist and draw from a
+``numpy`` Generator seeded at construction — the whole fault schedule is
+a pure function of (plan, seed, consult order), which is what makes
+chaos runs replayable.
+
+Seams: ``prefill`` / ``decode`` / ``verify`` step calls consult
+:meth:`on_step` (slow + fail kinds); the page-growth path consults
+:meth:`take("oop")`. Injected transient failures are safe to retry
+because every device step is a pure jitted function over an immutable
+cache pytree — re-running it cannot double-apply a write.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+_KINDS = ("oop", "fail", "slow")
+SEAMS = ("prefill", "decode", "verify")
+
+
+class TransientFault(RuntimeError):
+    """Injected transient step failure — retriable by design."""
+
+
+@dataclasses.dataclass
+class _Entry:
+    kind: str               # "oop" | "fail" | "slow"
+    seam: str | None        # None = any seam of that kind
+    tick: int               # -1 for probability entries
+    prob: float = 0.0
+    spent: bool = False
+
+    def spec(self) -> str:
+        where = self.kind if self.seam is None else f"{self.kind}.{self.seam}"
+        when = f"p{self.prob}" if self.tick < 0 else f"tick{self.tick}"
+        return f"{where}@{when}"
+
+
+def parse_plan(plan: str) -> list[_Entry]:
+    entries = []
+    for raw in plan.split(","):
+        raw = raw.strip()
+        if not raw:
+            continue
+        try:
+            where, when = raw.split("@", 1)
+            kind, _, seam = where.partition(".")
+            if kind not in _KINDS:
+                raise ValueError(f"unknown fault kind {kind!r}")
+            if seam and seam not in SEAMS:
+                raise ValueError(f"unknown seam {seam!r}")
+            if when.startswith("tick"):
+                entries.append(_Entry(kind, seam or None, int(when[4:])))
+            elif when.startswith("p"):
+                p = float(when[1:])
+                if not 0.0 <= p <= 1.0:
+                    raise ValueError(f"probability out of range: {p}")
+                entries.append(_Entry(kind, seam or None, -1, prob=p))
+            else:
+                raise ValueError(f"expected tickN or pF, got {when!r}")
+        except ValueError as e:
+            raise ValueError(f"bad fault plan entry {raw!r}: {e}") from None
+    return entries
+
+
+class FaultInjector:
+    """Seeded, plan-driven fault source. See module docstring for syntax."""
+
+    def __init__(self, plan: str = "", *, seed: int = 0,
+                 slow_s: float = 0.01):
+        self.entries = parse_plan(plan)
+        self.slow_s = slow_s
+        self.tick = -1          # set by the server before each decode round
+        self.fired: list[str] = []
+        self._rng = np.random.default_rng(seed)
+
+    def set_tick(self, tick: int) -> None:
+        self.tick = tick
+
+    def take(self, kind: str, seam: str | None = None) -> bool:
+        """Consume one matching fault for the current tick, if any."""
+        for e in self.entries:
+            if e.kind != kind or e.spent:
+                continue
+            if e.seam is not None and seam is not None and e.seam != seam:
+                continue
+            if e.tick >= 0:
+                if e.tick != self.tick:
+                    continue
+                e.spent = True
+            elif not (self._rng.random() < e.prob):
+                continue
+            self.fired.append(f"{e.spec()}:tick{self.tick}")
+            return True
+        return False
+
+    def on_step(self, seam: str) -> None:
+        """Fail/slow hook wrapped around one device step (see serve.py)."""
+        if self.take("slow", seam):
+            time.sleep(self.slow_s)
+        if self.take("fail", seam):
+            raise TransientFault(
+                f"injected {seam} failure at tick {self.tick}")
+
+    def summary(self) -> dict:
+        return {
+            "plan": [e.spec() for e in self.entries],
+            "fired": list(self.fired),
+            "pending": sum(1 for e in self.entries
+                           if e.tick >= 0 and not e.spent),
+        }

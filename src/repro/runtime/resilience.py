@@ -1,0 +1,142 @@
+"""Serving resilience: victim policy, replay restore, stall diagnostics,
+and spec-decode degradation tracking.
+
+The serving runtime (``launch/serve.py``) survives KV-pool pressure by
+PREEMPTING a victim request — releasing its pages and re-admitting it
+later by replaying prompt + emitted tokens through the ordinary prefill
+path — instead of dying with an unhandled ``OutOfPages``. The pieces that
+make that policy provable and debuggable live here, free of any server
+state so they unit-test in isolation.
+
+Deadlock-freedom argument (why on-demand page growth cannot wedge):
+
+* admission validates that ONE request's end-to-end page need fits the
+  whole pool, so a lone request can always finish;
+* the OLDEST live request (smallest admission ``seq_no``) is always
+  growth-exempt: :func:`pick_victim` never selects it, and when it needs pages
+  the scheduler may preempt every other live request and evict every
+  prefix-cache entry not retained by the oldest itself (entries it does
+  retain are, by prefix contiguity, backed by pages it already owns);
+* after that relief the pool holds only the oldest request's pages, and
+  its remaining need fits by the admission bound — so the oldest always
+  advances, retires, and promotes a new oldest. Forward progress is a
+  strictly decreasing chain, never a cycle.
+
+Victim order: lowest ``priority`` first, then youngest-by-emitted-tokens
+(least work lost to replay), then latest-admitted. Replay is exact for
+greedy streams: the replayed tokens re-enter through prefill (pinned
+bit-identical to decode by the serving tests), and the final emitted
+token is re-fed by the next decode step rather than re-sampled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Iterable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SlotDiag:
+    """One live slot's state at a stall, printable from the exception."""
+    slot: int
+    rid: int
+    seq_len: int        # tokens the prefill path feeds (prompt or replay)
+    fed: int            # tokens already prefilled
+    emitted: int
+    max_new: int
+    pages_held: int
+    pages_pending: int  # pages still needed to finish (pending reservation)
+
+    def describe(self) -> str:
+        return (f"slot {self.slot}: rid={self.rid} seq={self.fed}/"
+                f"{self.seq_len} emitted={self.emitted}/{self.max_new} "
+                f"pages={self.pages_held}+{self.pages_pending}pending")
+
+
+class SchedulerStall(RuntimeError):
+    """The scheduler made no progress while slots were live.
+
+    Replaces the old bare ``RuntimeError("scheduler stalled with live
+    slots")``: the message now carries every live slot's request id,
+    prefill/emit progress, pages held and pending reservation (plus the
+    pool's free-page count), so a stall is debuggable from the exception
+    text alone. Reachable by design with ``--page-growth
+    --no-preemption`` when the pool exhausts and nothing can retire."""
+
+    def __init__(self, slots: list[SlotDiag], free_pages: int | None = None):
+        self.slots = slots
+        self.free_pages = free_pages
+        pool = "" if free_pages is None else f" ({free_pages} pages free)"
+        super().__init__(
+            "scheduler stalled with live slots" + pool + ": "
+            + "; ".join(d.describe() for d in slots)
+        )
+
+
+def pick_victim(live: Iterable[tuple[int, object]], exempt_seq: int):
+    """Choose the preemption victim among ``(slot, request)`` pairs.
+
+    The request with ``seq_no == exempt_seq`` (the oldest live — the
+    growth-exempt anchor of the deadlock-freedom argument above) is never
+    picked. Order: lowest ``priority`` first, then fewest emitted tokens
+    (youngest — cheapest replay), then latest-admitted. Returns the
+    ``(slot, request)`` pair or ``None`` when only the exempt remains."""
+    pool = [(i, r) for i, r in live if r.seq_no != exempt_seq]
+    if not pool:
+        return None
+    return min(pool, key=lambda ir: (ir[1].priority, len(ir[1].out),
+                                     -ir[1].seq_no))
+
+
+def replay_sequence(prompt: np.ndarray, out: list[int]) -> np.ndarray:
+    """Token sequence that restores a preempted request exactly.
+
+    Prompt plus all emitted tokens EXCEPT the last: re-prefilling it
+    rebuilds the cache to the pre-preemption fill length (positions,
+    masks and recurrent state all recomputed by the ordinary prefill
+    contract), and the final emitted token is then re-fed by the next
+    decode step — no token is ever sampled twice, so greedy streams are
+    bit-identical and sampled streams consume no extra rng draws."""
+    if not out:
+        return np.asarray(prompt, np.int32)
+    return np.concatenate([np.asarray(prompt, np.int32),
+                           np.asarray(out[:-1], np.int32)])
+
+
+class AcceptanceWindow:
+    """Trailing drafted-token acceptance record driving spec fallback.
+
+    Records one 0/1 outcome per drafted token. Once the window is full
+    and the acceptance rate sits below ``floor``, :meth:`degraded`
+    reports True and the server decodes that request plainly for the
+    round instead of paying draft forwards that verification keeps
+    rejecting. Each degraded round :meth:`age`\\ s the oldest sample out,
+    so the window eventually under-fills and drafting re-probes — the
+    fallback is bounded, not a permanent switch-off."""
+
+    def __init__(self, floor: float, window: int):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.floor = floor
+        self.window = window
+        self._hist: deque[int] = deque(maxlen=window)
+
+    def record(self, drafted: int, accepted: int) -> None:
+        for j in range(drafted):
+            self._hist.append(1 if j < accepted else 0)
+
+    def degraded(self) -> bool:
+        if self.floor <= 0.0 or len(self._hist) < self.window:
+            return False
+        return sum(self._hist) / len(self._hist) < self.floor
+
+    def age(self) -> None:
+        """One degraded round passed: forget the oldest outcome."""
+        if self._hist:
+            self._hist.popleft()
+
+    @property
+    def rate(self) -> float:
+        return sum(self._hist) / max(len(self._hist), 1)

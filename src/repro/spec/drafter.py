@@ -149,6 +149,7 @@ class Drafter:
         drawn from — the ``q`` the rejection sampler needs. Greedy mode
         drafts the draft-model argmax and returns no distributions."""
         greedy = sampling["temperature"] <= 0.0
+        self._drain_backlog(jobs)
         tokens = np.zeros((self.slots, self.width), np.int32)
         lengths = np.zeros((self.slots,), np.int32)
         self._round = {}
@@ -203,6 +204,43 @@ class Drafter:
             step += 1
         qarr = {s: np.stack(v) for s, v in qdists.items()}
         return drafts, qarr
+
+    def _drain_backlog(self, jobs: list[tuple[int, np.ndarray, int]]) -> None:
+        """Pre-feed committed tokens when a slot's catch-up backlog
+        exceeds the chunk width.
+
+        Degraded rounds (spec fallback under pool pressure or a low
+        acceptance window) emit tokens WITHOUT consulting the drafter, so
+        ``committed - valid`` can grow far beyond ``width`` by the time
+        drafting resumes. Those tokens are permanently committed — they
+        are drained through extra catch-up chunks (the same jitted
+        function, so no recompile) whose logits are discarded, advancing
+        the watermark until one ordinary chunk of 1..width remains."""
+        while True:
+            pend = {s: len(c) - int(self.valid[s]) for s, c, _ in jobs}
+            for s, p in pend.items():
+                if p < 1:
+                    raise AssertionError(
+                        f"draft slot {s} watermark beyond committed ({p})")
+            if all(p <= self.width for p in pend.values()):
+                return
+            tokens = np.zeros((self.slots, self.width), np.int32)
+            lengths = np.zeros((self.slots,), np.int32)
+            for slot, committed, _ in jobs:
+                p = pend[slot]
+                if p <= self.width:
+                    continue
+                w = min(self.width, p - self.width)  # leave 1..width behind
+                start = int(self.valid[slot])
+                tokens[slot, :w] = committed[start:start + w]
+                lengths[slot] = w
+                self.valid[slot] = start + w
+            self._sync_table()
+            _, self.cache = self._chunk(
+                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                self.cache,
+            )
+            self.forwards += 1
 
     def _pick(self, slot, row, greedy, sampling, rngs, qdists) -> int:
         """One draft token from ``row``: the device-argmaxed token id in

@@ -47,6 +47,9 @@ class SpecStats:
     target_forwards: int = 0    # verify + recompute forwards (target model)
     recompute_forwards: int = 0  # recurrent-state rebuilds after rejection
     draft_forwards: int = 0     # drafter forwards (catch-up + decode steps)
+    degraded_rounds: int = 0    # per-request rounds decoded plainly instead
+    #                             of drafting (pool pressure or acceptance
+    #                             below the configured floor)
 
     def summary(self) -> dict:
         fwd = max(self.target_forwards, 1)
@@ -55,6 +58,7 @@ class SpecStats:
             "rounds": self.rounds,
             "drafted": self.drafted,
             "accepted": self.accepted,
+            "degraded_rounds": self.degraded_rounds,
             "acceptance_rate": self.accepted / max(self.drafted, 1),
             "emitted": self.emitted,
             "target_forwards": self.target_forwards,

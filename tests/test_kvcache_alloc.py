@@ -14,6 +14,12 @@ EVERY operation:
 * NO DOUBLE WRITER: a page an owner is about to write has refcount 1 —
   ``cow`` either confirms exclusivity or trades the claim for a fresh
   private copy, never mutating other owners' views,
+* on-demand GROWTH (an owner extending its page list mid-life, the
+  serve path's ``_ensure_rows``) hands out only fresh pages, and a
+  preemption-style release reports exactly how many pages actually
+  returned to the pool (shared pages only lose a reference),
+* ``audit()`` — the structural self-check the serving runtime runs after
+  every preemption — passes after EVERY operation,
 * releasing every owner returns the pool to zero pages in use.
 """
 import numpy as np
@@ -51,9 +57,10 @@ def _random_walk(seed: int, num_pages: int, ops: int):
         assert alloc.shared == sum(1 for c in counts.values() if c > 1)
         assert alloc.stats()["shared"] == alloc.shared
         assert 0.0 <= alloc.fragmentation() <= 1.0
+        alloc.audit()  # structural check: free list vs refcount ledger
 
     for _ in range(ops):
-        op = rng.integers(0, 5)
+        op = rng.integers(0, 7)
         if op == 0:  # alloc
             n = int(rng.integers(0, max(num_pages // 2, 1)) )
             if alloc.can_alloc(n):
@@ -68,7 +75,11 @@ def _random_walk(seed: int, num_pages: int, ops: int):
                     alloc.alloc(n)
         elif op == 1 and owners:  # free one owner
             idx = int(rng.integers(0, len(owners)))
-            alloc.free(owners.pop(idx))
+            pages = owners.pop(idx)
+            # free() reports how many pages actually returned to the pool:
+            # exactly those this owner held exclusively
+            expect = sum(1 for p in pages if alloc.refcount(p) == 1)
+            assert alloc.free(pages) == expect
         elif op == 2 and owners:  # retain: add a sharing owner
             idx = int(rng.integers(0, len(owners)))
             shared = list(owners[idx])
@@ -111,9 +122,29 @@ def _random_walk(seed: int, num_pages: int, ops: int):
                 assert alloc.refcount(p) == expect, (p, expect)
             if not owners[idx]:
                 owners.pop(idx)
+        elif op == 5 and owners:  # on-demand growth (serve _ensure_rows)
+            idx = int(rng.integers(0, len(owners)))
+            n = int(rng.integers(1, 3))
+            if alloc.can_alloc(n):
+                grown = alloc.alloc(n)
+                flat = {p for o in owners for p in o}
+                assert not (set(grown) & flat), "growth reused a live page"
+                owners[idx] = owners[idx] + grown
+        elif op == 6 and owners:  # preemption: victim releases everything
+            idx = int(rng.integers(0, len(owners)))
+            pages = owners.pop(idx)
+            before_free = alloc.free_pages
+            returned = alloc.free(pages)
+            # the pool gains exactly what free() reports — the victim's
+            # exclusive pages; shared ones survive under other owners
+            assert alloc.free_pages == before_free + returned
+            assert returned == sum(
+                1 for p in pages
+                if not any(p in o for o in owners)
+            )
         check()
     while owners:
-        alloc.free(owners.pop())
+        assert alloc.free(owners.pop()) >= 0
         check()
     assert alloc.in_use == 0, "pages leaked"
     assert alloc.free_pages == num_pages

@@ -1,0 +1,452 @@
+"""Serving under pressure: the resilience contract.
+
+The robustness tentpole adds on-demand page growth, victim preemption
+with replay-restore, graceful spec-decode degradation, and a
+deterministic fault-injection harness. What these tests pin:
+
+* CHAOS EXACTNESS: with ``oop`` faults injected at every decode tick of
+  a mixed plain+speculative workload, every preempted-and-restored
+  greedy stream is BIT-IDENTICAL to the uninterrupted run, and both the
+  target and draft pools return to zero pages in use — for attention
+  (llama) and hybrid recurrent (zamba2) families,
+* page growth admits strictly more concurrency than full reservation on
+  the same pool, and the extra concurrency is paid for with preemptions,
+  never with wrong tokens or leaks,
+* the victim policy (priority, then fewest-emitted, then
+  latest-admitted; oldest live always exempt) and the replay sequence
+  (prompt + out[:-1]) are unit-pinned,
+* ``run_with_retries`` never retries ``OutOfPages`` (real pool
+  exhaustion must surface to the preemption path, not burn retries),
+* exhausting a growth pool with preemption disabled raises a
+  diagnostic ``SchedulerStall`` naming every live slot's progress and
+  page holdings — not a bare RuntimeError,
+* acceptance below ``spec_floor`` degrades rounds to plain decode and
+  later re-probes (the drafter's backlog drain makes resumed drafting
+  exact), with unchanged output,
+* SIGTERM (via PreemptionGuard) and ``max_wall_s`` drain the server:
+  partial streams retire with ``status="preempted"`` and nothing leaks.
+"""
+import dataclasses
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kvcache.allocator import OutOfPages, PageAllocator
+from repro.launch.serve import BatchedServer, Request
+from repro.models import build_model
+from repro.runtime.fault import PreemptionGuard, run_with_retries
+from repro.runtime.faultinject import FaultInjector, TransientFault
+from repro.runtime.resilience import (
+    AcceptanceWindow,
+    SchedulerStall,
+    pick_victim,
+    replay_sequence,
+)
+
+
+def _tiny_model(arch="llama32-1b", n_layers=2, seed=0):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, gens, seed0=100, priorities=None):
+    if isinstance(gens, int):
+        gens = [gens] * len(lens)
+    return [
+        Request(i, np.random.default_rng(seed0 + i).integers(
+            0, cfg.vocab_size, ln, dtype=np.int32), g,
+            priority=(priorities[i] if priorities else 0))
+        for i, (ln, g) in enumerate(zip(lens, gens))
+    ]
+
+
+def _serve(model, params, reqs, **kw):
+    server = BatchedServer(model, params, **kw)
+    stats = server.run(reqs)
+    stats["_events"] = server.events
+    return {r.rid: r.out for r in reqs}, stats
+
+
+# ---------------------------------------------------------------------------
+# Unit pins: victim policy, replay sequence, acceptance window, injector
+# ---------------------------------------------------------------------------
+
+
+def _req(rid, *, priority=0, emitted=0, seq_no=0):
+    r = Request(rid, np.zeros(4, np.int32), 8, priority=priority)
+    r.out = list(range(emitted))
+    r.seq_no = seq_no
+    return r
+
+
+def test_pick_victim_policy():
+    """Lowest priority first, then fewest emitted (cheapest replay),
+    then latest admitted; the exempt seq_no is never picked."""
+    live = [(0, _req(0, priority=1, emitted=0, seq_no=0)),
+            (1, _req(1, priority=0, emitted=9, seq_no=1)),
+            (2, _req(2, priority=0, emitted=2, seq_no=2))]
+    assert pick_victim(live, exempt_seq=0)[1].rid == 2  # prio 0, fewest out
+    # tie on priority and emitted -> latest admitted loses
+    live = [(0, _req(0, emitted=3, seq_no=0)),
+            (1, _req(1, emitted=3, seq_no=1)),
+            (2, _req(2, emitted=3, seq_no=2))]
+    assert pick_victim(live, exempt_seq=0)[1].rid == 2
+    # the oldest (exempt) is untouchable even when it sorts first
+    live = [(0, _req(0, priority=-5, seq_no=0))]
+    assert pick_victim(live, exempt_seq=0) is None
+
+
+def test_replay_sequence():
+    prompt = np.arange(5, dtype=np.int32)
+    assert np.array_equal(replay_sequence(prompt, []), prompt)
+    seq = replay_sequence(prompt, [10, 11, 12])
+    # all emitted tokens except the last: the final one is re-fed by the
+    # next decode step, never re-sampled
+    assert seq.tolist() == [0, 1, 2, 3, 4, 10, 11]
+    assert seq.dtype == np.int32
+
+
+def test_acceptance_window():
+    w = AcceptanceWindow(floor=0.5, window=4)
+    assert not w.degraded()          # under-filled windows never degrade
+    w.record(drafted=2, accepted=2)  # two hits
+    assert not w.degraded() and w.rate == 1.0
+    w.record(drafted=2, accepted=0)  # two misses -> rate 0.5, not < floor
+    assert not w.degraded()
+    w.record(drafted=2, accepted=0)  # slides to [0, 0, 0, 0]
+    assert w.degraded() and w.rate == 0.0
+    w.age()                          # degraded rounds age the window out
+    assert not w.degraded()          # under-filled again: drafting re-probes
+    with pytest.raises(ValueError):
+        AcceptanceWindow(0.5, 0)
+
+
+def test_fault_plan_parse_and_determinism():
+    inj = FaultInjector("oop@tick2, fail.decode@tick0, slow@tick1", seed=7)
+    inj.set_tick(0)
+    assert not inj.take("oop")
+    assert not inj.take("fail", "prefill")   # seam-scoped: decode only
+    assert inj.take("fail", "decode")
+    assert not inj.take("fail", "decode")    # tick entries are single-shot
+    inj.set_tick(2)
+    assert inj.take("oop") and not inj.take("oop")
+    assert inj.summary()["pending"] == 1     # slow@tick1 was skipped over
+    # probabilistic entries replay exactly under the same seed
+    fires = []
+    for seed in (3, 3, 4):
+        inj = FaultInjector("fail@p0.5", seed=seed)
+        inj.set_tick(0)
+        fires.append([inj.take("fail") for _ in range(32)])
+    assert fires[0] == fires[1]
+    assert fires[0] != fires[2]
+    assert any(fires[0]) and not all(fires[0])
+    for bad in ("oom@tick1", "fail@p1.5", "fail@soon", "fail.draft@tick1"):
+        with pytest.raises(ValueError):
+            FaultInjector(bad)
+
+
+def test_injector_on_step_raises_transient():
+    inj = FaultInjector("fail@tick3", slow_s=0.0)
+    inj.set_tick(3)
+    with pytest.raises(TransientFault):
+        inj.on_step("decode")
+    inj.on_step("decode")  # spent: no-op afterwards
+
+
+def test_run_with_retries_excludes_out_of_pages():
+    """Pool exhaustion is NOT transient: retrying it burns the retry
+    budget without freeing a page. It must surface immediately to the
+    caller (the serve path answers it with preemption instead)."""
+    calls = []
+
+    def exhausted():
+        calls.append(1)
+        raise OutOfPages("need 2 pages, 0 free")
+
+    with pytest.raises(OutOfPages):
+        run_with_retries(exhausted, max_retries=3, base_delay_s=0.0)
+    assert len(calls) == 1  # never retried, even though it IS a RuntimeError
+
+    # injected transient faults DO retry (they subclass RuntimeError)
+    flaky = iter([TransientFault("boom"), "ok"])
+
+    def step():
+        v = next(flaky)
+        if isinstance(v, Exception):
+            raise v
+        return v
+
+    assert run_with_retries(step, max_retries=2, base_delay_s=0.0) == "ok"
+
+    # the exclusion list is overridable
+    with pytest.raises(ValueError):
+        run_with_retries(lambda: (_ for _ in ()).throw(ValueError("x")),
+                         max_retries=2, base_delay_s=0.0,
+                         retriable=(Exception,), non_retriable=(ValueError,))
+
+
+def test_allocator_audit_catches_corruption():
+    alloc = PageAllocator(4)
+    pages = alloc.alloc(2)
+    alloc.audit()  # healthy
+    alloc._free.append(pages[0])  # corrupt: page both live and free
+    with pytest.raises(AssertionError):
+        alloc.audit()
+
+
+# ---------------------------------------------------------------------------
+# Growth admits more concurrency than full reservation (same pool)
+# ---------------------------------------------------------------------------
+
+
+def test_growth_admits_more_concurrency():
+    """The tentpole's economic claim: reserving prompt-only pages and
+    growing per decode tick admits strictly more concurrent requests
+    than reserving the full high-water mark — on the SAME pool — and the
+    pressure is absorbed by preemption + exact replay, not wrong
+    tokens."""
+    cfg, model, params = _tiny_model()
+    kw = dict(batch_slots=4, max_len=16, paged=True, page_size=8,
+              num_pages=6)
+    lens, gen = [8, 8, 8, 8], 8
+    full, fstats = _serve(model, params, _requests(cfg, lens, gen), **kw)
+    grow, gstats = _serve(model, params, _requests(cfg, lens, gen),
+                          page_growth=True, **kw)
+    assert grow == full, (grow, full)
+    f, g = fstats["resilience"], gstats["resilience"]
+    # full reservation: 2 pages/request -> only 3 of 4 slots admit on a
+    # 6-page pool; growth: 1 page/request -> all 4 run at once
+    assert f["peak_concurrency"] == 3, f
+    assert g["peak_concurrency"] == 4, g
+    assert f["preemptions"] == 0, f
+    assert g["preemptions"] > 0 and g["replays"] > 0, g  # growth's price
+    assert g["replay_tokens"] > 0, g
+    assert any(e.startswith("preempt:") for e in gstats["_events"])
+    assert any(e.startswith("replay:") for e in gstats["_events"])
+    for stats in (fstats, gstats):
+        assert stats["pages"]["leaked"] == 0, stats["pages"]
+
+
+def test_priority_steers_victim_choice():
+    """A low-priority request is preempted before a younger neutral
+    one."""
+    cfg, model, params = _tiny_model()
+    kw = dict(batch_slots=3, max_len=16, paged=True, page_size=8,
+              num_pages=4, page_growth=True)
+    lens, gen = [8, 8, 8], 6
+    reqs = _requests(cfg, lens, gen, priorities=[0, -1, 0])
+    base, _ = _serve(model, params, _requests(cfg, lens, gen), batch_slots=3,
+                     max_len=16, paged=True, page_size=8, num_pages=6)
+    out, stats = _serve(model, params, reqs, **kw)
+    assert out == base
+    assert stats["resilience"]["preemptions"] > 0
+    victim = next(r for r in reqs if r.rid == 1)
+    assert victim.preemptions > 0  # the low-priority request paid
+    assert stats["pages"]["leaked"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos: injected pool exhaustion at every tick, streams must not move
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,n_layers,ticks", [
+    ("llama32-1b", 2, (0, 1, 2, 3)),
+    ("zamba2-1.2b", 4, (0, 1, 2)),
+])
+def test_chaos_oop_streams_bit_identical(arch, n_layers, ticks):
+    """The headline robustness pin: a mixed plain+speculative greedy
+    workload with an ``oop`` fault injected at each decode tick in turn.
+    Every run must emit streams bit-identical to the uninterrupted
+    baseline, preempt at least once per effective injection, and drain
+    both pools to zero — attention AND hybrid recurrent caches."""
+    cfg, model, params = _tiny_model(arch, n_layers=n_layers)
+    bad_draft = model.init(jax.random.PRNGKey(99))  # rollback-heavy
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=8, page_growth=True, speculate=2,
+              draft_params=bad_draft)
+    lens, gens = [6, 9, 5], [8, 2, 8]  # gen 2 rides plainly (no drafting)
+    base, bstats = _serve(model, params, _requests(cfg, lens, gens), **kw)
+    assert bstats["resilience"]["preemptions"] == 0, (
+        "baseline must be pressure-free so preemptions are injected only",
+        bstats["resilience"])
+    total_preempts = 0
+    for tick in ticks:
+        out, stats = _serve(model, params, _requests(cfg, lens, gens),
+                            inject=f"oop@tick{tick}", **kw)
+        res = stats["resilience"]
+        assert out == base, (arch, tick, out, base)
+        if res["injected"]["fired"]:
+            assert res["preemptions"] >= 1, (tick, res)
+            assert res["replays"] >= 1, (tick, res)
+            total_preempts += res["preemptions"]
+        assert stats["pages"]["leaked"] == 0, (tick, stats["pages"])
+        assert stats["spec"]["draft_pages_leaked"] == 0, (tick, stats["spec"])
+    assert total_preempts >= 3, total_preempts
+
+
+def test_transient_faults_retry_exactly():
+    """Injected step failures and latency are absorbed by
+    ``run_with_retries`` around the pure jitted steps: streams are
+    unchanged and no preemption is needed."""
+    cfg, model, params = _tiny_model()
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=24)
+    lens, gen = [6, 9], 6
+    base, _ = _serve(model, params, _requests(cfg, lens, gen), **kw)
+    out, stats = _serve(model, params, _requests(cfg, lens, gen),
+                        inject="fail@tick1,slow@tick0,fail.prefill@tick0",
+                        **kw)
+    assert out == base
+    res = stats["resilience"]
+    assert res["injected"]["fired"], res  # the faults really fired
+    assert res["preemptions"] == 0, res
+    assert stats["pages"]["leaked"] == 0
+
+
+def test_chaos_composes_with_prefix_cache():
+    """Preempting a request that retains shared prefix pages must not
+    free them out from under the index (use-after-free): the per-
+    preemption ``prefix.audit()`` guards it, streams stay exact, and
+    dropping the cache at the end returns the pool to zero."""
+    cfg, model, params = _tiny_model()
+    rng = np.random.default_rng(17)
+    common = rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+    prompts = [np.concatenate(
+        [common, rng.integers(0, cfg.vocab_size, t, dtype=np.int32)]
+    ) for t in (3, 5)]
+    gen = 6
+
+    def reqs():
+        return [Request(i, p.copy(), gen) for i, p in enumerate(prompts)]
+
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=24, prefix_cache=True, page_growth=True)
+    server = BatchedServer(model, params, **kw)
+    server.run(reqs())  # warm the index
+    warm = reqs()
+    server.run(warm)
+    base = {r.rid: r.out for r in warm}
+
+    chaos = BatchedServer(model, params, **kw)
+    chaos.run(reqs())  # warm this server's index fault-free
+    chaos.inject = FaultInjector("oop@tick1", seed=0)  # arm the hot run only
+    hot = reqs()
+    stats = chaos.run(hot)
+    assert {r.rid: r.out for r in hot} == base
+    assert chaos.prefix.hits >= 1
+    assert stats["resilience"]["preemptions"] >= 1, stats["resilience"]
+    assert stats["pages"]["leaked"] == 0, stats["pages"]
+    chaos.drop_prefix_cache()
+    assert chaos.alloc.in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Stall diagnostics
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_stall_is_diagnostic():
+    """Growth with preemption disabled on an exhausted pool must raise a
+    SchedulerStall that names every live slot's request, progress and
+    page holdings — the debuggable replacement for the old bare
+    RuntimeError."""
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=2, max_len=16,
+                           paged=True, page_size=4, num_pages=4,
+                           page_growth=True, preemption=False)
+    with pytest.raises(SchedulerStall) as ei:
+        server.run(_requests(cfg, [4, 4], 8))
+    e = ei.value
+    assert len(e.slots) == 2
+    assert e.free_pages == 0
+    for d in e.slots:
+        assert d.pages_held == 2 and d.pages_pending > 0, d
+        assert f"rid={d.rid}" in str(e)
+    assert "pages free" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# Spec-decode degradation under a bad acceptance window
+# ---------------------------------------------------------------------------
+
+
+def test_spec_floor_degrades_and_recovers():
+    """An adversarial drafter pushes trailing acceptance below the
+    floor: the server stops paying draft forwards for those rounds
+    (``degraded_rounds``), keeps emitting the exact greedy stream, and
+    re-probes once the window ages out — which forces the drafter's
+    catch-up backlog drain and pins ITS exactness too."""
+    cfg, model, params = _tiny_model()
+    bad_draft = model.init(jax.random.PRNGKey(99))
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=24, speculate=2, draft_params=bad_draft)
+    lens, gen = [6, 9], 12
+    base, bstats = _serve(model, params, _requests(cfg, lens, gen), **kw)
+    out, stats = _serve(model, params, _requests(cfg, lens, gen),
+                        spec_floor=0.9, spec_window=4, **kw)
+    assert out == base, (out, base)
+    sp = stats["spec"]
+    assert sp["degraded_rounds"] >= 2, sp
+    # drafting resumed after degradation: more tokens drafted than one
+    # window's worth, so the re-probe (and the backlog drain) really ran
+    assert sp["drafted"] > 4, sp
+    assert sp["degraded_rounds"] > bstats["spec"]["degraded_rounds"], (
+        sp, bstats["spec"])
+    assert stats["pages"]["leaked"] == 0
+    assert sp["draft_pages_leaked"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Graceful drain: SIGTERM and wall-clock
+# ---------------------------------------------------------------------------
+
+
+def test_sigterm_drains_with_partial_streams():
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=2, max_len=32,
+                           paged=True, page_size=4, num_pages=24,
+                           guard=PreemptionGuard().install())
+    reqs = _requests(cfg, [6, 9], 8)
+    seen = []
+
+    def on_token(r, tok):
+        seen.append((r.rid, tok))
+        if len(seen) == 3:
+            os.kill(os.getpid(), signal.SIGTERM)  # real signal, real guard
+
+    try:
+        stats = server.run(reqs, on_token=on_token)
+    finally:
+        server.guard.uninstall()
+    res = stats["resilience"]
+    assert res["drained"], res
+    assert res["preempted_requests"] == 2, res
+    assert all(r.status == "preempted" and 0 < len(r.out) < 8 for r in reqs)
+    # every token the caller saw IS the partial stream, in order
+    for r in reqs:
+        assert [t for rid, t in seen if rid == r.rid] == r.out
+    assert "drain" in server.events
+    assert stats["pages"]["leaked"] == 0
+    assert server.alloc.in_use == 0
+
+
+def test_max_wall_clock_drains_before_admission():
+    cfg, model, params = _tiny_model()
+    server = BatchedServer(model, params, batch_slots=2, max_len=32,
+                           paged=True, page_size=4, num_pages=24,
+                           max_wall_s=1e-9)
+    reqs = _requests(cfg, [6, 9], 8)
+    stats = server.run(reqs)
+    res = stats["resilience"]
+    assert res["drained"] and stats["requests"] == 0, (res, stats)
+    assert res["unserved"] == 2, res
+    assert all(r.status == "preempted" and r.out == [] for r in reqs)
+    assert server.alloc.in_use == 0
