@@ -44,7 +44,7 @@ def _time(f, *args, iters=5):
 def _serve_stats(engine: str, gen: int = 4,
                  prompt_lens: tuple[int, ...] = (8, 8),
                  shared_prefix: int = 0, speculate: int = 0,
-                 batch_slots: int = 2, **server_kw) -> dict:
+                 batch_slots: int = 2, mesh_shape=None, **server_kw) -> dict:
     """Tiny end-to-end serve run per engine path (reduced llama, CPU).
 
     ``server_kw`` forwards to BatchedServer — e.g. ``paged=True,
@@ -79,11 +79,15 @@ def _serve_stats(engine: str, gen: int = 4,
             params = qm.as_executable(group=True)
     common = np.random.default_rng(99).integers(
         0, cfg.vocab_size, shared_prefix, dtype=np.int32)
+    mesh = None
+    if mesh_shape is not None:
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh(mesh_shape, ("data", "model"))
     with ops.count_launches() as launches:
         server = BatchedServer(
             model, params, batch_slots=batch_slots,
             max_len=shared_prefix + max(prompt_lens) + gen + 8,
-            speculate=speculate, draft_params=draft_params,
+            speculate=speculate, draft_params=draft_params, mesh=mesh,
             **server_kw)
         reqs = [
             Request(i, np.concatenate([common, np.random.default_rng(i)
@@ -252,6 +256,37 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("serve/pressure_pages_leaked",
                  float(full["pages"]["leaked"] + grow["pages"]["leaked"]),
                  "both pools after pressure serving"))
+
+    # mesh-sharded serving: 2 DP replicas split the admission queue and the
+    # page pool into replica-local ranges, 2-way exact TP shards every
+    # packed matmul's output dim. Bit-identity to the single-device streams
+    # is pinned by tests/test_sharded_serving.py; the record here is the
+    # per-replica KV memory bill and the compile discipline on the mesh path
+    if jax.device_count() >= 4:
+        sharded = _serve_stats("packed", gen=8,
+                               prompt_lens=(12, 12, 12, 12), batch_slots=4,
+                               shared_prefix=16, paged=True, page_size=8,
+                               prefix_cache=True, mesh_shape=(2, 2))
+        serve["shard_2x2_packed"] = sharded
+        rows.append(("serve/shard_tok_per_s", sharded["tok_per_s"],
+                     f"{sharded['tokens']} tokens on a 2x2 (data x model) "
+                     "mesh, paged KV + prefix cache"))
+        rows.append(("serve/shard_decode_compiles",
+                     float(sharded["decode_compiles"]),
+                     "sharded decode must also compile exactly once"))
+        for r, kv in enumerate(
+                sharded["mesh"]["kv_reserved_bytes_per_replica"]):
+            rows.append((f"serve/shard_kv_reserved_bytes_replica{r}",
+                         float(kv),
+                         "peak KV pages reserved by this DP replica's "
+                         "range of the pool (device-local bytes)"))
+        rows.append(("serve/shard_pages_leaked",
+                     float(sharded["pages"]["leaked"]),
+                     "pool state after sharded serving"))
+    else:
+        rows.append(("serve/shard_skipped", 1.0,
+                     "mesh rows need >= 4 devices (set XLA_FLAGS="
+                     "--xla_force_host_platform_device_count=8)"))
 
     # quantized-storage bytes/token: packed (6 bit/wt) vs 3-plane (12 bit/wt)
     from repro.configs import get_config

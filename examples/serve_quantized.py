@@ -17,11 +17,25 @@ drafts 4 tokens per request and the fp target verifies them in one
 batched forward — greedy output is bit-identical to plain decoding, with
 fewer target forwards than emitted tokens.
 
-    PYTHONPATH=src python examples/serve_quantized.py
+The fourth run serves MESH-SHARDED: a ``--mesh DxM`` (data x model)
+device mesh splits the batch slots and the KV page pool into D
+replica-local ranges (the per-device page-pool stats print per replica)
+while M-way exact tensor parallelism shards every packed matmul's output
+dim — greedy streams stay bit-identical to the single-device path. Pass
+``--mesh 2x2`` (with XLA_FLAGS=--xla_force_host_platform_device_count=8
+on a CPU host) to see real data-parallel splitting; the default 1x1 mesh
+exercises the same sharded code path on one device.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--mesh DxM]
 """
+import sys
+
 from repro.launch.serve import main
 
 if __name__ == "__main__":
+    mesh = "1x1"
+    if "--mesh" in sys.argv:
+        mesh = sys.argv[sys.argv.index("--mesh") + 1]
     rc = main([
         "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
         "--batch", "4", "--prompt-lens", "4,16,23,9", "--gen", "8",
@@ -45,5 +59,14 @@ if __name__ == "__main__":
         "--batch", "2", "--prompt-lens", "6,14", "--gen", "10",
         "--paged", "--page-size", "8", "--num-pages", "16",
         "--speculate", "4", "--draft-engine", "packed",
+    ])
+    # mesh-sharded serving: D data replicas split the admission queue and
+    # the page pool (per-replica stats print after the run), M-way exact
+    # TP shards the packed matmuls; greedy streams match single-device
+    rc = rc or main([
+        "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
+        "--batch", "4", "--prompt-len", "12", "--gen", "8",
+        "--paged", "--page-size", "8", "--shared-prefix", "16",
+        "--prefix-cache", "--speculate", "3", "--mesh", mesh,
     ])
     raise SystemExit(rc)

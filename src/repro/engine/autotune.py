@@ -7,10 +7,16 @@ Two layers, cheapest first:
    big bk to amortize grid overhead; bn capped by a VMEM budget for the
    fp32 accumulator + unpacked weight tile).
 2. **Measured cache**: an optional JSON file (``SPLITQ_TUNE_CACHE`` env var
-   or an explicit path) mapping ``"MxKxN@bits"`` -> ``[bm, bn, bk]``.
+   or an explicit path) mapping ``"MxKxN@bits/dS"`` -> ``[bm, bn, bk]``.
    ``autotune()`` times the candidate blocks for a concrete call and records
    the winner, so serving picks measured shapes on the next run — levanter-
    style config plumbing: the cache is plain data, reviewable and shippable.
+
+Keys carry the tensor-parallel shard count (``/dS``): a TP shard runs the
+*per-shard* matmul (N/S output columns per device), and a block tuned for
+the full weight is the wrong answer for the shard. M/K/N in the key are the
+per-shard shape; entries in the old global-shape format (no ``/dS`` suffix)
+are stale by construction and dropped at load time.
 
 All outputs satisfy the kernel contracts: bm % 8 == 0 (fp32 sublane; 16 for
 bf16 activations), bn % 128 == 0 (lane), bk % 128 == 0, and for grouped
@@ -23,6 +29,7 @@ import dataclasses
 import json
 import os
 import pathlib
+import re
 import time
 from typing import Callable, Iterable
 
@@ -100,10 +107,17 @@ def candidate_blocks(
 # ---------------------------------------------------------------------------
 
 
-def cache_key(m: int, k: int, n: int, bits: int, bf16_acts: bool = False) -> str:
+def cache_key(m: int, k: int, n: int, bits: int, bf16_acts: bool = False,
+              n_shards: int = 1) -> str:
     # activation dtype changes both the sublane constraint and the measured
-    # winner, so bf16 entries get their own namespace
-    return f"{m}x{k}x{n}@{bits}" + ("+bf16" if bf16_acts else "")
+    # winner, so bf16 entries get their own namespace; n_shards is the TP
+    # degree the (m, k, n) PER-SHARD shape was tuned under — a shard must
+    # never reuse a block tuned for the global weight (and vice versa)
+    return (f"{m}x{k}x{n}@{bits}" + ("+bf16" if bf16_acts else "")
+            + f"/d{n_shards}")
+
+
+_KEY_RE = re.compile(r"^\d+x\d+x\d+@\d+(\+bf16)?/d\d+$")
 
 
 def _valid_block_entry(v) -> bool:
@@ -125,21 +139,27 @@ class TuneCache:
                 raw = json.loads(self.path.read_text())
                 # validate per entry at LOAD time: a hand-edited 2-element
                 # (or non-int) entry must degrade to the heuristic here,
-                # not raise inside choose_block on the serving hot path
+                # not raise inside choose_block on the serving hot path.
+                # Keys missing the /dS shard suffix are schema-1 entries
+                # tuned on GLOBAL shapes — stale for any sharded run and
+                # ambiguous for unsharded ones, so they are dropped too.
                 self.table = {k: tuple(v)
                               for k, v in raw.get("blocks", raw).items()
-                              if _valid_block_entry(v)}
+                              if _valid_block_entry(v)
+                              and isinstance(k, str) and _KEY_RE.match(k)}
             except (json.JSONDecodeError, OSError, AttributeError, TypeError):
                 # corrupt/truncated cache must not take down the hot path —
                 # heuristics cover every shape
                 self.table = {}
 
-    def get(self, m: int, k: int, n: int, bits: int, bf16_acts: bool = False):
-        return self.table.get(cache_key(m, k, n, bits, bf16_acts))
+    def get(self, m: int, k: int, n: int, bits: int, bf16_acts: bool = False,
+            n_shards: int = 1):
+        return self.table.get(cache_key(m, k, n, bits, bf16_acts, n_shards))
 
     def put(self, m: int, k: int, n: int, bits: int,
-            block: tuple[int, int, int], bf16_acts: bool = False):
-        self.table[cache_key(m, k, n, bits, bf16_acts)] = tuple(block)
+            block: tuple[int, int, int], bf16_acts: bool = False,
+            n_shards: int = 1):
+        self.table[cache_key(m, k, n, bits, bf16_acts, n_shards)] = tuple(block)
 
     def save(self, path: str | os.PathLike | None = None):
         p = pathlib.Path(path) if path else self.path
@@ -147,7 +167,7 @@ class TuneCache:
             raise ValueError("no cache path configured")
         p.parent.mkdir(parents=True, exist_ok=True)
         p.write_text(json.dumps(
-            {"schema": 1, "blocks": {k: list(v) for k, v in
+            {"schema": 2, "blocks": {k: list(v) for k, v in
                                      sorted(self.table.items())}},
             indent=2,
         ))
@@ -170,10 +190,13 @@ def reset_cache():
 
 def choose_block(
     m: int, k: int, n: int, bits: int, *, max_bn: int | None = None,
-    bf16_acts: bool = False,
+    bf16_acts: bool = False, n_shards: int = 1,
 ) -> tuple[int, int, int]:
-    """Dispatch: measured cache hit if valid for this call, else heuristic."""
-    hit = get_cache().get(m, k, n, bits, bf16_acts)
+    """Dispatch: measured cache hit if valid for this call, else heuristic.
+
+    ``(m, k, n)`` is the PER-SHARD shape when ``n_shards > 1`` — callers
+    running under tensor parallelism divide their output width first."""
+    hit = get_cache().get(m, k, n, bits, bf16_acts, n_shards)
     if hit is not None and _valid_block_entry(hit):
         bm, bn, bk = hit
         sublane = 16 if bf16_acts else 8
@@ -193,6 +216,7 @@ def autotune(
     m: int, k: int, n: int, bits: int,
     *, candidates: Iterable[tuple[int, int, int]] | None = None,
     iters: int = 3, max_bn: int | None = None, bf16_acts: bool = False,
+    n_shards: int = 1,
 ) -> tuple[tuple[int, int, int], dict[str, float]]:
     """Time ``run(block)`` over the candidate set; record the winner.
 
@@ -226,7 +250,7 @@ def autotune(
         # tuning outcome — don't record an untimed "winner" silently.
         raise RuntimeError(
             f"autotune: all {len(cands)} candidate blocks failed for "
-            f"{cache_key(m, k, n, bits, bf16_acts)}"
+            f"{cache_key(m, k, n, bits, bf16_acts, n_shards)}"
         ) from last_err
-    get_cache().put(m, k, n, bits, best, bf16_acts)
+    get_cache().put(m, k, n, bits, best, bf16_acts, n_shards)
     return best, timings

@@ -8,6 +8,14 @@ The grouped helpers understand the fused-projection containers
 (``wqkv`` / ``w_gateup``) that ``as_executable(group=True)`` installs, so
 decode runs 3-launch attention (qkv, out) + 2-launch MLP instead of 7
 separate quantized matmuls per transformer block.
+
+Under exact-TP serving hints (``sharding_hints(mesh, exact_tp=True)``)
+every qdot wraps its input and output in an ``act_constraint("matmul_io")``:
+activations replicate over ``model`` while the weight (dense or packed
+planes) stays output-dim-sharded, so the only collective GSPMD can insert
+is a value-exact all-gather of the product — never a partial-sum
+all-reduce — keeping greedy streams bit-identical to the unsharded path.
+Outside the hints context the constraints are no-ops.
 """
 from __future__ import annotations
 
@@ -17,24 +25,30 @@ import jax.numpy as jnp
 from repro.core.quantize import QTensor
 from repro.core.split import PackedSplitQGroup, PackedSplitQTensor, SplitQTensor
 from repro.kernels import ops
+from repro.runtime.sharding import act_constraint
 
 
 def qdot(x: jax.Array, w) -> jax.Array:
     """x @ Ŵ for a dense array or any quantized container."""
+    x = act_constraint(x, "matmul_io")
     if isinstance(w, PackedSplitQTensor):
-        return ops.splitq_packed_matmul(x, w)
-    if isinstance(w, SplitQTensor):
-        return ops.splitq_matmul(x, w)
-    if isinstance(w, QTensor):
-        return ops.quant_matmul(x, w.packed, w.qp.scale, w.qp.zero, w.qp.bits)
-    if isinstance(w, PackedSplitQGroup):
+        y = ops.splitq_packed_matmul(x, w)
+    elif isinstance(w, SplitQTensor):
+        y = ops.splitq_matmul(x, w)
+    elif isinstance(w, QTensor):
+        y = ops.quant_matmul(x, w.packed, w.qp.scale, w.qp.zero, w.qp.bits)
+    elif isinstance(w, PackedSplitQGroup):
         raise TypeError("grouped weights need qdot_group / the *_proj helpers")
-    return x @ w
+    else:
+        y = x @ w
+    return act_constraint(y, "matmul_io")
 
 
 def qdot_group(x: jax.Array, grp: PackedSplitQGroup) -> list[jax.Array]:
     """One fused kernel launch; per-member outputs."""
-    return ops.splitq_packed_group_matmul(x, grp)
+    x = act_constraint(x, "matmul_io")
+    return [act_constraint(y, "matmul_io")
+            for y in ops.splitq_packed_group_matmul(x, grp)]
 
 
 # ---------------------------------------------------------------------------

@@ -59,8 +59,18 @@ def _interpret() -> bool:
 
 def _choose(m, k, n, bits, *, max_bn=None, bf16=False):
     from repro.engine.autotune import choose_block
+    from repro.runtime.sharding import tp_shards
 
-    return choose_block(m, k, n, bits, max_bn=max_bn, bf16_acts=bf16)
+    # Under exact-TP serving hints the weight's output dim is sharded over
+    # `model`: each device runs the PER-SHARD matmul, so the block (and the
+    # tune-cache key) must come from n/tp, not the global width.
+    tp = tp_shards()
+    if tp > 1 and n % tp == 0:
+        n, shards = n // tp, tp
+    else:
+        shards = 1
+    return choose_block(m, k, n, bits, max_bn=max_bn, bf16_acts=bf16,
+                        n_shards=shards)
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:

@@ -7,7 +7,7 @@ prefix-sharing cache (full prompt pages -> shared read-only pages). The
 Pallas paged-attention decode kernel lives with the other kernels in
 ``repro.kernels.paged_attention``.
 """
-from repro.kvcache.allocator import OutOfPages, PageAllocator
+from repro.kvcache.allocator import OutOfPages, PageAllocator, PagePoolGroup
 from repro.kvcache.paged import (
     copy_page,
     logical_view,
@@ -21,6 +21,7 @@ from repro.kvcache.prefix import PrefixIndex
 __all__ = [
     "OutOfPages",
     "PageAllocator",
+    "PagePoolGroup",
     "PrefixIndex",
     "copy_page",
     "logical_view",

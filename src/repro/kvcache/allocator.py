@@ -36,11 +36,18 @@ class OutOfPages(RuntimeError):
 
 
 class PageAllocator:
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, base: int = 0):
+        """``base`` offsets every page id by a constant: replica ``r`` of a
+        data-parallel group owns global ids ``[r*n, (r+1)*n)`` of one shared
+        pool array, so page-table entries written by different replicas
+        never collide while each replica's accounting stays host-local."""
         if num_pages <= 0:
             raise ValueError(f"num_pages must be positive, got {num_pages}")
+        if base < 0:
+            raise ValueError(f"base must be non-negative, got {base}")
         self.num_pages = num_pages
-        self._free: list[int] = list(range(num_pages - 1, -1, -1))
+        self.base = base
+        self._free: list[int] = list(range(base + num_pages - 1, base - 1, -1))
         self._refs: dict[int, int] = {}
         self.peak_in_use = 0
         self.cow_copies = 0
@@ -153,13 +160,14 @@ class PageAllocator:
         and ``free + in_use == total`` holds exactly."""
         if len(set(self._free)) != len(self._free):
             raise AssertionError("free list contains duplicates")
+        lo, hi = self.base, self.base + self.num_pages
         for p in self._free:
-            if not 0 <= p < self.num_pages:
+            if not lo <= p < hi:
                 raise AssertionError(f"free page {p} out of range")
             if p in self._refs:
                 raise AssertionError(f"page {p} is both free and live")
         for p, ref in self._refs.items():
-            if not 0 <= p < self.num_pages:
+            if not lo <= p < hi:
                 raise AssertionError(f"live page {p} out of range")
             if ref < 1:
                 raise AssertionError(f"live page {p} has refcount {ref}")
@@ -200,3 +208,120 @@ class PageAllocator:
             "cow_copies": self.cow_copies,
             "fragmentation": round(self.fragmentation(), 4),
         }
+
+
+class PagePoolGroup:
+    """Per-replica page pools over ONE device pool array.
+
+    Data-parallel serving splits the physical pool into ``n_replicas``
+    contiguous id ranges, one :class:`PageAllocator` each (replica ``r``
+    owns global ids ``[r*n, (r+1)*n)``) — when the pool's PAGE dim is
+    batch-sharded over the ``data`` mesh axis, a replica's pages, and all
+    its COW/copy/rewind traffic, live on that replica's devices. Accounting
+    stays host-side and replica-local; this object only routes.
+
+    Allocation requests carry a ``replica``; id-taking operations (free /
+    retain / cow / truncate / refcount) route by the page id itself.
+    Aggregate queries (``in_use`` / ``stats()`` / ``audit()``) span all
+    replicas, so single-pool callers and tests keep working unchanged for
+    ``n_replicas == 1``."""
+
+    def __init__(self, num_pages: int, n_replicas: int = 1):
+        if n_replicas <= 0:
+            raise ValueError(f"n_replicas must be positive, got {n_replicas}")
+        if num_pages % n_replicas:
+            raise ValueError(
+                f"num_pages ({num_pages}) must divide evenly over "
+                f"{n_replicas} replicas")
+        self.num_pages = num_pages
+        self.n_replicas = n_replicas
+        self.per_replica = num_pages // n_replicas
+        self.pools = [PageAllocator(self.per_replica, base=r * self.per_replica)
+                      for r in range(n_replicas)]
+
+    # -- routing ------------------------------------------------------------
+
+    def replica_of(self, page: int) -> int:
+        if not 0 <= page < self.num_pages:
+            raise KeyError(f"page {page} out of range")
+        return page // self.per_replica
+
+    def pool(self, replica: int) -> PageAllocator:
+        return self.pools[replica]
+
+    def _by_replica(self, pages: Iterable[int]):
+        buckets: dict[int, list[int]] = {}
+        for p in pages:
+            buckets.setdefault(self.replica_of(p), []).append(p)
+        return buckets
+
+    # -- queries ------------------------------------------------------------
+
+    @property
+    def free_pages(self) -> int:
+        return sum(a.free_pages for a in self.pools)
+
+    @property
+    def in_use(self) -> int:
+        return sum(a.in_use for a in self.pools)
+
+    @property
+    def shared(self) -> int:
+        return sum(a.shared for a in self.pools)
+
+    @property
+    def peak_in_use(self) -> int:
+        return sum(a.peak_in_use for a in self.pools)
+
+    def can_alloc(self, n: int, replica: int = 0) -> bool:
+        return self.pools[replica].can_alloc(n)
+
+    def refcount(self, page: int) -> int:
+        return self.pools[self.replica_of(page)].refcount(page)
+
+    # -- mutation -----------------------------------------------------------
+
+    def alloc(self, n: int, replica: int = 0) -> list[int]:
+        return self.pools[replica].alloc(n)
+
+    def retain(self, pages: Iterable[int]) -> None:
+        for r, ps in self._by_replica(pages).items():
+            self.pools[r].retain(ps)
+
+    def cow(self, page: int) -> tuple[int, bool]:
+        return self.pools[self.replica_of(page)].cow(page)
+
+    def truncate(self, pages: list[int], keep: int) -> list[int]:
+        # order-preserving: tail pages drop one ref in their own replica
+        pages = list(pages)
+        self.free(pages[keep:])
+        return pages[:keep]
+
+    def free(self, pages: Iterable[int]) -> int:
+        return sum(self.pools[r].free(ps)
+                   for r, ps in self._by_replica(pages).items())
+
+    def audit(self) -> None:
+        for a in self.pools:
+            a.audit()
+
+    def fragmentation(self) -> float:
+        if not self.free_pages:
+            return 0.0
+        return sum(a.fragmentation() * a.free_pages
+                   for a in self.pools) / self.free_pages
+
+    def stats(self) -> dict:
+        out = {
+            "total": self.num_pages,
+            "free": self.free_pages,
+            "in_use": self.in_use,
+            "peak_in_use": self.peak_in_use,
+            "shared": self.shared,
+            "peak_shared": sum(a.peak_shared for a in self.pools),
+            "cow_copies": sum(a.cow_copies for a in self.pools),
+            "fragmentation": round(self.fragmentation(), 4),
+        }
+        if self.n_replicas > 1:
+            out["per_replica"] = [a.stats() for a in self.pools]
+        return out

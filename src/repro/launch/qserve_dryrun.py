@@ -1,19 +1,20 @@
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
-"""Quantized-decode dry-run (Cell C of §Perf): lower serve_step with
-SplitQuantV2 INT4 weights stored PACKED in the graph (int8 code/cid planes
-as params), dequantized inside the ``fused_kernel`` scope right before each
-matmul — modeling kernels/splitq_packed.py (dequant in VMEM). Weight HBM
-traffic per decode step drops from bf16 (16 bit/wt) to 6 bit/wt.
+"""Quantized-decode dry-run (Cell C of §Perf): lower the REAL packed
+engine path — ``model.decode_step`` over an ``as_executable()`` tree of
+``PackedSplitQTensor``/``PackedSplitQGroup`` containers — on the production
+mesh, under the same exact-TP serve shardings ``BatchedServer --mesh``
+executes with (``runtime.sharding.serve_param_specs`` +
+``sharding_hints(exact_tp=True)``).
 
-The quantized tree is built through the SAME engine path production serving
-uses (``restructure(...).as_executable()``, abstract via eval_shape), and
-the record now carries the engine's autotuned block dispatch + grouped
-launch accounting so the dry-run mirrors the real packed execution plan.
-The lowered decode step uses the serving cache contract: per-slot
-``cache["len"]: (B,)`` with per-row KV write offsets — the same HLO shape
-continuous batching runs, so the modeled bytes/step match production.
+Nothing here is modeled: the lowered HLO contains the engine's in-graph
+dequant + matmul exactly as serving runs it (codes/cids planes sharded on
+the output dim, per-shard (S, Z) LUT reads replicated), the cache follows
+the serving contract (per-slot ``len: (B,)``, slot dim batch-sharded over
+``data``), and the per-shard autotuned block dispatch is the one
+``tp_shards()`` keys inside the trace. Weight HBM traffic per decode step
+drops from bf16 (16 bit/wt) to 6 bit/wt.
 
     PYTHONPATH=src python -m repro.launch.qserve_dryrun --arch internlm2-20b
 """
@@ -30,7 +31,6 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     import jax
-    import jax.numpy as jnp
 
     from repro.configs import SHAPES, get_config
     from repro.core.apply import restructure
@@ -43,70 +43,45 @@ def main(argv=None):
     from repro.roofline import hlocost
     from repro.runtime import sharding as shd
     from repro.runtime import steps
-    from jax.sharding import NamedSharding, PartitionSpec as P
 
     cfg = get_config(args.arch)
     shape = SHAPES[args.shape]
     model = build_model(cfg)
     mesh = make_production_mesh()
-    steps._configure(mesh)
+    n_data, n_model = shd.mesh_dims(mesh)
     policy = QuantPolicy(bits=4, packed=True)
 
     aparams = steps.abstract_params(model)
-    # Abstract executable tree via the production engine path (ungrouped so
-    # the modeled materialization keeps the per-projection param layout).
+    # Abstract executable tree via the production engine path — grouped
+    # fused QKV / gate+up launches, exactly what the server jits.
     qparams_abs = jax.eval_shape(
-        lambda p: restructure(p, policy).as_executable(group=False), aparams
+        lambda p: restructure(p, policy).as_executable(group=True), aparams
     )
 
-    def materialize(qparams):
-        def deq(leaf):
-            w = (jax.vmap(lambda t: t.dequantize())(leaf)
-                 if leaf.codes.ndim >= 3 else leaf.dequantize())
-            return w.astype(jnp.bfloat16)
-
-        return jax.tree_util.tree_map(
-            lambda l: deq(l) if hasattr(l, "dequantize") else l,
-            qparams, is_leaf=lambda x: hasattr(x, "dequantize"),
-        )
-
-    def serve_step(qparams, batch, cache):
-        with shd.sharding_hints(mesh):
-            from repro.models.attention import _flash_scope
-
-            with _flash_scope():
-                params = materialize(qparams)
-            return model.decode_step(params, batch["tokens"], cache)
+    def serve_step(qparams, tokens, cache):
+        # hints entered INSIDE the traced body (trace-time capture), same
+        # as BatchedServer's decode closure: exact-TP act_constraints plus
+        # per-shard autotune keys via tp_shards()
+        with shd.sharding_hints(mesh, exact_tp=True):
+            return model.decode_step(qparams, tokens, cache)
 
     abatch = model.input_specs(shape)
     acache = model.cache_specs(shape)
-    cspecs = shd.cache_specs_tree(acache, long_context=False,
-                                  axes=shd.dp_axes(mesh),
-                                  n_dp=mesh.shape["data"], decode=True)
-    bspecs = shd.batch_specs(abatch, mesh.shape["data"], shd.dp_axes(mesh))
-
-    # simple spec: shard every packed plane on its largest divisible dim
-    def pack_spec(leaf):
-        parts = [None] * leaf.ndim
-        best, size = None, 0
-        for i, s in enumerate(leaf.shape):
-            if s % 16 == 0 and s > size:
-                best, size = i, s
-        if best is not None:
-            parts[best] = "model"
-        return P(*parts)
-
-    qpspecs = jax.tree.map(pack_spec, qparams_abs)
-    ns = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t,
-                                is_leaf=lambda x: isinstance(x, P))
+    qpspecs = shd.serve_param_specs(qparams_abs, mesh)
+    cspecs = shd.serve_cache_specs(acache, mesh)
+    bspecs = shd.batch_specs(abatch, n_data, shd.dp_axes(mesh))
+    ns = lambda t: jax.tree.map(
+        lambda s: jax.NamedSharding(mesh, s), t,
+        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec),
+    )
 
     with mesh, flash_fusion(True):
         fn = jax.jit(
             serve_step,
-            in_shardings=(ns(qpspecs), ns(bspecs), ns(cspecs)),
+            in_shardings=(ns(qpspecs), ns(bspecs["tokens"]), ns(cspecs)),
             donate_argnums=(2,),
         )
-        lowered = fn.lower(qparams_abs, abatch, acache)
+        lowered = fn.lower(qparams_abs, abatch["tokens"], acache)
         compiled = lowered.compile()
 
     lac = hlocost.analyze(compiled.as_text())
@@ -114,13 +89,10 @@ def main(argv=None):
                                      pod_stride=1 << 30)
     n_params = roof.count_params(aparams)
 
-    # Engine execution plan for this decode shape: grouped launches and the
-    # autotuned block dispatch for each distinct quantized matmul, computed
-    # on PER-DEVICE shapes (batch sharded over `data`, projection N over
-    # `model`) — these are the shapes the kernel actually sees, suitable
-    # for seeding SPLITQ_TUNE_CACHE.
-    n_data = mesh.shape["data"]
-    n_model = mesh.shape["model"]
+    # The engine execution plan this lowering dispatched: block choices for
+    # each distinct quantized matmul at its PER-SHARD shape (batch over
+    # `data`, projection N over `model`) — the same division tp_shards()
+    # applies inside the trace, suitable for seeding SPLITQ_TUNE_CACHE.
     m_dec = max(1, shape.global_batch // n_data)  # decode: 1 token/sequence
     h, kv, hd, d, ff = (cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.d_model,
                         cfg.d_ff)
@@ -135,9 +107,12 @@ def main(argv=None):
         for name, (k_, n_) in proj_shapes.items()
     }
     rec = {
-        "arch": args.arch, "shape": args.shape, "mesh": "16x16",
+        "arch": args.arch, "shape": args.shape,
+        "mesh": f"{n_data}x{n_model}",
         "variant": "splitquantv2-int4-packed-decode",
         "status": "ok",
+        "lowered": "engine-path decode_step (packed executables, "
+                   "exact-TP serve shardings)",
         "cache_contract": "per-slot len (B,), per-row KV write offsets",
         "n_params": n_params,
         "t_compute_s": lac.flops / roof.PEAK_FLOPS,
@@ -146,8 +121,8 @@ def main(argv=None):
                            + coll.wire_bytes_dcn / roof.DCN_BW),
         "bytes_min": lac.bytes_min,
         "coll_by_kind": coll.by_kind,
-        "weight_bytes_bf16_per_dev": n_params * 2 / 16,
-        "weight_bytes_packed_per_dev": n_params * 6 / 8 / 16,
+        "weight_bytes_bf16_per_dev": n_params * 2 / n_model,
+        "weight_bytes_packed_per_dev": n_params * 6 / 8 / n_model,
         "engine_blocks": engine_blocks,
         "quant_launches_per_block": {"grouped": 4, "ungrouped": 7},
     }

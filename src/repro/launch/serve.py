@@ -92,8 +92,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import PageAllocator, PrefixIndex, copy_page, pages_for
+from repro.kvcache import PagePoolGroup, PrefixIndex, copy_page, pages_for
 from repro.models.model import _RECURRENT_KEYS, reset_slots
+from repro.runtime import sharding as shd
 from repro.runtime.fault import PreemptionGuard, run_with_retries
 from repro.runtime.faultinject import FaultInjector
 from repro.runtime.resilience import (AcceptanceWindow, SchedulerStall,
@@ -209,7 +210,7 @@ class BatchedServer:
                  spec_window: int = 16,
                  inject: "FaultInjector | str | None" = None,
                  guard: PreemptionGuard | None = None,
-                 max_wall_s: float = 0.0):
+                 max_wall_s: float = 0.0, mesh=None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -263,15 +264,42 @@ class BatchedServer:
                 "LM families (enc-dec / VLM verify_step is a follow-on)"
             )
 
+        # -- mesh plan (GSPMD serving) ---------------------------------------
+        # One MeshPlan binds this server run to one (data, model) mesh: DP
+        # replica groups split the batch slots (and, in paged mode, the page
+        # pool) while TP shards every matmul's output dim under the exact-TP
+        # contract (bit-identical greedy streams — see runtime.sharding).
+        self._plan = shd.MeshPlan(mesh) if mesh is not None else None
+        if self._plan is not None:
+            n_rep = self._plan.n_data
+            if batch_slots % n_rep:
+                raise ValueError(
+                    f"batch_slots ({batch_slots}) must divide over the "
+                    f"mesh's {n_rep} data replicas")
+            self.params, self._param_shd = self._plan.put_params(params)
+            params = self.params
+        else:
+            n_rep = 1
+            self._param_shd = None
+        self.n_replicas = n_rep
+        self._slots_per_rep = batch_slots // n_rep
+
         if paged:
             self.page_size = page_size
             pages_per_row = pages_for(max_len, page_size)
             self.num_pages = num_pages or batch_slots * pages_per_row
+            if self.num_pages % n_rep:
+                raise ValueError(
+                    f"num_pages ({self.num_pages}) must divide over the "
+                    f"mesh's {n_rep} data replicas")
             self.cache = model.init_paged_cache(
                 batch_slots, max_len, page_size=page_size,
                 num_pages=self.num_pages,
             )
-            self.alloc = PageAllocator(self.num_pages)
+            # replica r owns global page ids [r*n, (r+1)*n): with the pool's
+            # PAGE dim batch-sharded over `data`, a replica's pages — and all
+            # its COW / copy_page / rewind traffic — stay on its own devices
+            self.alloc = PagePoolGroup(self.num_pages, n_rep)
             self._table = np.zeros((batch_slots, pages_per_row), np.int32)
             self._table_dirty = False  # host table diverged from device copy
             pool_bytes = sum(
@@ -279,11 +307,15 @@ class BatchedServer:
                 if k in ("pages", "shared_pages")
             )
             self._page_bytes = pool_bytes // self.num_pages
-            self.prefix = (
-                PrefixIndex(page_size, self.alloc,
-                            state_budget=prefix_state_budget)
+            # one prefix index per DP replica, each bound to its own pool —
+            # a replica's prefix hits retain pages its own devices hold
+            self.prefixes = (
+                [PrefixIndex(page_size, self.alloc.pools[r],
+                             state_budget=prefix_state_budget)
+                 for r in range(n_rep)]
                 if prefix_cache else None
             )
+            self.prefix = self.prefixes[0] if prefix_cache else None
             # recurrent leaves are part of a prefix (KV pages alone are
             # not): their boundary states ride the index as snapshots
             self._recurrent = [k for k in _RECURRENT_KEYS if k in self.cache]
@@ -291,6 +323,7 @@ class BatchedServer:
         else:
             self.alloc = None
             self.prefix = None
+            self.prefixes = None
             self._recurrent = []
             self._snap_boundaries = False
             self.cache = model.init_cache(batch_slots, max_len)
@@ -301,30 +334,64 @@ class BatchedServer:
             # contiguous strips reserve max_len rows per slot up front
             self._kv_row_bytes = kv_bytes // batch_slots
 
+        # canonical cache shardings: committed at init, pinned as every
+        # jit's cache OUT sharding, and re-committed by _sync_table after
+        # host-side cache edits — jitted-call input shardings stay
+        # byte-stable so decode compiles exactly once
+        if self._plan is not None:
+            self._cache_shd = self._plan.cache_shardings(self.cache)
+            self.cache = self._plan.put_cache(self.cache, self._cache_shd)
+        else:
+            self._cache_shd = None
+
         self.speculate = speculate
         if speculate:
             self.drafter = Drafter(
                 model, draft_params, batch_slots, max_len,
                 page_size=page_size, width=speculate + 1,
-                num_pages=draft_num_pages,
+                num_pages=draft_num_pages, plan=self._plan,
             )
-            self.verifier = Verifier(model, params, self._recurrent)
+            self.verifier = Verifier(model, params, self._recurrent,
+                                     plan=self._plan,
+                                     cache_shd=self._cache_shd)
             self.spec = SpecStats(k=speculate)
         else:
             self.drafter = None
             self.verifier = None
             self.spec = None
 
-        self._decode = jax.jit(model.decode_step)
+        plan = self._plan
+        if plan is None:
+            self._decode = jax.jit(model.decode_step)
+        else:
+            # the hints context is entered INSIDE the traced body: the
+            # exact-TP act_constraints (and the per-shard autotune keys via
+            # tp_shards) are captured at trace time, like steps.py
+            def _decode_fn(params, tokens, cache, active):
+                with plan.hints():
+                    return model.decode_step(params, tokens, cache,
+                                             active=active)
+
+            self._decode = jax.jit(_decode_fn,
+                                   out_shardings=(None, self._cache_shd))
 
         def _prefill_fn(params, tokens, lengths, fresh, starts, cache):
             # fresh rows restart at ``starts`` (0, or past a shared prefix)
             cache = reset_slots(cache, fresh, starts)
+            if plan is not None:
+                with plan.hints():
+                    return model.prefill(
+                        params, {"tokens": tokens, "lengths": lengths}, cache
+                    )
             return model.prefill(
                 params, {"tokens": tokens, "lengths": lengths}, cache
             )
 
-        self._prefill = jax.jit(_prefill_fn)
+        if plan is None:
+            self._prefill = jax.jit(_prefill_fn)
+        else:
+            self._prefill = jax.jit(_prefill_fn,
+                                    out_shardings=(None, self._cache_shd))
 
     # -- sampling / streaming -----------------------------------------------
 
@@ -352,13 +419,36 @@ class BatchedServer:
 
     # -- slot management ----------------------------------------------------
 
+    def _rep(self, i: int) -> int:
+        """DP replica owning batch slot ``i`` (0 on a single-replica run):
+        the cache's slot dim is batch-sharded over ``data``, so contiguous
+        slot blocks live on contiguous replica device groups."""
+        return i // self._slots_per_rep
+
+    def _prefix_of(self, i: int) -> PrefixIndex | None:
+        """Slot ``i``'s replica-local prefix index (None when disabled)."""
+        return self.prefixes[self._rep(i)] if self.prefixes else None
+
+    def _put(self, arr):
+        """Host batch array -> device; slot-leading arrays shard over the
+        data axes under a mesh plan so jitted input shardings never vary."""
+        if self._plan is None:
+            return jnp.asarray(arr)
+        return self._plan.put_batch(arr)
+
     def _sync_table(self):
         """Re-upload the page table only when admission/retirement changed
         it — steady-state decode keeps the device copy (it rides through
-        every jitted call unchanged in the cache pytree)."""
+        every jitted call unchanged in the cache pytree). Under a mesh plan
+        the whole cache is re-committed to its canonical shardings: host
+        edits (COW page copies, snapshot installs, rewinds) leave eager
+        result shardings behind, and device_put on an already-canonical
+        leaf is a no-op."""
         if self.paged and self._table_dirty:
             self.cache["page_table"] = jnp.asarray(self._table)
             self._table_dirty = False
+        if self._plan is not None:
+            self.cache = self._plan.put_cache(self.cache, self._cache_shd)
 
     def _seq(self, r: Request) -> np.ndarray:
         """The token sequence the prefill path feeds for ``r``: its prompt,
@@ -415,48 +505,59 @@ class BatchedServer:
             n += 1
         return n
 
-    def _select_candidates(self, pending: list[Request],
-                           n_free: int) -> list[Request]:
-        """Pick up to ``n_free`` pending requests to admit, DEFERRING any
-        whose prompt shares more full pages with a not-yet-indexed request
-        (already active, or chosen earlier for this same wave) than the
-        prefix index can currently serve: admitting it now would prefill
-        the common prefix twice, because the index only learns a prompt
-        once it is fully prefilled. Serializing just those requests turns
-        same-wave duplicates into ordinary cache hits one wave later — the
-        deferral resolves as soon as the overlapping request finishes
-        prefilling (it is driven by the same run loop), so no deadlock."""
-        if self.prefix is None:
-            return pending[:n_free]
-        unindexed = [r for r in self.active
-                     if r is not None and not r.indexed]
-        cands: list[Request] = []
+    def _select_for_slots(self, pending: list[Request],
+                          free: list[int]) -> list[tuple[int, Request]]:
+        """Pair free slots (in index order) with pending requests (in queue
+        order), DEFERRING any request whose prompt shares more full pages
+        with a not-yet-indexed request on its TARGET REPLICA (already
+        active there, or chosen earlier this wave for it) than that
+        replica's prefix index can currently serve: admitting it now would
+        prefill the common prefix twice, because an index only learns a
+        prompt once it is fully prefilled. Serializing just those requests
+        turns same-wave duplicates into ordinary cache hits one wave later
+        — the deferral resolves as soon as the overlapping request
+        finishes prefilling (it is driven by the same run loop), so no
+        deadlock. Prefix indexes are replica-local, so only same-replica
+        duplicates defer; on a single replica this reduces exactly to the
+        old single-index selection."""
+        if self.prefixes is None:
+            return list(zip(free, pending))
+        by_rep: dict[int, list[int]] = {}
+        for i in free:
+            by_rep.setdefault(self._rep(i), []).append(i)
+        # nothing mid-prefill to duplicate against: admit without probing —
+        # the steady blocked-on-pool retry path (every active already
+        # indexed) never re-hashes prompts
+        unindexed: dict[int, list[Request]] = {r: [] for r in by_rep}
+        for i, r in enumerate(self.active):
+            if r is not None and not r.indexed and self._rep(i) in by_rep:
+                unindexed[self._rep(i)].append(r)
+        out: list[tuple[int, Request]] = []
         for req in pending:
-            if len(cands) == n_free:
+            if not by_rep:
                 break
-            others = unindexed + cands
-            if not others:
-                # nothing mid-prefill to duplicate against: admit without
-                # probing — the steady blocked-on-pool retry path (every
-                # active already indexed) never re-hashes prompts
-                cands.append(req)
-                continue
-            overlap = max(
-                self._common_prefix_pages(self._seq(req), self._seq(o))
-                for o in others
-            )
-            if overlap == 0:
-                cands.append(req)
-                continue
-            matched, _, _ = self.prefix.match(
-                self._seq(req), need_state=bool(self._recurrent),
-                record=False
-            )
-            if overlap * self.page_size > matched:
-                self.prefix_deferrals += 1
-                continue
-            cands.append(req)
-        return cands
+            rep = min(by_rep, key=lambda r: by_rep[r][0])
+            slot = by_rep[rep][0]
+            others = unindexed[rep]
+            if others:
+                overlap = max(
+                    self._common_prefix_pages(self._seq(req), self._seq(o))
+                    for o in others
+                )
+                if overlap:
+                    matched, _, _ = self.prefixes[rep].match(
+                        self._seq(req), need_state=bool(self._recurrent),
+                        record=False
+                    )
+                    if overlap * self.page_size > matched:
+                        self.prefix_deferrals += 1
+                        continue
+            out.append((slot, req))
+            unindexed[rep].append(req)
+            by_rep[rep].pop(0)
+            if not by_rep[rep]:
+                del by_rep[rep]
+        return out
 
     def _fill_slots(self, pending: list[Request]) -> int:
         """Admit waiting requests into free slots, then run one prefill
@@ -466,12 +567,12 @@ class BatchedServer:
         free = [i for i in range(self.slots) if self.active[i] is None]
         if not free or not pending:
             return 0
-        cands = self._select_candidates(pending, len(free))
-        if not cands:
+        picked = self._select_for_slots(pending, free)
+        if not picked:
             return 0
         # validate BEFORE mutating active/pending: a rejected request must
         # not strand its wave-mates admitted-but-never-prefilled
-        for r in cands:
+        for _, r in picked:
             if r.rid < 0:
                 # the per-request sampling stream seeds from (seed, rid):
                 # SeedSequence rejects negatives, and failing AFTER pages
@@ -496,14 +597,16 @@ class BatchedServer:
                     f"{r.max_new} needs {need} cache rows > "
                     f"max_len={self.max_len}"
                 )
-            if self.paged and pages_for(need, self.page_size) > self.num_pages:
+            if (self.paged
+                    and pages_for(need, self.page_size)
+                    > self.alloc.per_replica):
                 raise ValueError(
                     f"request {r.rid}: needs "
-                    f"{pages_for(need, self.page_size)} pages > pool size "
-                    f"{self.num_pages}"
+                    f"{pages_for(need, self.page_size)} pages > per-replica "
+                    f"pool size {self.alloc.per_replica}"
                 )
         admitted = 0
-        for i, req in zip(free, cands):
+        for i, req in picked:
             if self.paged:
                 if not self._admit_paged(i, req):
                     break  # budget exhausted: the rest wait for retirements
@@ -563,6 +666,8 @@ class BatchedServer:
         per decode tick via :meth:`_ensure_rows` — so the same pool
         admits more concurrent requests than full reservation."""
         seq = self._seq(req)
+        rep = self._rep(i)
+        prefix = self._prefix_of(i)
         np_need = pages_for(self._need_rows(req), self.page_size)
         if self.page_growth:
             goal = max(
@@ -574,11 +679,11 @@ class BatchedServer:
         else:
             goal = np_need
         shared_tok, shared_pages, state = 0, [], None
-        if self.prefix is not None:
+        if prefix is not None:
             # dry-run probe: stats count and LRU move only when admission
             # actually commits (this path retries every scheduler step
             # while blocked on the pool)
-            shared_tok, shared_pages, state = self.prefix.match(
+            shared_tok, shared_pages, state = prefix.match(
                 seq, need_state=bool(self._recurrent), record=False
             )
         m = len(shared_pages)
@@ -589,14 +694,14 @@ class BatchedServer:
             # retain BEFORE any eviction: matched pages must stay live even
             # if eviction drops their index entries
             self.alloc.retain(shared_pages)
-        if not self.alloc.can_alloc(fresh_needed):
-            if self.prefix is None or not self.prefix.evict_for(fresh_needed):
+        if not self.alloc.can_alloc(fresh_needed, rep):
+            if prefix is None or not prefix.evict_for(fresh_needed):
                 if m:
                     self.alloc.free(shared_pages)  # undo; retry after retire
                 return False
-        tail = self.alloc.alloc(goal - m)
-        if self.prefix is not None:
-            self.prefix.record(seq, shared_tok)  # admission commits
+        tail = self.alloc.alloc(goal - m, rep)
+        if prefix is not None:
+            prefix.record(seq, shared_tok)  # admission commits
         req.pages = shared_pages + tail
         req.start_len = shared_tok - (1 if rollback else 0)
         req.fed = req.start_len
@@ -638,7 +743,7 @@ class BatchedServer:
         page still shared gets copy-on-written before the wave runs. After
         admission this never fires (the boundary COW already ran) — it is
         the structural guarantee, not a hot path."""
-        if self.prefix is None or n <= 0:
+        if self.prefixes is None or n <= 0:
             return
         for lp in range(start // self.page_size,
                         (start + n - 1) // self.page_size + 1):
@@ -654,16 +759,17 @@ class BatchedServer:
             jnp.int32(start_len)
         )
 
-    def _index_prompt(self, req: Request) -> None:
-        """Register a fully prefilled prompt's full pages in the prefix
-        index (with any recurrent boundary snapshots captured en route).
-        A replayed sequence indexes like a prompt — its full pages are as
-        reusable (and a future replay of the same request hits them)."""
-        if self.prefix is None or req.indexed:
+    def _index_prompt(self, i: int, req: Request) -> None:
+        """Register a fully prefilled prompt's full pages in slot ``i``'s
+        replica-local prefix index (with any recurrent boundary snapshots
+        captured en route). A replayed sequence indexes like a prompt —
+        its full pages are as reusable (and a future replay of the same
+        request hits them)."""
+        prefix = self._prefix_of(i)
+        if prefix is None or req.indexed:
             return
         req.indexed = True
-        self.prefix.insert(self._seq(req), req.pages,
-                           states=req.snaps or None)
+        prefix.insert(self._seq(req), req.pages, states=req.snaps or None)
         req.snaps = {}
 
     def _retire(self, i: int, req: Request, done: list[Request]):
@@ -705,15 +811,19 @@ class BatchedServer:
         # structural guarantee, not a hot path: preemption is the one op
         # that frees pages other parties may still reference
         self.alloc.audit()
-        if self.prefix is not None:
-            self.prefix.audit()
+        if self.prefixes is not None:
+            for p in self.prefixes:
+                p.audit()
 
-    def _preempt_one(self) -> Request | None:
-        """Preempt the policy victim (lowest priority, then youngest, then
-        latest-admitted; the oldest live request is always exempt — the
-        deadlock-freedom anchor). Returns the victim, or None when only
-        the exempt request remains."""
-        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
+    def _preempt_one(self, rep: int = 0) -> Request | None:
+        """Preempt the policy victim WITHIN replica ``rep`` (lowest
+        priority, then youngest, then latest-admitted; the replica's
+        oldest live request is always exempt — the deadlock-freedom
+        anchor holds per page pool, since preempting a neighbour in
+        another replica would relieve nothing). Returns the victim, or
+        None when only the exempt request remains."""
+        live = [(i, r) for i, r in enumerate(self.active)
+                if r is not None and self._rep(i) == rep]
         if len(live) <= 1:
             return None
         exempt = min(r.seq_no for _, r in live)
@@ -742,25 +852,27 @@ class BatchedServer:
         and preempts a victim even when the pool could serve the need —
         that is what makes chaos-test preemptions land at exact ticks."""
         need = pages_for(rows, self.page_size) - len(req.pages)
+        rep = self._rep(i)
+        prefix = self._prefix_of(i)
         if (preempt and self.inject is not None
                 and self.inject.take("oop")):
             if not self.preemption:
                 return False  # behave like unrelieved exhaustion: skip
-            self._preempt_one()
+            self._preempt_one(rep)
             if self.active[i] is not req:
                 return False  # the requester itself was the chosen victim
         if need <= 0:
             return True
-        while not self.alloc.can_alloc(need):
-            if self.prefix is not None and self.prefix.evict_for(need):
+        while not self.alloc.can_alloc(need, rep):
+            if prefix is not None and prefix.evict_for(need):
                 break
             if not (preempt and self.preemption):
                 return False
-            if self._preempt_one() is None:
+            if self._preempt_one(rep) is None:
                 return False  # only the exempt oldest remains
             if self.active[i] is not req:
                 return False
-        grown = self.alloc.alloc(need)
+        grown = self.alloc.alloc(need, rep)
         self._table[i, len(req.pages): len(req.pages) + need] = grown
         req.pages.extend(grown)
         self._table_dirty = True
@@ -841,8 +953,8 @@ class BatchedServer:
 
         def _wave():
             return self._prefill(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-                jnp.asarray(fresh), jnp.asarray(starts), self.cache,
+                self.params, self._put(tokens), self._put(lengths),
+                self._put(fresh), self._put(starts), self.cache,
             )
 
         logits, self.cache = self._call("prefill", _wave)
@@ -859,7 +971,7 @@ class BatchedServer:
         pick = self._pick_tokens(logits)
         for i, r in rows:
             if r.fed == len(self._seq(r)):
-                self._index_prompt(r)
+                self._index_prompt(i, r)
                 if not r.out:
                     # replayed requests skip this: their first token(s)
                     # were emitted before preemption — the replay tail's
@@ -905,8 +1017,8 @@ class BatchedServer:
 
         def _step():
             return self._decode(
-                self.params, jnp.asarray(tokens), self.cache,
-                active=jnp.asarray(active),
+                self.params, self._put(tokens), self.cache,
+                active=self._put(active),
             )
 
         logits, self.cache = self._call("decode", _step)
@@ -1192,7 +1304,8 @@ class BatchedServer:
                 "mean": int(np.mean(reserved)), "max": int(max(reserved)),
             }
         if self.paged:
-            cached = self.prefix.pages_held if self.prefix else 0
+            cached = (sum(p.pages_held for p in self.prefixes)
+                      if self.prefixes else 0)
             stats["pages"] = {
                 **self.alloc.stats(),
                 "page_size": self.page_size,
@@ -1203,9 +1316,22 @@ class BatchedServer:
                 # those and must return the pool to zero in use)
                 "leaked": self.alloc.in_use - cached,
             }
-            if self.prefix is not None:
-                stats["prefix"] = self.prefix.stats()
+            if self.prefixes is not None:
+                stats["prefix"] = self._prefix_stats()
                 stats["prefix"]["admission_deferrals"] = self.prefix_deferrals
+        if self._plan is not None:
+            stats["mesh"] = {
+                "data": self._plan.n_data,
+                "model": self._plan.n_model,
+                "devices": self._plan.n_data * self._plan.n_model,
+            }
+            if self.paged:
+                # peak KV bytes each DP replica's page pool committed —
+                # the per-device memory bill the mesh run actually pays
+                stats["mesh"]["kv_reserved_bytes_per_replica"] = [
+                    a.peak_in_use * self._page_bytes
+                    for a in self.alloc.pools
+                ]
         if self.speculate:
             self.spec.draft_forwards = self.drafter.forwards
             stats["spec"] = {
@@ -1218,12 +1344,24 @@ class BatchedServer:
             }
         return stats
 
+    def _prefix_stats(self) -> dict:
+        """Aggregate prefix-index stats: the single index's dict on one
+        replica (unchanged keys for existing callers), summed counters plus
+        a per-replica breakdown under DP."""
+        if len(self.prefixes) == 1:
+            return self.prefixes[0].stats()
+        per = [p.stats() for p in self.prefixes]
+        out = {k: sum(s[k] for s in per) for k in per[0]}
+        out["per_replica"] = per
+        return out
+
     def drop_prefix_cache(self) -> None:
-        """Release every page the prefix index holds (cache teardown).
-        With no live requests, the pool must return to zero pages in use —
-        anything left is a real leak."""
-        if self.prefix is not None:
-            self.prefix.release_all()
+        """Release every page the prefix indexes hold (cache teardown).
+        With no live requests, every replica's pool must return to zero
+        pages in use — anything left is a real leak."""
+        if self.prefixes is not None:
+            for p in self.prefixes:
+                p.release_all()
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -1317,6 +1455,13 @@ def build_parser() -> argparse.ArgumentParser:
                     help="soft deadline: drain in-flight requests (partial "
                          "streams, status=preempted, zero leaks) and exit "
                          "cleanly after S seconds (0 = off)")
+    ap.add_argument("--mesh", default="",
+                    help="serve on a DxM (data x model) device mesh, e.g. "
+                         "2x2: D data-parallel replica groups split the "
+                         "batch slots and page pool, M-way tensor "
+                         "parallelism shards every matmul's output dim "
+                         "(exact-TP: greedy streams stay bit-identical to "
+                         "the single-device path). Empty = no mesh.")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0,
@@ -1375,6 +1520,23 @@ def main(argv=None):
               f"{weight_bytes(params)/1e6:.2f} MB weights, "
               f"{w_bytes/1e6:.2f} MB read per decoded token")
 
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_mesh
+        try:
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+        except ValueError:
+            raise SystemExit(f"--mesh must be DxM (e.g. 2x2), got "
+                             f"{args.mesh!r}")
+        if d * m > jax.device_count():
+            raise SystemExit(
+                f"--mesh {d}x{m} needs {d * m} devices, have "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count=N for CPU runs)")
+        mesh = make_mesh((d, m), ("data", "model"))
+        print(f"[serve] mesh: {d} data replica(s) x {m} model shard(s) "
+              f"over {d * m} {jax.devices()[0].platform} device(s)")
+
     if args.prompt_lens:
         plens = [int(x) for x in args.prompt_lens.split(",")]
     else:
@@ -1411,7 +1573,7 @@ def main(argv=None):
             growth_headroom=args.growth_headroom,
             preemption=args.preemption, spec_floor=args.spec_floor,
             spec_window=args.spec_window, inject=inject, guard=guard,
-            max_wall_s=max_wall_s,
+            max_wall_s=max_wall_s, mesh=mesh,
         )
 
     greedy = args.temperature <= 0.0
@@ -1435,6 +1597,13 @@ def main(argv=None):
     stats["weight_bytes_per_token"] = w_bytes
     stats["engine"] = args.engine if args.bits else "fp"
     print(f"[serve] {stats}")
+    if mesh is not None and args.paged:
+        per = stats["pages"].get("per_replica", [stats["pages"]])
+        for r, ps in enumerate(per):
+            kv = stats["mesh"]["kv_reserved_bytes_per_replica"][r]
+            print(f"[serve] replica {r}: pages in_use={ps['in_use']} "
+                  f"peak={ps['peak_in_use']} cow_copies={ps['cow_copies']} "
+                  f"peak_kv_reserved={kv / 1e6:.3f} MB")
     drained = stats["resilience"]["drained"]
     if drained:
         res = stats["resilience"]

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.engine.qmm import qdot
 from repro.models.layers import activation, rms_norm
 
 # ---------------------------------------------------------------------------
@@ -166,7 +167,7 @@ def _mamba2_pre(p, cfg, x, conv_state=None, seq_lens=None):
     """in_proj + conv + splits shared by train and decode paths."""
     s = cfg.ssm
     di, nh, conv_dim = mamba2_dims(cfg)
-    zxbcdt = x @ p["in_proj"]
+    zxbcdt = qdot(x, p["in_proj"])
     z = zxbcdt[..., :di]
     xbc = zxbcdt[..., di : di + conv_dim]
     dt = zxbcdt[..., di + conv_dim :]  # (B,S,H)
@@ -209,7 +210,7 @@ def mamba2_block(p, cfg, x, cache=None, seq_lens=None):
     b, sl = x.shape[:2]
     y = y.reshape(b, sl, di).astype(x.dtype)
     y = rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
-    out = y @ p["out_proj"]
+    out = qdot(y, p["out_proj"])
     new_cache = {"ssm": st, "conv": new_conv} if cache is not None else None
     return out, new_cache
 

@@ -38,18 +38,13 @@ def abstract_opt(model: Model):
     return jax.eval_shape(adamw.init_opt_state, params)
 
 
-def _configure(mesh: Mesh):
-    shd.set_mesh_dims(mesh.shape.get("data", 1), mesh.shape.get("model", 1))
-
-
 def build_train_step(
     model: Model, mesh: Mesh, opt_cfg: adamw.AdamWConfig, shape: ShapeConfig
 ):
     """Returns (step_fn, (params_shd, opt_shd, batch_shd), out_shardings)."""
-    _configure(mesh)
     aparams = abstract_params(model)
-    pspecs = shd.param_specs(aparams)
-    ospecs = shd.opt_specs(aparams)
+    pspecs = shd.param_specs(aparams, mesh)
+    ospecs = shd.opt_specs(aparams, mesh)
     batch_abs = model.input_specs(shape)
     bspecs = shd.batch_specs(batch_abs, batch_shards(mesh), shd.dp_axes(mesh))
 
@@ -82,15 +77,15 @@ def build_serve_step(model: Model, mesh: Mesh, shape: ShapeConfig):
     Returns (step_fn, (params_shd, batch/token_shd, cache_shd), out desc).
     """
     cfg = model.cfg
-    _configure(mesh)
     aparams = abstract_params(model)
-    pspecs = shd.param_specs(aparams)
+    pspecs = shd.param_specs(aparams, mesh)
     params_shd = _ns(mesh, pspecs)
     long_ctx = shape.kind == "decode" and shape.global_batch < batch_shards(mesh)
     cache_abs = model.cache_specs(shape)
     cspecs = shd.cache_specs_tree(cache_abs, long_context=long_ctx,
                                   axes=shd.dp_axes(mesh),
                                   n_dp=batch_shards(mesh),
+                                  n_model=mesh.shape.get("model", 1),
                                   decode=shape.kind == "decode")
     cache_shd = _ns(mesh, cspecs)
     batch_abs = model.input_specs(shape)

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import PageAllocator, pages_for
+from repro.kvcache import PagePoolGroup, pages_for
 from repro.kvcache.paged import restore_rows, rewind
 from repro.models.model import _RECURRENT_KEYS, reset_slots
 from repro.spec.policy import shaped_probs
@@ -44,17 +44,30 @@ class Drafter:
     """Paged draft-model runner, slot-aligned with a BatchedServer."""
 
     def __init__(self, model, params, slots: int, max_len: int, *,
-                 page_size: int, width: int, num_pages: int | None = None):
+                 page_size: int, width: int, num_pages: int | None = None,
+                 plan=None):
+        # under a mesh plan (runtime.sharding.MeshPlan) the draft pool is
+        # split per DP replica exactly like the target's, and the packed
+        # draft weights shard under the same exact-TP rules
+        self._plan = plan
+        n_rep = plan.n_data if plan is not None else 1
+        if plan is not None:
+            params, _ = plan.put_params(params)
         self.params = params
         self.slots = slots
         self.page_size = page_size
         self.width = width  # catch-up chunk width == speculate + 1
         pages_per_row = pages_for(max_len, page_size)
         self.num_pages = num_pages or slots * pages_per_row
+        if self.num_pages % n_rep:
+            raise ValueError(
+                f"draft num_pages ({self.num_pages}) must divide over "
+                f"the mesh's {n_rep} data replicas")
+        self._slots_per_rep = slots // n_rep
         self.cache = model.init_paged_cache(
             slots, max_len, page_size=page_size, num_pages=self.num_pages
         )
-        self.alloc = PageAllocator(self.num_pages)
+        self.alloc = PagePoolGroup(self.num_pages, n_rep)
         self._table = np.zeros((slots, pages_per_row), np.int32)
         self._dirty = False
         self._pages: list[list[int]] = [[] for _ in range(slots)]
@@ -64,24 +77,45 @@ class Drafter:
         self._round: dict[int, tuple[int, int]] = {}  # slot -> (C, kk)
         self.forwards = 0
 
+        if plan is not None:
+            self._cache_shd = plan.cache_shardings(self.cache)
+            self.cache = plan.put_cache(self.cache, self._cache_shd)
+            jit = lambda f: jax.jit(f, out_shardings=(None, self._cache_shd))
+        else:
+            self._cache_shd = None
+            jit = jax.jit
+
         # private closures: see Verifier — sharing the raw model functions
-        # with the server's jits would pool their compile counts
+        # with the server's jits would pool their compile counts. With a
+        # plan, the exact-TP hints are entered inside the traced bodies.
         def _decode_fn(params, tokens, cache, active):
+            if plan is not None:
+                with plan.hints():
+                    return model.decode_step(params, tokens, cache,
+                                             active=active)
             return model.decode_step(params, tokens, cache, active=active)
 
         def _chunk_fn(params, tokens, lengths, cache):
+            if plan is not None:
+                with plan.hints():
+                    return model.verify_step(params, tokens, lengths, cache)
             return model.verify_step(params, tokens, lengths, cache)
 
-        self._decode = jax.jit(_decode_fn)
-        self._chunk = jax.jit(_chunk_fn)
+        self._decode = jit(_decode_fn)
+        self._chunk = jit(_chunk_fn)
 
         def _prefill_fn(params, tokens, lengths, fresh, starts, cache):
             cache = reset_slots(cache, fresh, starts)
+            if plan is not None:
+                with plan.hints():
+                    return model.prefill(
+                        params, {"tokens": tokens, "lengths": lengths}, cache
+                    )
             return model.prefill(
                 params, {"tokens": tokens, "lengths": lengths}, cache
             )
 
-        self._prefill = jax.jit(_prefill_fn)
+        self._prefill = jit(_prefill_fn)
 
     # -- bookkeeping --------------------------------------------------------
 
@@ -95,9 +129,12 @@ class Drafter:
     def admit(self, slot: int, n_tokens: int) -> None:
         """Reserve draft pages for a request needing ``n_tokens`` KV rows
         (the draft high-water mark — one row less than the target's, the
-        final emitted token is never fed to the drafter)."""
-        self._pages[slot] = self.alloc.alloc(pages_for(n_tokens,
-                                                       self.page_size))
+        final emitted token is never fed to the drafter). Pages come from
+        the slot's own DP replica pool, mirroring the target server."""
+        self._pages[slot] = self.alloc.alloc(
+            pages_for(n_tokens, self.page_size),
+            slot // self._slots_per_rep,
+        )
         self._table[slot, : len(self._pages[slot])] = self._pages[slot]
         self._dirty = True
         self.valid[slot] = 0
@@ -110,11 +147,21 @@ class Drafter:
         self._pages[slot] = self.alloc.truncate(self._pages[slot], 0)
         self.valid[slot] = 0
 
+    def _put(self, arr):
+        if self._plan is None:
+            return jnp.asarray(arr)
+        return self._plan.put_batch(arr)
+
     def _sync_table(self):
         if self._dirty:
             self.cache = dict(self.cache)
             self.cache["page_table"] = jnp.asarray(self._table)
             self._dirty = False
+        if self._plan is not None:
+            # re-commit to the canonical shardings after host edits so the
+            # jitted draft calls never see drifted input layouts
+            self.cache = jax.tree.map(jax.device_put, self.cache,
+                                      self._cache_shd)
 
     # -- prompt prefill (mirrors the server's waves) ------------------------
 
@@ -129,8 +176,8 @@ class Drafter:
         prompt-token watermark after this wave; other slots keep theirs."""
         self._sync_table()
         _, self.cache = self._prefill(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
-            jnp.asarray(fresh), jnp.zeros((self.slots,), jnp.int32),
+            self.params, self._put(tokens), self._put(lengths),
+            self._put(fresh), self._put(np.zeros((self.slots,), np.int32)),
             self.cache,
         )
         self.forwards += 1
@@ -165,7 +212,7 @@ class Drafter:
             self._round[slot] = (len(committed), kk)
         self._sync_table()
         logits, self.cache = self._chunk(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            self.params, self._put(tokens), self._put(lengths),
             self.cache,
         )
         self.forwards += 1
@@ -193,8 +240,8 @@ class Drafter:
                 feed[slot, 0] = drafts[slot][-1]
                 active[slot] = True
             logits, self.cache = self._decode(
-                self.params, jnp.asarray(feed), self.cache,
-                active=jnp.asarray(active),
+                self.params, self._put(feed), self.cache,
+                active=self._put(active),
             )
             self.forwards += 1
             rows = np.asarray(jnp.argmax(logits, -1) if greedy else logits)
@@ -237,7 +284,7 @@ class Drafter:
                 self.valid[slot] = start + w
             self._sync_table()
             _, self.cache = self._chunk(
-                self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+                self.params, self._put(tokens), self._put(lengths),
                 self.cache,
             )
             self.forwards += 1

@@ -76,17 +76,35 @@ class SpecStats:
 class Verifier:
     """Jitted multi-token scoring + leakage-free rollback for one cache."""
 
-    def __init__(self, model, params, recurrent_keys: list[str]):
+    def __init__(self, model, params, recurrent_keys: list[str], plan=None,
+                 cache_shd=None):
         self.params = params
         self._recurrent = list(recurrent_keys)
+        self._plan = plan
+        self._cache_shd = cache_shd
 
         # private closure: jit caches are keyed by the wrapped function, so
         # wrapping model.verify_step directly would share a compile count
-        # with the drafter's catch-up chunk and muddy the compile stats
+        # with the drafter's catch-up chunk and muddy the compile stats.
+        # Under a mesh plan the exact-TP hints are entered inside the trace
+        # and the cache output is pinned to its canonical shardings, so the
+        # rollback's nested re-verify never registers a second signature.
         def _verify_fn(params, tokens, lengths, cache):
+            if plan is not None:
+                with plan.hints():
+                    return model.verify_step(params, tokens, lengths, cache)
             return model.verify_step(params, tokens, lengths, cache)
 
-        self._verify = jax.jit(_verify_fn)
+        if plan is not None and cache_shd is not None:
+            self._verify = jax.jit(_verify_fn,
+                                   out_shardings=(None, cache_shd))
+        else:
+            self._verify = jax.jit(_verify_fn)
+
+    def _put(self, arr):
+        if self._plan is None:
+            return jnp.asarray(arr)
+        return self._plan.put_batch(arr)
 
     @property
     def compiles(self) -> int:
@@ -106,7 +124,7 @@ class Verifier:
         otherwise dominate the round)."""
         snap = {k: cache[k] for k in self._recurrent}
         logits, cache = self._verify(
-            self.params, jnp.asarray(tokens), jnp.asarray(lengths), cache
+            self.params, self._put(tokens), self._put(lengths), cache
         )
         scores = np.asarray(jnp.argmax(logits, -1) if greedy else logits)
         return scores, cache, snap
@@ -131,9 +149,12 @@ class Verifier:
             # rewind to base, then re-feed the accepted tokens (the first
             # new_lens - base columns of the verify rows) to rebuild state
             cache["len"] = rewind(cache["len"], sel, jnp.asarray(base))
+            if self._cache_shd is not None:
+                # eager restore/rewind results may carry drifted shardings
+                cache = jax.tree.map(jax.device_put, cache, self._cache_shd)
             relens = np.where(rejected, new_lens - base, 0).astype(np.int32)
             _, cache = self._verify(
-                self.params, jnp.asarray(tokens), jnp.asarray(relens), cache
+                self.params, self._put(tokens), self._put(relens), cache
             )
         else:
             cache = dict(cache)

@@ -14,58 +14,68 @@ from jax.sharding import PartitionSpec as P
 from repro.runtime import sharding as shd
 
 
-def setup_module(_):
-    shd.set_mesh_dims(16, 16)
+def _spec(path, shape, *, n_model=16, n_data=16):
+    return shd.param_spec(path, shape, n_model=n_model, n_data=n_data)
 
 
 def test_param_rules_tp():
-    assert shd.param_spec("layers/attn/wq", (28, 1024, 2048)) == P(None, None, "model")
-    assert shd.param_spec("layers/attn/wo", (28, 2048, 1024)) == P(None, "model", None)
-    assert shd.param_spec("layers/mlp/w_up", (28, 1024, 3072)) == P(None, None, "model")
-    assert shd.param_spec("layers/mlp/w_down", (28, 3072, 1024)) == P(None, "model", None)
-    assert shd.param_spec("embed/table", (151936, 1024)) == P("model", None)
+    assert _spec("layers/attn/wq", (28, 1024, 2048)) == P(None, None, "model")
+    assert _spec("layers/attn/wo", (28, 2048, 1024)) == P(None, "model", None)
+    assert _spec("layers/mlp/w_up", (28, 1024, 3072)) == P(None, None, "model")
+    assert _spec("layers/mlp/w_down", (28, 3072, 1024)) == P(None, "model", None)
+    assert _spec("embed/table", (151936, 1024)) == P("model", None)
     # whisper: vocab 51865 not divisible by 16 -> falls back to d_model
-    assert shd.param_spec("embed/table", (51865, 1024)) == P(None, "model")
+    assert _spec("embed/table", (51865, 1024)) == P(None, "model")
     # norms replicated
-    assert shd.param_spec("layers/norm1_scale", (28, 1024)) == P()
-    assert shd.param_spec("layers/moe/router/w", (28, 2048, 64)) == P()
+    assert _spec("layers/norm1_scale", (28, 1024)) == P()
+    assert _spec("layers/moe/router/w", (28, 2048, 64)) == P()
+
+
+def test_param_rules_are_mesh_instance_scoped():
+    """No module-global mesh dims: the same call site can evaluate rules for
+    two different mesh shapes back to back and each answers for its own."""
+    assert _spec("layers/attn/wq", (28, 1024, 2048), n_model=2) \
+        == P(None, None, "model")
+    # 2048 % 3 != 0 -> replicated for the 3-way mesh, still sharded for 16
+    assert _spec("layers/attn/wq", (28, 1024, 2048), n_model=3) == P()
+    assert _spec("layers/attn/wq", (28, 1024, 2048), n_model=16) \
+        == P(None, None, "model")
 
 
 def test_param_rules_ep_and_fsdp():
     # deepseek experts: EP over model + FSDP over data (>2^31 elements)
-    spec = shd.param_spec("layers/moe/experts/w_up", (28, 64, 2048, 1408))
+    spec = _spec("layers/moe/experts/w_up", (28, 64, 2048, 1408))
     assert spec == P(None, "model", "data", None)
     # small expert banks: EP only
-    spec = shd.param_spec("layers/moe/experts/w_up", (2, 64, 64, 64))
+    spec = _spec("layers/moe/experts/w_up", (2, 64, 64, 64))
     assert spec == P(None, "model", None, None)
 
 
 def test_zero1_adds_data_axis_divisibly():
-    base = shd.param_spec("layers/attn/wq", (28, 1024, 2048))
-    z = shd.zero1_spec(base, (28, 1024, 2048))
+    base = _spec("layers/attn/wq", (28, 1024, 2048))
+    z = shd.zero1_spec(base, (28, 1024, 2048), 16)
     assert z == P(None, "data", "model")
     # never duplicates data (FSDP params)
     fs = P(None, "model", "data", None)
-    assert shd.zero1_spec(fs, (28, 64, 2048, 1408)) == fs
+    assert shd.zero1_spec(fs, (28, 64, 2048, 1408), 16) == fs
     # skips non-divisible dims (51865 % 16 != 0)
-    z2 = shd.zero1_spec(P(None, "model"), (51865, 1024))
+    z2 = shd.zero1_spec(P(None, "model"), (51865, 1024), 16)
     assert z2 == P(None, "model")
 
 
 def test_cache_specs_kv_fallbacks():
     import jax
 
-    shd.set_mesh_dims(16, 16)
     cache = {
         "kv": jax.ShapeDtypeStruct((48, 2, 128, 32768, 8, 128), np.dtype("float32")),
         "len": jax.ShapeDtypeStruct((), np.dtype("int32")),
     }
     specs = shd.cache_specs_tree(cache, long_context=False, axes=("data",),
-                                 n_dp=16)
+                                 n_dp=16, n_model=16)
     # kv=8 not divisible by 16 -> head_dim sharded instead
     assert specs["kv"] == P(None, None, ("data",), None, None, "model")
     specs = shd.cache_specs_tree(cache, long_context=True, axes=("data",),
-                                 n_dp=16)
+                                 n_dp=16, n_model=16)
     assert specs["kv"] == P(None, None, None, "data", None, "model")
 
 
@@ -199,15 +209,3 @@ def test_hlocost_loop_awareness():
     if isinstance(xla_cost, list):  # jax <= 0.4.x: one dict per computation
         xla_cost = xla_cost[0] if xla_cost else {}
     assert cost.dot_flops > 5 * float(xla_cost["flops"]) * 0.8
-
-
-def test_collective_wire_math():
-    from repro.roofline.analysis import collectives_from_ops
-
-    # 1 MB all-reduce over 16 devices, inside an L=32 loop
-    ops = [("all-reduce", 1 << 20, 32.0, "replica_groups={{0,1,2,3,4,5,6,7,"
-            "8,9,10,11,12,13,14,15}}")]
-    st = collectives_from_ops(ops, n_devices=16, pod_stride=1 << 30)
-    assert st.total_bytes == 32 * (1 << 20)
-    assert st.wire_bytes_ici == pytest.approx(2 * 15 / 16 * 32 * (1 << 20))
-    assert st.wire_bytes_dcn == 0

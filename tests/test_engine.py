@@ -191,7 +191,15 @@ def test_tune_cache_roundtrip_and_dispatch(tmp_path, monkeypatch):
         assert autotune.choose_block(8, 256, 256, 4) == \
             autotune.heuristic_block(8, 256, 256, 4)
         raw = json.loads(path.read_text())
-        assert raw["blocks"]["16x1024x1024@4"] == [128, 256, 128]
+        assert raw["blocks"]["16x1024x1024@4/d1"] == [128, 256, 128]
+        # per-shard entries live in their own /dS namespace: a block tuned
+        # for the 2-way-sharded width must not answer the global lookup
+        autotune.get_cache().put(16, 1024, 512, 4, (128, 128, 128),
+                                 n_shards=2)
+        assert autotune.choose_block(16, 1024, 512, 4, n_shards=2) == \
+            (128, 128, 128)
+        assert autotune.choose_block(16, 1024, 512, 4) == \
+            autotune.heuristic_block(16, 1024, 512, 4)
     finally:
         monkeypatch.delenv(autotune.ENV_CACHE)
         autotune.reset_cache()
@@ -202,11 +210,12 @@ def test_tune_cache_rejects_malformed_entries_at_load(tmp_path, monkeypatch):
     heuristic at LOAD time, not raise inside choose_block on the hot
     path."""
     path = tmp_path / "tune.json"
-    path.write_text(json.dumps({"schema": 1, "blocks": {
-        "16x1024x1024@4": [128, 256],            # truncated by hand-edit
-        "8x256x256@4": ["128", 128, 128],        # non-int member
-        "8x512x512@4": None,                     # nulled entry
-        "4x128x128@4": [8, 128, 128],            # the one valid entry
+    path.write_text(json.dumps({"schema": 2, "blocks": {
+        "16x1024x1024@4/d1": [128, 256],         # truncated by hand-edit
+        "8x256x256@4/d1": ["128", 128, 128],     # non-int member
+        "8x512x512@4/d1": None,                  # nulled entry
+        "8x768x768@4": [8, 128, 128],            # schema-1 GLOBAL-shape key
+        "4x128x128@4/d1": [8, 128, 128],         # the one valid entry
     }}))
     monkeypatch.setenv(autotune.ENV_CACHE, str(path))
     autotune.reset_cache()
@@ -217,6 +226,9 @@ def test_tune_cache_rejects_malformed_entries_at_load(tmp_path, monkeypatch):
             autotune.heuristic_block(8, 256, 256, 4)
         assert autotune.choose_block(8, 512, 512, 4) == \
             autotune.heuristic_block(8, 512, 512, 4)
+        # the stale schema-1 key (no /dS shard suffix) is dropped at load:
+        # it was tuned on a global shape and is ambiguous under sharding
+        assert "8x768x768@4" not in autotune.get_cache().table
         assert autotune.choose_block(4, 128, 128, 4) == (8, 128, 128)
     finally:
         monkeypatch.delenv(autotune.ENV_CACHE)

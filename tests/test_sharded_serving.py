@@ -1,0 +1,244 @@
+"""Mesh-sharded serving: exact-TP serve specs on the real packed executable
+tree, per-replica page-pool routing, and subprocess runs (8 fake devices)
+pinning greedy streams bit-identical across {unsharded, 1x1 mesh, 2x2 mesh}
+for both served architectures with paged KV + prefix cache + speculation.
+
+The contract under test is the one ``runtime.sharding`` documents: serve
+mode shards every hot matmul on its OUTPUT dim only (value-exact
+all-gathers, never partial-sum all-reduces), so a sharded greedy stream is
+the single-device stream bit-for-bit — not approximately, exactly. Data
+parallelism splits the batch slots and the page pool into replica-local
+ranges; each replica's admission, prefix index, COW traffic, and
+preemption victims stay inside its own range.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.kvcache.allocator import OutOfPages, PagePoolGroup
+
+
+# ---------------------------------------------------------------------------
+# host-side: per-replica page pool routing
+# ---------------------------------------------------------------------------
+
+def test_pool_group_replica_id_ranges():
+    g = PagePoolGroup(24, 2)
+    a = g.alloc(3, replica=0)
+    b = g.alloc(3, replica=1)
+    assert all(0 <= p < 12 for p in a)
+    assert all(12 <= p < 24 for p in b)
+    # id-taking ops route by the page id itself
+    g.free(a + b)
+    g.audit()
+    assert g.in_use == 0
+
+
+def test_pool_group_replica_isolation():
+    """A replica exhausting ITS range must not borrow from the other —
+    the pool's PAGE dim is batch-sharded over data, so a borrowed page
+    would live on the wrong replica's devices."""
+    g = PagePoolGroup(8, 2)
+    g.alloc(4, replica=0)
+    assert not g.can_alloc(1, replica=0)
+    assert g.can_alloc(4, replica=1)
+    with pytest.raises(OutOfPages):
+        g.alloc(1, replica=0)
+
+
+def test_pool_group_cow_stays_in_replica():
+    g = PagePoolGroup(8, 2)
+    [p] = g.alloc(1, replica=1)
+    g.retain([p])
+    fresh, copied = g.cow(p)  # caller's claim moves onto the fresh page
+    assert copied and 4 <= fresh < 8
+    g.free([p, fresh])
+    g.audit()
+    assert g.in_use == 0
+
+
+def test_pool_group_divisibility_and_stats():
+    with pytest.raises(ValueError):
+        PagePoolGroup(10, 3)
+    g = PagePoolGroup(12, 3)
+    g.alloc(2, replica=2)
+    s = g.stats()
+    assert s["in_use"] == 2 and len(s["per_replica"]) == 3
+    assert s["per_replica"][2]["in_use"] == 2
+    # single-replica groups keep the flat single-pool stats shape
+    assert "per_replica" not in PagePoolGroup(12, 1).stats()
+
+
+# ---------------------------------------------------------------------------
+# serve-mode specs on the real packed executable tree
+# ---------------------------------------------------------------------------
+
+def test_serve_specs_on_packed_executable_tree():
+    """Every PackedSplitQTensor leaf of the real llama executable tree:
+    codes/cids shard the output dim, scales/zeros/meta replicate, and no
+    spec references the data axis (weights replicate across DP)."""
+    import jax
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.core import QuantPolicy, restructure
+    from repro.models import build_model
+    from repro.runtime import sharding as shd
+
+    cfg = get_config("llama32-1b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tree = restructure(params, QuantPolicy(bits=4, split=True, packed=True)
+                       ).as_executable(group=True)
+
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    assert leaves, "executable tree has no leaves"
+    checked = sharded = 0
+    for path, leaf in leaves:
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                        for k in path)
+        spec = shd.serve_param_spec(pstr, leaf.shape, n_model=2)
+        assert "data" not in jax.tree_util.tree_leaves(tuple(spec)), pstr
+        name = pstr.rsplit("/", 1)[-1]
+        if name in ("scales", "zeros", "info", "meta"):
+            assert spec == P(), f"{pstr} must replicate, got {spec}"
+            checked += 1
+        elif name in ("codes", "cids") and any(
+                s in pstr for s in ("wqkv", "w_gateup", "wq", "wk", "wv",
+                                    "w_up", "w_gate", "lm_head")):
+            if leaf.shape[-1] % 2 == 0:
+                assert spec[-1] == "model", f"{pstr} got {spec}"
+                sharded += 1
+    assert checked > 0 and sharded > 0, (checked, sharded)
+
+
+def test_serve_specs_scale_with_mesh_instance():
+    """Rules answer per mesh instance — a dim not divisible by one mesh's
+    TP degree replicates there while still sharding on another."""
+    from jax.sharding import PartitionSpec as P
+    from repro.runtime import sharding as shd
+
+    shape = (16, 64, 258)  # 258 % 4 != 0, % 2 == 0
+    assert shd.serve_param_spec("layers/attn/wqkv/codes", shape,
+                                n_model=2)[-1] == "model"
+    assert shd.serve_param_spec("layers/attn/wqkv/codes", shape,
+                                n_model=4) == P()
+
+
+# ---------------------------------------------------------------------------
+# subprocess: bit-identical streams across mesh shapes
+# ---------------------------------------------------------------------------
+
+def _run(sub):
+    return subprocess.run(
+        [sys.executable, "-c", sub], capture_output=True, text=True,
+        timeout=600, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+
+
+_STREAMS = """
+    import os
+    assert "--xla_force_host_platform_device_count=8" in os.environ["XLA_FLAGS"]
+    import jax, numpy as np
+    from repro.configs import get_config
+    from repro.core import QuantPolicy, restructure
+    from repro.launch.mesh import make_mesh
+    from repro.launch.serve import BatchedServer, Request
+    from repro.models import build_model
+
+    ARCH = %(arch)r
+    cfg = get_config(ARCH).reduced()
+    model = build_model(cfg)
+    fp = model.init(jax.random.PRNGKey(0))
+    pol = QuantPolicy(bits=4, split=True, packed=True)
+    params = restructure(fp, pol).as_executable(group=True)
+    draft = restructure(fp, pol).as_executable(group=True)
+
+    def make_reqs():
+        rng = np.random.default_rng(0)
+        common = rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+        return [Request(i, np.concatenate([
+            common, rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)]), 6)
+            for i in range(6)]
+
+    def serve(mesh_shape, speculate):
+        mesh = (make_mesh(mesh_shape, ("data", "model"))
+                if mesh_shape else None)
+        reqs = make_reqs()
+        srv = BatchedServer(
+            model, params, 4, 16 + 12 + 6 + 8, paged=True, page_size=8,
+            prefix_cache=True, prefill_chunk=16, speculate=speculate,
+            draft_params=draft if speculate else None, mesh=mesh)
+        stats = srv.run(reqs)
+        assert stats["requests"] == 6, stats
+        assert stats["pages"]["leaked"] == 0, stats
+        assert stats["decode_compiles"] <= 1, stats
+        if speculate:
+            assert stats["spec"]["draft_pages_leaked"] == 0, stats
+            assert stats["spec"]["verify_compiles"] == 1, stats
+        if mesh_shape == (2, 2):
+            # DP really split the pool: both replica ranges saw traffic
+            per = stats["pages"]["per_replica"]
+            assert len(per) == 2 and all(p["peak_in_use"] > 0 for p in per)
+            srv.alloc.audit()
+            for p in srv.prefixes:
+                p.audit()
+        srv.drop_prefix_cache()
+        assert srv.alloc.in_use == 0, "pages held after prefix drop"
+        return {r.rid: list(r.out) for r in reqs}, stats
+
+    ref, _ = serve(None, speculate=0)
+    assert all(len(v) == 6 for v in ref.values())
+    for shape in [(1, 1), (2, 2)]:
+        got, stats = serve(shape, speculate=0)
+        assert got == ref, (shape, "plain", got, ref)
+        assert stats["decode_compiles"] == 1, stats
+        got, _ = serve(shape, speculate=3)
+        assert got == ref, (shape, "speculate", got, ref)
+    spec_ref, _ = serve(None, speculate=3)
+    assert spec_ref == ref
+    print("OK", ARCH)
+"""
+
+
+def test_streams_bit_identical_llama():
+    """Greedy llama streams: unsharded == 1x1 == 2x2, plain and
+    speculative, with paged KV + prefix cache; decode compiles once on
+    the mesh path; zero leaks in target and draft pools."""
+    r = _run(textwrap.dedent(_STREAMS % {"arch": "llama32-1b"}))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK llama32-1b" in r.stdout
+
+
+def test_streams_bit_identical_zamba():
+    """Same contract for the recurrent hybrid (ssm/conv rows ride the
+    cache through verify rollback's restore + re-verify on the mesh)."""
+    r = _run(textwrap.dedent(_STREAMS % {"arch": "zamba2-1.2b"}))
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK zamba2-1.2b" in r.stdout
+
+
+def test_chaos_on_mesh_cli():
+    """The serve CLI's own chaos self-check on a 2x2 mesh: page growth +
+    speculation + an injected mid-decode pool fault must still reproduce
+    the clean meshed streams bit-exactly and leak nothing (exit 0 covers
+    every gate in serve.main)."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "llama32-1b",
+         "--reduced", "--bits", "4", "--engine", "packed", "--batch", "4",
+         "--requests", "8", "--prompt-len", "12", "--gen", "8", "--paged",
+         "--page-size", "8", "--prefix-cache", "--shared-prefix", "16",
+         "--speculate", "4", "--page-growth", "--inject", "oop@tick2",
+         "--mesh", "2x2"],
+        capture_output=True, text=True, timeout=600, cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
+             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+    )
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "chaos OK" in r.stdout
