@@ -25,6 +25,7 @@ from repro.core.qlinear import (
     splitq_linear_packed,
 )
 from repro.core.split import split_quantize, split_quantize_packed
+from repro.obs.profile import timeit
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / (
     "BENCH_quant_engine.json"
@@ -32,13 +33,9 @@ BENCH_PATH = pathlib.Path(__file__).resolve().parent.parent / (
 
 
 def _time(f, *args, iters=5):
-    jax.block_until_ready(f(*args))  # single warmup (compile)
-    total = 0.0
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(*args))  # block per iteration
-        total += time.perf_counter() - t0
-    return total / iters
+    # the shared benchmark clock (warmup + block_until_ready + median):
+    # bench rows and autotune winners are measured the same way
+    return timeit(f, *args, iters=iters, warmup=1)
 
 
 def _serve_stats(engine: str, gen: int = 4,
@@ -173,6 +170,27 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("serve/paged_vs_contiguous_kv_reserve_ratio",
                  dense_res["mean"] / max(paged_res["mean"], 1),
                  "contiguous reserves batch x max_len regardless of length"))
+
+    # observability: operational latency percentiles + the tick-time
+    # breakdown, read from the paged run's telemetry (stats["obs"] is the
+    # tracer/StepTimer view — the bench no longer reaches into server
+    # internals for timing). CPU interpret wall times: trajectory, not
+    # absolute truth.
+    obs = paged["obs"]
+    ttft = obs["requests"].get("ttft_s", {})
+    tpot = obs["requests"].get("tpot_s", {})
+    rows.append(("serve/obs_ttft_ms_p50", ttft.get("p50", 0.0) * 1e3,
+                 f"time to first token, p95={ttft.get('p95', 0.0) * 1e3:.0f}"
+                 f"ms over {obs['requests'].get('requests', 0)} requests"))
+    rows.append(("serve/obs_tpot_ms_p50", tpot.get("p50", 0.0) * 1e3,
+                 "steady-state ms per output token (paged run)"))
+    for seam, st in sorted(obs["step_time"].items()):
+        rows.append((f"serve/obs_tick_{seam}_ms_mean", st["mean_s"] * 1e3,
+                     f"{st['count']} {seam} steps, "
+                     f"{st['total_s'] * 1e3:.0f}ms total (block_until_ready"
+                     " host wall)"))
+    rows.append(("serve/obs_trace_dropped", float(obs["trace_dropped"]),
+                 "timeline ring-buffer drops (must be 0 in smokes)"))
 
     # prefix sharing: the SAME common-system-prompt workload (24-token
     # shared prefix = 3 full pages, heterogeneous tails) with and without

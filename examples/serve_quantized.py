@@ -26,16 +26,28 @@ dim — greedy streams stay bit-identical to the single-device path. Pass
 on a CPU host) to see real data-parallel splitting; the default 1x1 mesh
 exercises the same sharded code path on one device.
 
+Every run exports its telemetry through ``repro.obs``: the paged run
+writes a Prometheus metrics snapshot + the scheduler-timeline JSONL
+(``--metrics-out`` / ``--trace-out``), and this script then reads the
+metrics back through ``Registry`` parsing — the supported consumption
+path (no reaching into server internals).
+
     PYTHONPATH=src python examples/serve_quantized.py [--mesh DxM]
 """
+import pathlib
 import sys
+import tempfile
 
 from repro.launch.serve import main
+from repro.obs import parse_prometheus
 
 if __name__ == "__main__":
     mesh = "1x1"
     if "--mesh" in sys.argv:
         mesh = sys.argv[sys.argv.index("--mesh") + 1]
+    outdir = pathlib.Path(tempfile.mkdtemp(prefix="serve_obs_"))
+    metrics = outdir / "metrics.prom"
+    trace = outdir / "timeline.jsonl"
     rc = main([
         "--arch", "llama32-1b", "--bits", "4", "--requests", "8",
         "--batch", "4", "--prompt-lens", "4,16,23,9", "--gen", "8",
@@ -50,7 +62,17 @@ if __name__ == "__main__":
         "--paged", "--page-size", "8", "--num-pages", "24",
         "--prefill-chunk", "8", "--shared-prefix", "24", "--prefix-cache",
         "--temperature", "0.7", "--top-k", "16", "--seed", "11",
+        "--metrics-out", str(metrics), "--trace-out", str(trace),
     ])
+    if rc == 0:
+        # the exported snapshot is the public read path for run telemetry:
+        # parse it back instead of poking at BatchedServer attributes
+        snap = parse_prometheus(metrics.read_text())
+        toks = sum(v for _, v in snap.get("serve_tokens_total", []))
+        hits = sum(v for _, v in snap.get("prefix_hits", []))
+        print(f"[obs] paged run telemetry: {int(toks)} tokens emitted, "
+              f"{int(hits)} prefix hits -> {metrics}")
+        print(f"[obs] scheduler timeline -> {trace}")
     # speculative decoding: fp target + packed INT4 drafter of the same
     # weights; exits nonzero on zero acceptance, any leaked page (either
     # pool), or a verify recompile

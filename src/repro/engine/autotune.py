@@ -30,7 +30,6 @@ import json
 import os
 import pathlib
 import re
-import time
 from typing import Callable, Iterable
 
 ENV_CACHE = "SPLITQ_TUNE_CACHE"
@@ -207,8 +206,21 @@ def choose_block(
         if max_bn is not None:
             ok = ok and bn <= max_bn and max_bn % bn == 0
         if ok:
+            _count("tune_cache_hits_total",
+                   "choose_block served from the measured cache")
             return (bm, bn, bk)
+    _count("tune_cache_misses_total",
+           "choose_block fell back to the heuristic")
     return heuristic_block(m, k, n, bits, max_bn=max_bn, bf16_acts=bf16_acts)
+
+
+def _count(name: str, help: str) -> None:
+    """Bump a counter in the process-global obs registry. choose_block has
+    no server handle in scope (it runs inside kernel dispatch), so tuning
+    visibility rides the global registry, which every exporter merges."""
+    from repro.obs.metrics import global_registry
+
+    global_registry().counter(name, help).inc()
 
 
 def autotune(
@@ -220,11 +232,12 @@ def autotune(
 ) -> tuple[tuple[int, int, int], dict[str, float]]:
     """Time ``run(block)`` over the candidate set; record the winner.
 
-    ``run`` must block until the result is ready (e.g. call
-    ``jax.block_until_ready`` on its output). Returns (best_block,
-    {block_str: seconds}).
+    Timing goes through ``repro.obs.profile.timeit`` — the repo's one
+    benchmark clock (warmup excludes compile, every iteration blocks on
+    its own output, MEDIAN of ``iters`` so one GC pause can't crown the
+    wrong block). Returns (best_block, {block_str: seconds}).
     """
-    import jax
+    from repro.obs.profile import timeit
 
     cands = list(candidates or candidate_blocks(
         m, k, n, bits, max_bn=max_bn, bf16_acts=bf16_acts))
@@ -233,15 +246,11 @@ def autotune(
     last_err: Exception | None = None
     for block in cands:
         try:
-            jax.block_until_ready(run(block))  # compile + warm
-            t0 = time.perf_counter()
-            for _ in range(iters):
-                out = run(block)
-            jax.block_until_ready(out)
-            dt = (time.perf_counter() - t0) / iters
+            dt = timeit(run, block, iters=iters, warmup=1)
         except Exception as e:  # invalid block for this backend/shape
             last_err = e
             continue
+        _count("autotune_trials_total", "candidate blocks measured")
         timings["x".join(map(str, block))] = dt
         if dt < best_t:
             best, best_t = block, dt
@@ -253,4 +262,5 @@ def autotune(
             f"{cache_key(m, k, n, bits, bf16_acts, n_shards)}"
         ) from last_err
     get_cache().put(m, k, n, bits, best, bf16_acts, n_shards)
+    _count("autotune_winners_total", "measured winners recorded")
     return best, timings

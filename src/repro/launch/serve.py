@@ -94,6 +94,8 @@ import numpy as np
 
 from repro.kvcache import PagePoolGroup, PrefixIndex, copy_page, pages_for
 from repro.models.model import _RECURRENT_KEYS, reset_slots
+from repro.obs import DEFAULT_CAP, JaxProfile, Observability, compile_counts
+from repro.obs.trace import now as _now
 from repro.runtime import sharding as shd
 from repro.runtime.fault import PreemptionGuard, run_with_retries
 from repro.runtime.faultinject import FaultInjector
@@ -210,7 +212,10 @@ class BatchedServer:
                  spec_window: int = 16,
                  inject: "FaultInjector | str | None" = None,
                  guard: PreemptionGuard | None = None,
-                 max_wall_s: float = 0.0, mesh=None):
+                 max_wall_s: float = 0.0, mesh=None,
+                 obs: Observability | None = None,
+                 trace_cap: int = DEFAULT_CAP,
+                 profile: JaxProfile | None = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -224,7 +229,19 @@ class BatchedServer:
         self._on_token: Callable | None = None
         self.active: list[Request | None] = [None] * batch_slots
         self.buckets_used: list[int] = []
-        self.events: list[str] = []  # "prefill" / "verify" / "decode" trace
+        # -- observability (repro.obs): default ON — registry + tracer +
+        # timeline; Observability.disabled() keeps a REAL timeline so the
+        # ``events`` compat property behaves identically either way
+        if obs is None:
+            obs = Observability(
+                trace_cap=trace_cap,
+                const_labels={"family": model.cfg.family},
+            )
+        self.obs = obs
+        self.registry = obs.registry
+        self.tracer = obs.tracer
+        self.timeline = obs.timeline
+        self.profile = profile
         self.prefill_tokens = 0     # tokens actually fed through prefill
         self.pages_allocated = 0    # fresh pages allocated (incl. COW copies)
         self.prefix_deferrals = 0   # admissions held back for cross-wave dedup
@@ -234,8 +251,11 @@ class BatchedServer:
         self.preemption = preemption
         self.spec_floor = spec_floor
         self.spec_window = spec_window
-        self.inject = (FaultInjector(inject, seed=seed)
+        self.inject = (FaultInjector(inject, seed=seed,
+                                     registry=self.registry)
                        if isinstance(inject, str) else inject)
+        if self.inject is not None and self.inject.registry is None:
+            self.inject.registry = self.registry
         self.guard = guard
         self.max_wall_s = max_wall_s
         self.preemptions = 0        # victim preemptions (pool pressure)
@@ -350,10 +370,12 @@ class BatchedServer:
                 model, draft_params, batch_slots, max_len,
                 page_size=page_size, width=speculate + 1,
                 num_pages=draft_num_pages, plan=self._plan,
+                registry=self.registry,
             )
             self.verifier = Verifier(model, params, self._recurrent,
                                      plan=self._plan,
-                                     cache_shd=self._cache_shd)
+                                     cache_shd=self._cache_shd,
+                                     registry=self.registry)
             self.spec = SpecStats(k=speculate)
         else:
             self.drafter = None
@@ -414,8 +436,41 @@ class BatchedServer:
     def _emit(self, req: Request, tok: int):
         req.out.append(tok)
         req.done = len(req.out) >= req.max_new
+        self.tracer.emit(req.rid)
         if self._on_token is not None:
             self._on_token(req, tok)
+
+    # -- observability --------------------------------------------------------
+
+    @property
+    def events(self) -> list[str]:
+        """Legacy event strings ("prefill" / "decode" / "verify" /
+        "preempt:<rid>" ...), rendered from the structured timeline —
+        the compat view over the new source of truth."""
+        return self.timeline.legacy_events()
+
+    def _tl(self, kind: str, **fields) -> None:
+        """Emit one scheduler-timeline record, stamped with the live
+        scheduler state every record shares (active slots; pool free /
+        fragmentation in paged mode)."""
+        fields["active"] = sum(1 for r in self.active if r is not None)
+        if self.paged:
+            fields["free_pages"] = self.alloc.free_pages
+            fields["frag"] = round(self.alloc.fragmentation(), 4)
+        self.timeline.emit(kind, **fields)
+
+    def _span(self, i: int, r: Request, kind: str, t0: float, t1: float,
+              out_before: int, **kw) -> None:
+        """Attribute one wave's work to request ``r``: a tracer span whose
+        ``emitted`` is exactly the tokens this wave appended to ``r.out``
+        (so per-request span sums always reconcile with the stream), plus
+        the per-replica token counter."""
+        emitted = len(r.out) - out_before
+        self.tracer.span(r.rid, kind, t0, t1, emitted=emitted, **kw)
+        if emitted and self.registry.enabled:
+            self.registry.counter(
+                "serve_tokens_total", "tokens emitted, by replica",
+            ).inc(emitted, replica=self._rep(i))
 
     # -- slot management ----------------------------------------------------
 
@@ -472,7 +527,16 @@ class BatchedServer:
         because every step is a pure jitted function over an immutable
         cache pytree (re-running cannot double-apply a write), with
         ``OutOfPages`` excluded (deterministic resource condition: the
-        scheduler's relief path owns it, not the retry loop)."""
+        scheduler's relief path owns it, not the retry loop).
+
+        With a live registry the step additionally runs under the
+        per-seam ``StepTimer`` (``block_until_ready`` + wall clock into
+        ``serve_step_seconds{seam=...}``) — pure observation: blocking
+        changes when the host sees values, never what they are. A
+        ``NullRegistry`` run skips the wrapper entirely."""
+        if self.obs.step_timer.enabled:
+            inner = fn
+            fn = lambda: self.obs.step_timer.run(seam, inner)
         if self.inject is None:
             return fn()
 
@@ -626,13 +690,23 @@ class BatchedServer:
             if req.replay is not None:
                 self.replays += 1
                 self.replay_tokens += len(req.replay) - req.start_len
-                self.events.append(f"replay:{req.rid}")
+                self.tracer.replay(req.rid,
+                                   len(req.replay) - req.start_len)
+                self._tl("replay", rid=req.rid,
+                         tokens=len(req.replay) - req.start_len)
+                self.registry.counter(
+                    "resilience_replays_total",
+                    "preempted requests re-admitted via replay",
+                ).inc(replica=self._rep(i))
             for qi, p in enumerate(pending):  # identity removal: Request
                 if p is req:                  # __eq__ compares ndarrays
                     del pending[qi]
                     break
             self.active[i] = req
             req.status = "ok"
+            self.tracer.admitted(req.rid, replica=self._rep(i),
+                                 prefix_hit_tokens=req.start_len,
+                                 pages=len(req.pages))
             req.draft_on = self._draftable(req)
             if req.draft_on:
                 # draft high-water: one row less than the target's — the
@@ -781,6 +855,10 @@ class BatchedServer:
             self._table_dirty = True
         if self.drafter is not None:
             self.drafter.release(i)  # idempotent; usually already released
+        self.tracer.retire(req.rid, req.status, registry=self.registry)
+        self.registry.counter(
+            "serve_requests_total", "requests retired, by final status",
+        ).inc(status=req.status, replica=self._rep(i))
 
     # -- preemption / on-demand growth (see runtime.resilience) -------------
 
@@ -807,7 +885,12 @@ class BatchedServer:
             self.drafter.release(i)
         self.active[i] = None
         self._pending.insert(0, req)
-        self.events.append(f"preempt:{req.rid}")
+        self.tracer.preempted(req.rid)
+        self._tl("preempt", rid=req.rid, emitted=len(req.out))
+        self.registry.counter(
+            "resilience_preemptions_total",
+            "victim preemptions on pool pressure",
+        ).inc(replica=self._rep(i))
         # structural guarantee, not a hot path: preemption is the one op
         # that frees pages other parties may still reference
         self.alloc.audit()
@@ -908,7 +991,7 @@ class BatchedServer:
             r.dfed += c
             fed_after[i] = r.dfed
         self.drafter.prefill_wave(tokens, lengths, fresh, fed_after)
-        self.events.append("draft_prefill")
+        self._tl("draft_prefill", rows=len(rows))
         return True
 
     def _prefill_wave(self) -> bool:
@@ -957,8 +1040,11 @@ class BatchedServer:
                 self._put(fresh), self._put(starts), self.cache,
             )
 
+        t0 = _now()
         logits, self.cache = self._call("prefill", _wave)
-        self.events.append("prefill")
+        t1 = _now()
+        self._tl("prefill", bucket=lb, rows=len(rows),
+                 tokens=int(sum(sizes.values())))
         if self._snap_boundaries:
             for i, r in rows:
                 if (not r.indexed and r.fed > 0
@@ -970,6 +1056,7 @@ class BatchedServer:
                     }
         pick = self._pick_tokens(logits)
         for i, r in rows:
+            before = len(r.out)
             if r.fed == len(self._seq(r)):
                 self._index_prompt(i, r)
                 if not r.out:
@@ -978,6 +1065,7 @@ class BatchedServer:
                     # logits would re-derive out[-1], which the next
                     # decode step re-feeds instead
                     self._emit(r, pick(i))
+            self._span(i, r, "prefill", t0, t1, before, fed=sizes[i])
         return True
 
     def step(self) -> bool:
@@ -1021,12 +1109,16 @@ class BatchedServer:
                 active=self._put(active),
             )
 
+        t0 = _now()
         logits, self.cache = self._call("decode", _step)
-        self.events.append("decode")
+        t1 = _now()
+        self._tl("decode", rows=int(active.sum()))
         pick = self._pick_tokens(logits)
         for i, r in enumerate(self.active):
             if active[i]:
+                before = len(r.out)
                 self._emit(r, pick(i))
+                self._span(i, r, "decode", t0, t1, before)
         return True
 
     def _spec_ready(self, i: int, r: Request | None) -> bool:
@@ -1057,6 +1149,7 @@ class BatchedServer:
         if not rows:
             return False
         greedy = self.sampling["temperature"] <= 0.0
+        deg0 = self.spec.degraded_rounds
         # capacity + degradation phase BEFORE any drafting: decide each
         # row's draft budget under pool pressure / acceptance history
         kks: dict[int, int] = {}
@@ -1124,8 +1217,12 @@ class BatchedServer:
             return self.verifier.score(self.cache, tokens, lengths,
                                        greedy=greedy)
 
+        t0 = _now()
         scores, self.cache, snap = self._call("verify", _score)
-        self.events.append("verify")
+        t1 = _now()
+        self._tl("verify", rows=len(rows), drafting=len(jobs),
+                 k=self.speculate,
+                 degraded=self.spec.degraded_rounds - deg0)
         self.spec.rounds += 1
         self.spec.target_forwards += 1
         # host-side acceptance per request, then one batched rollback
@@ -1145,6 +1242,15 @@ class BatchedServer:
                 m, tok = accept_speculative(di, qdists.get(i), p, r.rng)
             self.spec.drafted += len(di)
             self.spec.accepted += m
+            if len(di) and self.registry.enabled:
+                self.registry.counter(
+                    "spec_drafted_total", "draft tokens proposed",
+                ).inc(len(di), replica=self._rep(i))
+                if m:
+                    self.registry.counter(
+                        "spec_accepted_total",
+                        "draft tokens that survived verification",
+                    ).inc(m, replica=self._rep(i))
             if r.acc is not None and len(di):
                 r.acc.record(len(di), m)
             if kks[i] > 0:
@@ -1163,11 +1269,15 @@ class BatchedServer:
         if verdicts:
             self.drafter.finish_round(verdicts)
         for i, r in rows:
+            before = len(r.out)
             for t in drafts[i][: verdicts.get(i, 0)]:
                 self._emit(r, t)
                 self.spec.emitted += 1
             self._emit(r, emits[i])
             self.spec.emitted += 1
+            self._span(i, r, "verify", t0, t1, before,
+                       drafted=len(drafts[i]),
+                       accepted=verdicts.get(i, 0))
             if r.draft_on and r.max_new - len(r.out) - 1 <= 0:
                 # out of draft budget: the drafter is done with this slot
                 # one round before the target retires — release its pages
@@ -1194,7 +1304,8 @@ class BatchedServer:
                 pages_held=len(r.pages), pages_pending=pend,
             ))
         return SchedulerStall(
-            diags, self.alloc.free_pages if self.paged else None)
+            diags, self.alloc.free_pages if self.paged else None,
+            recent=self.timeline.tail(8))
 
     def _drain_due(self, t0: float) -> bool:
         if self.guard is not None and self.guard.requested:
@@ -1217,7 +1328,7 @@ class BatchedServer:
             self._retire(i, r, done)
         for r in self._pending:
             r.status = "preempted"
-        self.events.append("drain")
+        self._tl("drain", unserved=len(self._pending))
 
     def run(self, requests: list[Request],
             on_token: Callable[[Request, int], None] | None = None) -> dict:
@@ -1225,14 +1336,20 @@ class BatchedServer:
         streams each decoded token to the caller as it is sampled."""
         self._on_token = on_token
         self._pending = list(requests)
+        for r in self._pending:
+            self.tracer.queued(r.rid)
         done: list[Request] = []
         steps = 0
         t0 = time.time()
         try:
             while True:
+                # decode-step counter = the chaos tick clock AND the
+                # timeline/profiler tick clock
+                self.timeline.set_tick(steps)
                 if self.inject is not None:
-                    # decode-step counter = the chaos tick clock
                     self.inject.set_tick(steps)
+                if self.profile is not None:
+                    self.profile.on_tick(steps)
                 if self._drain_due(t0):
                     self._drain(done)
                     break
@@ -1270,15 +1387,27 @@ class BatchedServer:
                 break
         finally:
             self._on_token = None
+            if self.profile is not None:
+                self.profile.stop()
         dt = time.time() - t0
+        return self._build_stats(done, steps, dt)
+
+    def _build_stats(self, done: list[Request], steps: int,
+                     dt: float) -> dict:
+        """THE stats builder: one registry-backed assembly of the
+        end-of-run stats dict (CLI, bench and tests all read this shape)
+        that simultaneously files the same numbers into the metrics
+        registry — the dict and ``Registry.snapshot()`` can never
+        disagree because they are built from one pass."""
         toks = sum(len(r.out) for r in done)
+        cc = compile_counts(prefill=self._prefill, decode=self._decode)
         stats = {
             "requests": len(done), "tokens": toks, "seconds": dt,
             "tok_per_s": toks / max(dt, 1e-9), "decode_steps": steps,
             "prefill_waves": len(self.buckets_used),
             "prefill_buckets": sorted(set(self.buckets_used)),
-            "prefill_compiles": self._prefill._cache_size(),
-            "decode_compiles": self._decode._cache_size(),
+            "prefill_compiles": cc["prefill"],
+            "decode_compiles": cc["decode"],
             "prefill_tokens": self.prefill_tokens,
         }
         stats["resilience"] = {
@@ -1342,7 +1471,100 @@ class BatchedServer:
                 # page alive after every request retired is a real leak
                 "draft_pages_leaked": self.drafter.alloc.in_use,
             }
+        self._export_metrics(stats, cc)
+        stats["obs"] = {
+            "trace_events": self.timeline.seq,
+            "trace_dropped": self.timeline.dropped,
+            "requests": self.tracer.summary(),
+            "step_time": self.obs.step_timer.summary(),
+        }
         return stats
+
+    def _export_metrics(self, stats: dict, cc: dict) -> None:
+        """File the end-of-run scheduler/pool/prefix/spec state into the
+        registry as gauges (event-shaped metrics — tokens, requests,
+        preemptions, faults — were already counted live where they
+        happened). No-ops wholesale under a ``NullRegistry``."""
+        reg = self.registry
+        if not reg.enabled:
+            return
+        g = reg.gauge
+        g("serve_decode_ticks", "decode/verify rounds run").set(
+            stats["decode_steps"])
+        g("serve_prefill_waves", "batched prefill waves run").set(
+            stats["prefill_waves"])
+        g("serve_prefill_tokens", "tokens fed through prefill").set(
+            stats["prefill_tokens"])
+        g("serve_tok_per_s", "end-of-run decode throughput").set(
+            stats["tok_per_s"])
+        compiles = dict(cc)
+        if self.speculate:
+            compiles["verify"] = self.verifier.compiles
+            for k, v in self.drafter.compiles().items():
+                compiles[f"draft_{k}"] = v
+        for step, n in compiles.items():
+            g("serve_jit_compiles",
+              "compilation-cache size per jitted step").set(n, step=step)
+        res = stats["resilience"]
+        g("resilience_peak_concurrency",
+          "most slots simultaneously live").set(res["peak_concurrency"])
+        g("resilience_degraded_rounds",
+          "spec rounds decoded plainly under pressure").set(
+            res["degraded_rounds"])
+        g("resilience_drained", "1 when the run ended by drain").set(
+            int(res["drained"]))
+        if self.paged:
+            for r, a in enumerate(self.alloc.pools):
+                ps = a.stats()
+                g("kv_pages_in_use", "pool pages held, per replica").set(
+                    ps["in_use"], replica=r)
+                g("kv_pages_free", "pool pages free, per replica").set(
+                    ps["free"], replica=r)
+                g("kv_pages_peak", "peak pool pages held").set(
+                    ps["peak_in_use"], replica=r)
+                g("kv_pool_fragmentation",
+                  "free-list discontiguity, 0..1").set(
+                    ps["fragmentation"], replica=r)
+                g("kv_cow_copies", "copy-on-write page copies").set(
+                    ps["cow_copies"], replica=r)
+            g("kv_pages_allocated",
+              "fresh pages allocated (incl. COW copies)").set(
+                self.pages_allocated)
+            g("kv_pages_leaked",
+              "pages held past retirement, net of prefix cache").set(
+                stats["pages"]["leaked"])
+        if self.prefixes is not None:
+            for r, p in enumerate(self.prefixes):
+                ps = p.stats()
+                g("prefix_hits", "prefix-cache hits, per replica").set(
+                    ps["hits"], replica=r)
+                g("prefix_misses", "prefix-cache misses").set(
+                    ps["misses"], replica=r)
+                g("prefix_hit_tokens",
+                  "prompt tokens served from cached prefixes").set(
+                    ps["hit_tokens"], replica=r)
+                g("prefix_entries", "live prefix-index entries").set(
+                    ps["entries"], replica=r)
+                g("prefix_pages_held",
+                  "pool pages the index keeps alive").set(
+                    ps["pages_held"], replica=r)
+        if self._plan is not None:
+            g("mesh_data_replicas", "DP replica groups").set(
+                self._plan.n_data)
+            g("mesh_model_shards", "TP shards per replica").set(
+                self._plan.n_model)
+        if self.speculate:
+            sp = stats["spec"]
+            g("spec_acceptance_rate",
+              "accepted / drafted over the run").set(sp["acceptance_rate"])
+            g("spec_emitted_per_target_forward",
+              "speculative figure of merit").set(
+                sp["emitted_per_target_forward"])
+        g("obs_trace_events", "timeline records ever emitted").set(
+            self.timeline.seq)
+        g("obs_trace_dropped",
+          "timeline records dropped by the ring buffer").set(
+            self.timeline.dropped)
 
     def _prefix_stats(self) -> dict:
         """Aggregate prefix-index stats: the single index's dict on one
@@ -1462,6 +1684,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "parallelism shards every matmul's output dim "
                          "(exact-TP: greedy streams stay bit-identical to "
                          "the single-device path). Empty = no mesh.")
+    ap.add_argument("--obs", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="telemetry registry + per-request tracing "
+                         "(--no-obs swaps in the no-op registry; the "
+                         "scheduler timeline stays on either way)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the end-of-run metrics snapshot to this "
+                         "path in Prometheus text format")
+    ap.add_argument("--trace-out", default="",
+                    help="write the scheduler timeline to this path as "
+                         "JSONL (meta head line + one record per event)")
+    ap.add_argument("--trace-cap", type=int, default=DEFAULT_CAP,
+                    help="ring-buffer cap on timeline records (0 = "
+                         "unbounded); the run FAILS if records are "
+                         "dropped, so raise this rather than letting a "
+                         "long smoke wrap")
+    ap.add_argument("--jax-profile", default="",
+                    help="capture a jax.profiler trace into this "
+                         "directory, gated around --profile-ticks decode "
+                         "ticks")
+    ap.add_argument("--profile-ticks", type=int, default=8,
+                    help="decode ticks the --jax-profile trace spans")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0,
@@ -1557,7 +1801,8 @@ def main(argv=None):
             for i in range(args.requests)
         ]
 
-    def make_server(*, inject=None, guard=None, max_wall_s=0.0):
+    def make_server(*, inject=None, guard=None, max_wall_s=0.0, obs=None,
+                    profile=None):
         return BatchedServer(
             model, params, args.batch,
             args.shared_prefix + max(plens) + args.gen + 8,
@@ -1573,23 +1818,38 @@ def main(argv=None):
             growth_headroom=args.growth_headroom,
             preemption=args.preemption, spec_floor=args.spec_floor,
             spec_window=args.spec_window, inject=inject, guard=guard,
-            max_wall_s=max_wall_s, mesh=mesh,
+            max_wall_s=max_wall_s, mesh=mesh, obs=obs,
+            trace_cap=args.trace_cap, profile=profile,
         )
 
     greedy = args.temperature <= 0.0
     ref_out = None
     if args.inject and greedy:
         # clean reference first: the injected run must reproduce these
-        # streams bit-exactly despite forced preemptions/faults
+        # streams bit-exactly despite forced preemptions/faults. It runs
+        # with telemetry DISABLED, so the stream comparison below also
+        # certifies that the enabled registry never perturbs serving.
         ref_reqs = make_reqs()
-        make_server().run(ref_reqs)
+        make_server(obs=Observability.disabled()).run(ref_reqs)
         ref_out = {r.rid: list(r.out) for r in ref_reqs}
+
+    if args.obs:
+        obs = Observability(
+            trace_cap=args.trace_cap,
+            const_labels={"family": cfg.family,
+                          "engine": args.engine if args.bits else "fp"},
+        )
+    else:
+        obs = Observability.disabled(trace_cap=args.trace_cap)
+    profile = (JaxProfile(args.jax_profile, ticks=args.profile_ticks)
+               if args.jax_profile else None)
 
     guard = PreemptionGuard().install()
     try:
         reqs = make_reqs()
         server = make_server(inject=args.inject or None, guard=guard,
-                             max_wall_s=args.max_wall_s)
+                             max_wall_s=args.max_wall_s, obs=obs,
+                             profile=profile)
         stats = server.run(reqs)
     finally:
         guard.uninstall()
@@ -1597,6 +1857,26 @@ def main(argv=None):
     stats["weight_bytes_per_token"] = w_bytes
     stats["engine"] = args.engine if args.bits else "fp"
     print(f"[serve] {stats}")
+    # telemetry artifacts are written BEFORE the FAIL gates so a failing
+    # smoke still leaves its metrics/trace behind for diagnosis
+    if args.metrics_out:
+        obs.dump_metrics(args.metrics_out)
+        print(f"[serve] metrics -> {args.metrics_out}")
+    if args.trace_out:
+        n = obs.dump_trace(args.trace_out)
+        print(f"[serve] timeline -> {args.trace_out} ({n} records)")
+    req_sum = server.tracer.summary()
+    if req_sum.get("ttft_s"):
+        print(f"[serve] ttft p50={req_sum['ttft_s']['p50'] * 1e3:.1f}ms "
+              f"p95={req_sum['ttft_s']['p95'] * 1e3:.1f}ms | "
+              f"tpot p50={req_sum.get('tpot_s', {}).get('p50', 0) * 1e3:.1f}"
+              f"ms | queue p50="
+              f"{req_sum.get('queue_wait_s', {}).get('p50', 0) * 1e3:.1f}ms")
+    if server.timeline.dropped:
+        print(f"[serve] FAIL: {server.timeline.dropped} timeline records "
+              f"dropped (ring cap {server.timeline.cap}; raise "
+              f"--trace-cap)")
+        return 1
     if mesh is not None and args.paged:
         per = stats["pages"].get("per_replica", [stats["pages"]])
         for r, ps in enumerate(per):

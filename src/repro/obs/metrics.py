@@ -1,0 +1,440 @@
+"""Dependency-free metrics registry for the serving stack.
+
+One :class:`Registry` per server run holds counters, gauges and histograms
+(fixed log-spaced latency buckets), each optionally labeled — the serving
+stack labels by ``replica`` (DP imbalance must be visible per replica),
+and the registry itself carries constant labels (``family``, ``engine``)
+stamped onto every exported series. The registry absorbs the ad-hoc stat
+dicts the stack already produces (``PageAllocator.stats()``,
+``PrefixIndex.stats()``, spec acceptance, resilience counters,
+``FaultInjector.summary()``) behind two uniform read paths:
+
+* :meth:`Registry.snapshot` — a plain nested dict for programmatic
+  consumers (the stats builder, the bench, tests), and
+* :meth:`Registry.to_prometheus` — the Prometheus text exposition format
+  for scraping/files (``--metrics-out``), round-trippable through
+  :func:`parse_prometheus` (which the CI smoke uses to assert the file
+  actually parses).
+
+Telemetry must never perturb serving: every operation here is a host-side
+dict update, and :class:`NullRegistry` is a drop-in no-op with the same
+API — the serving tests pin that greedy streams and compile counts are
+bit-identical between the two.
+
+A process-wide :func:`global_registry` exists for instrumentation that
+has no server handle in scope (the kernel autotuner's cache hit/miss and
+trial counters); exporters merge it in so one ``--metrics-out`` file
+carries both.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+import threading
+
+# Fixed log-spaced latency buckets (seconds): 100 us doubling to ~52 s.
+# Every histogram in the serving stack shares them so TTFT/TPOT/step-time
+# distributions are comparable across runs and mergeable across replicas.
+DEFAULT_TIME_BUCKETS: tuple[float, ...] = tuple(
+    1e-4 * 2 ** i for i in range(20)
+)
+
+_NAME_RE = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+
+def _labelkey(labels: dict) -> tuple:
+    return tuple(sorted(labels.items()))
+
+
+def _fmt_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(
+        f'{k}="{_escape(str(v))}"' for k, v in sorted(labels.items())
+    )
+    return "{" + inner + "}"
+
+
+def _escape(v: str) -> str:
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _fmt_value(v: float) -> str:
+    if v == math.inf:
+        return "+Inf"
+    f = float(v)
+    return repr(int(f)) if f == int(f) else repr(f)
+
+
+class _Family:
+    """One named metric family; children are keyed by their label set."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = ""):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"invalid metric name {name!r}")
+        self.name = name
+        self.help = help
+        self._children: dict[tuple, object] = {}
+
+    def _child(self, labels: dict):
+        key = _labelkey(labels)
+        if key not in self._children:
+            self._children[key] = self._new_child()
+        return self._children[key]
+
+    def series(self) -> list[tuple[dict, object]]:
+        return [(dict(k), v) for k, v in sorted(self._children.items())]
+
+
+class Counter(_Family):
+    """Monotonically increasing count. ``inc(n, **labels)``."""
+
+    kind = "counter"
+
+    def _new_child(self):
+        return 0.0
+
+    def inc(self, n: float = 1, **labels) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name} cannot decrease by {n}")
+        key = _labelkey(labels)
+        self._children[key] = self._children.get(key, 0.0) + n
+
+    def value(self, **labels) -> float:
+        return self._children.get(_labelkey(labels), 0.0)
+
+    def total(self) -> float:
+        """Sum over every label set (the aggregate of a labeled family)."""
+        return sum(self._children.values())
+
+
+class Gauge(_Family):
+    """Point-in-time value. ``set(v, **labels)``."""
+
+    kind = "gauge"
+
+    def _new_child(self):
+        return 0.0
+
+    def set(self, v: float, **labels) -> None:
+        self._children[_labelkey(labels)] = float(v)
+
+    def inc(self, n: float = 1, **labels) -> None:
+        key = _labelkey(labels)
+        self._children[key] = self._children.get(key, 0.0) + n
+
+    def value(self, **labels) -> float:
+        return self._children.get(_labelkey(labels), 0.0)
+
+    def total(self) -> float:
+        return sum(self._children.values())
+
+
+class _HistValue:
+    __slots__ = ("counts", "sum", "count")
+
+    def __init__(self, n_buckets: int):
+        self.counts = [0] * n_buckets  # cumulative at export, raw here
+        self.sum = 0.0
+        self.count = 0
+
+
+class Histogram(_Family):
+    """Bucketed distribution over the shared log-spaced time buckets.
+
+    ``observe(v, **labels)`` files ``v`` into its (non-cumulative) bucket;
+    export produces the Prometheus cumulative ``_bucket{le=...}`` series
+    plus ``_sum``/``_count``. :meth:`quantile` gives a bucket-resolution
+    estimate (exact per-request percentiles come from the tracer, which
+    keeps raw timestamps — histograms are the mergeable aggregate)."""
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 buckets: tuple[float, ...] = DEFAULT_TIME_BUCKETS):
+        super().__init__(name, help)
+        if list(buckets) != sorted(buckets) or len(set(buckets)) != len(
+                buckets):
+            raise ValueError(f"histogram {name}: buckets must be sorted "
+                             f"and distinct")
+        self.buckets = tuple(float(b) for b in buckets)
+
+    def _new_child(self):
+        return _HistValue(len(self.buckets) + 1)  # +1: the +Inf bucket
+
+    def observe(self, v: float, **labels) -> None:
+        h = self._child(labels)
+        i = len(self.buckets)
+        for j, b in enumerate(self.buckets):
+            if v <= b:
+                i = j
+                break
+        h.counts[i] += 1
+        h.sum += v
+        h.count += 1
+
+    def quantile(self, q: float, **labels) -> float:
+        """Bucket-upper-bound estimate of the ``q`` quantile (0..1)."""
+        h = self._children.get(_labelkey(labels))
+        if h is None or h.count == 0:
+            return 0.0
+        rank = q * h.count
+        seen = 0
+        for j, c in enumerate(h.counts):
+            seen += c
+            if seen >= rank and c:
+                return (self.buckets[j] if j < len(self.buckets)
+                        else self.buckets[-1])
+        return self.buckets[-1]
+
+
+class Registry:
+    """Named metric families with get-or-create accessors.
+
+    ``const_labels`` are stamped onto every series at export (and into
+    :meth:`snapshot`), so one scrape distinguishes the model family and
+    engine without every instrumentation site threading them through."""
+
+    def __init__(self, const_labels: dict | None = None):
+        self.const_labels = dict(const_labels or {})
+        self._families: dict[str, _Family] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, cls, name: str, help: str, **kw):
+        with self._lock:
+            fam = self._families.get(name)
+            if fam is None:
+                fam = cls(name, help, **kw)
+                self._families[name] = fam
+            elif not isinstance(fam, cls):
+                raise TypeError(
+                    f"metric {name} already registered as {fam.kind}")
+            return fam
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",
+                  buckets: tuple[float, ...] = DEFAULT_TIME_BUCKETS
+                  ) -> Histogram:
+        return self._get(Histogram, name, help, buckets=buckets)
+
+    # -- reads ---------------------------------------------------------------
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    def value(self, name: str, **labels) -> float:
+        """One series' value (0.0 for an unknown name/label set)."""
+        fam = self._families.get(name)
+        if fam is None or isinstance(fam, Histogram):
+            return 0.0
+        return fam.value(**labels)
+
+    def total(self, name: str) -> float:
+        """Sum of a family over all label sets (0.0 when unknown)."""
+        fam = self._families.get(name)
+        if fam is None or isinstance(fam, Histogram):
+            return 0.0
+        return fam.total()
+
+    def snapshot(self, include_global: bool = True) -> dict:
+        """Plain-dict view of every family — the one read path the stats
+        builder, the bench and the tests share. Histogram entries carry
+        the shared bucket edges plus per-series (non-cumulative) counts,
+        sum and count."""
+        out: dict = {"const_labels": dict(self.const_labels), "metrics": {}}
+        regs = [self]
+        if include_global and self is not _global():
+            regs.append(_global())
+        for reg in regs:
+            for name, fam in sorted(reg._families.items()):
+                if isinstance(fam, Histogram):
+                    out["metrics"][name] = {
+                        "type": fam.kind, "help": fam.help,
+                        "buckets": list(fam.buckets),
+                        "series": [
+                            {"labels": lbl, "counts": list(h.counts),
+                             "sum": h.sum, "count": h.count}
+                            for lbl, h in fam.series()
+                        ],
+                    }
+                else:
+                    out["metrics"][name] = {
+                        "type": fam.kind, "help": fam.help,
+                        "series": [{"labels": lbl, "value": v}
+                                   for lbl, v in fam.series()],
+                    }
+        return out
+
+    def to_prometheus(self, include_global: bool = True) -> str:
+        """Prometheus text exposition format (version 0.0.4)."""
+        lines: list[str] = []
+        regs = [self]
+        if include_global and self is not _global():
+            regs.append(_global())
+        seen: set[str] = set()
+        for reg in regs:
+            for name, fam in sorted(reg._families.items()):
+                if name in seen:
+                    continue
+                seen.add(name)
+                if fam.help:
+                    lines.append(f"# HELP {name} {fam.help}")
+                lines.append(f"# TYPE {name} {fam.kind}")
+                for lbl, v in fam.series():
+                    labels = {**self.const_labels, **lbl}
+                    if isinstance(fam, Histogram):
+                        cum = 0
+                        for j, b in enumerate((*fam.buckets, math.inf)):
+                            cum += v.counts[j]
+                            lines.append(
+                                f"{name}_bucket"
+                                f"{_fmt_labels({**labels, 'le': _fmt_value(b)})}"
+                                f" {cum}")
+                        lines.append(f"{name}_sum{_fmt_labels(labels)} "
+                                     f"{_fmt_value(v.sum)}")
+                        lines.append(f"{name}_count{_fmt_labels(labels)} "
+                                     f"{v.count}")
+                    else:
+                        lines.append(
+                            f"{name}{_fmt_labels(labels)} {_fmt_value(v)}")
+        return "\n".join(lines) + "\n"
+
+    def dump(self, path) -> str:
+        """Write the Prometheus snapshot to ``path``; returns the text."""
+        text = self.to_prometheus()
+        with open(path, "w") as f:
+            f.write(text)
+        return text
+
+
+class NullRegistry(Registry):
+    """No-op registry with the full :class:`Registry` API.
+
+    Instrumented code calls it unconditionally; nothing is recorded. The
+    serving bit-identity test runs the same workload against this and the
+    real registry and asserts identical streams and compile counts."""
+
+    def __init__(self):
+        super().__init__()
+        self._null_counter = _NullMetric()
+
+    @property
+    def enabled(self) -> bool:
+        return False
+
+    def counter(self, name: str, help: str = ""):
+        return self._null_counter
+
+    def gauge(self, name: str, help: str = ""):
+        return self._null_counter
+
+    def histogram(self, name: str, help: str = "", buckets=None):
+        return self._null_counter
+
+    def snapshot(self, include_global: bool = True) -> dict:
+        return {"const_labels": {}, "metrics": {}}
+
+    def to_prometheus(self, include_global: bool = True) -> str:
+        return ""
+
+
+class _NullMetric:
+    kind = "null"
+    buckets = DEFAULT_TIME_BUCKETS
+
+    def inc(self, n=1, **labels):
+        pass
+
+    def set(self, v, **labels):
+        pass
+
+    def observe(self, v, **labels):
+        pass
+
+    def value(self, **labels):
+        return 0.0
+
+    def total(self):
+        return 0.0
+
+    def quantile(self, q, **labels):
+        return 0.0
+
+    def series(self):
+        return []
+
+
+_GLOBAL: Registry | None = None
+
+
+def _global() -> Registry:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = Registry()
+    return _GLOBAL
+
+
+def global_registry() -> Registry:
+    """Process-wide registry for instrumentation with no server handle in
+    scope (autotune cache hits/misses, trial counts). Merged into every
+    per-run export so one ``--metrics-out`` file carries both."""
+    return _global()
+
+
+def reset_global_registry() -> None:
+    """Drop the process-wide registry (test isolation)."""
+    global _GLOBAL
+    _GLOBAL = None
+
+
+# ---------------------------------------------------------------------------
+# Prometheus text parsing (CI: "the exported file must actually parse")
+# ---------------------------------------------------------------------------
+
+_SAMPLE_RE = re.compile(
+    r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
+    r"(?:\{(?P<labels>[^}]*)\})?"
+    r"\s+(?P<value>[^\s]+)\s*$"
+)
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
+
+
+def parse_prometheus(text: str) -> dict:
+    """Parse Prometheus exposition text into ``{name: [(labels, value)]}``.
+
+    Strict on sample lines: anything that is neither a comment, blank, nor
+    a well-formed ``name{labels} value`` line raises ValueError — this is
+    the CI assertion that ``--metrics-out`` produced a scrapeable file."""
+    out: dict[str, list[tuple[dict, float]]] = {}
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip() or line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if m is None:
+            raise ValueError(f"unparseable metrics line {ln}: {line!r}")
+        labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+        raw = m.group("value")
+        value = math.inf if raw == "+Inf" else float(raw)
+        out.setdefault(m.group("name"), []).append((labels, value))
+    return out
+
+
+def summarize_series(snapshot: dict) -> str:
+    """One-line-per-family human summary of a snapshot (debug helper)."""
+    lines = []
+    for name, fam in snapshot.get("metrics", {}).items():
+        if fam["type"] == "histogram":
+            n = sum(s["count"] for s in fam["series"])
+            lines.append(f"{name}: histogram n={n}")
+        else:
+            lines.append(f"{name}: {json.dumps([s['value'] for s in fam['series']])}")
+    return "\n".join(lines)

@@ -1,0 +1,272 @@
+"""Per-request lifecycle tracing for the serving stack.
+
+Every request moves through ``queued -> admitted -> prefill(chunks) ->
+decode/verify rounds -> retired | preempted (-> replay -> ...)``. The
+:class:`Tracer` records one :class:`Span` per stage transition with
+monotonic timestamps, so the operational numbers the paper's deployment
+story needs fall out per request — TTFT (queued to first token), TPOT
+(steady-state seconds per output token), queue wait, preemption/replay
+overhead — plus per-request attribution of pages reserved and
+prefix-cache hit tokens.
+
+Span invariants (pinned by tests/test_obs.py):
+
+* spans of one request are time-ordered (monotone start AND end times),
+* the emitted-token counts over all spans sum to exactly ``len(out)``
+  (every emitted token is attributed to the prefill wave, decode tick or
+  verify round that produced it — no token is counted twice or lost),
+* TTFT <= total latency; a preempted-and-restored request carries a
+  ``replay`` span between its ``preempt`` and the prefill that restored
+  it.
+
+At retirement :meth:`Tracer.retire` folds the request's timings into the
+registry histograms (``serve_ttft_seconds`` etc.), so the mergeable
+aggregate and the exact per-request record come from one source.
+:class:`NullTracer` is the no-op drop-in — tracing must never perturb
+serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+def now() -> float:
+    """Monotonic timestamp — span arithmetic must survive clock steps."""
+    return time.monotonic()
+
+
+@dataclasses.dataclass
+class Span:
+    kind: str           # queued|admitted|prefill|decode|verify|preempt|
+    #                     replay|retired
+    t0: float
+    t1: float
+    emitted: int = 0    # tokens EMITTED by this span (sums to len(out))
+    fed: int = 0        # prompt/replay tokens fed through prefill
+    drafted: int = 0    # verify rounds: draft tokens proposed
+    accepted: int = 0   # verify rounds: draft tokens that survived
+
+    def as_dict(self) -> dict:
+        d = {"kind": self.kind, "t0": self.t0, "t1": self.t1}
+        for k in ("emitted", "fed", "drafted", "accepted"):
+            v = getattr(self, k)
+            if v:
+                d[k] = v
+        return d
+
+
+class _Req:
+    __slots__ = ("rid", "spans", "queued_t", "admitted_t", "retired_t",
+                 "first_emit_t", "last_emit_t", "emitted", "status",
+                 "replica", "prefix_hit_tokens", "pages_reserved",
+                 "preemptions", "replay_tokens")
+
+    def __init__(self, rid: int, t: float):
+        self.rid = rid
+        self.spans: list[Span] = [Span("queued", t, t)]
+        self.queued_t = t
+        self.admitted_t: float | None = None
+        self.retired_t: float | None = None
+        self.first_emit_t: float | None = None
+        self.last_emit_t: float | None = None
+        self.emitted = 0
+        self.status = "queued"
+        self.replica = 0
+        self.prefix_hit_tokens = 0
+        self.pages_reserved = 0
+        self.preemptions = 0
+        self.replay_tokens = 0
+
+
+class Tracer:
+    """Request-lifecycle recorder; one method call per server event."""
+
+    def __init__(self):
+        self._reqs: dict[int, _Req] = {}
+
+    @property
+    def enabled(self) -> bool:
+        return True
+
+    def _req(self, rid: int) -> _Req:
+        r = self._reqs.get(rid)
+        if r is None:
+            r = self._reqs[rid] = _Req(rid, now())
+        return r
+
+    # -- lifecycle events ----------------------------------------------------
+
+    def queued(self, rid: int) -> None:
+        self._req(rid)
+
+    def admitted(self, rid: int, *, replica: int = 0,
+                 prefix_hit_tokens: int = 0, pages: int = 0) -> None:
+        r = self._req(rid)
+        t = now()
+        if r.admitted_t is None:  # first admission ends the queue wait
+            r.admitted_t = t
+            r.prefix_hit_tokens = prefix_hit_tokens
+        r.replica = replica
+        r.pages_reserved = max(r.pages_reserved, pages)
+        r.status = "active"
+        r.spans.append(Span("admitted", t, t))
+
+    def span(self, rid: int, kind: str, t0: float, t1: float, *,
+             emitted: int = 0, fed: int = 0, drafted: int = 0,
+             accepted: int = 0) -> None:
+        """One prefill chunk / decode tick / verify round for ``rid``."""
+        r = self._req(rid)
+        r.spans.append(Span(kind, t0, t1, emitted=emitted, fed=fed,
+                            drafted=drafted, accepted=accepted))
+        r.emitted += emitted
+
+    def emit(self, rid: int) -> None:
+        """One token crossed to the caller (exact emission timestamp —
+        span ends are wave-granular, this is token-granular)."""
+        r = self._req(rid)
+        t = now()
+        if r.first_emit_t is None:
+            r.first_emit_t = t
+        r.last_emit_t = t
+
+    def preempted(self, rid: int) -> None:
+        r = self._req(rid)
+        t = now()
+        r.preemptions += 1
+        r.status = "preempted"
+        r.spans.append(Span("preempt", t, t))
+
+    def replay(self, rid: int, tokens: int) -> None:
+        """Re-admission of a preempted request: ``tokens`` prompt+emitted
+        tokens will be re-prefilled to restore it."""
+        r = self._req(rid)
+        t = now()
+        r.replay_tokens += tokens
+        r.spans.append(Span("replay", t, t, fed=tokens))
+
+    def retire(self, rid: int, status: str, registry=None) -> None:
+        """Request finished (``ok``) or drained (``preempted``): close
+        the trace and fold its timings into the registry histograms."""
+        r = self._req(rid)
+        t = now()
+        r.retired_t = t
+        r.status = status
+        r.spans.append(Span("retired", t, t))
+        if registry is None or not registry.enabled:
+            return
+        lbl = {"replica": r.replica}
+        if r.admitted_t is not None:
+            registry.histogram(
+                "serve_queue_wait_seconds",
+                "admission wait: queued to first admission",
+            ).observe(r.admitted_t - r.queued_t, **lbl)
+        if r.first_emit_t is not None:
+            registry.histogram(
+                "serve_ttft_seconds",
+                "time to first token: queued to first emission",
+            ).observe(r.first_emit_t - r.queued_t, **lbl)
+        if (r.last_emit_t is not None and r.first_emit_t is not None
+                and r.emitted > 1):
+            registry.histogram(
+                "serve_tpot_seconds",
+                "steady-state seconds per output token",
+            ).observe((r.last_emit_t - r.first_emit_t) / (r.emitted - 1),
+                      **lbl)
+        registry.histogram(
+            "serve_request_latency_seconds",
+            "queued to retirement",
+        ).observe(t - r.queued_t, **lbl)
+
+    # -- reads ---------------------------------------------------------------
+
+    def request(self, rid: int) -> dict | None:
+        r = self._reqs.get(rid)
+        return None if r is None else self._describe(r)
+
+    def _describe(self, r: _Req) -> dict:
+        d = {
+            "rid": r.rid, "status": r.status, "replica": r.replica,
+            "emitted": r.emitted, "preemptions": r.preemptions,
+            "replay_tokens": r.replay_tokens,
+            "prefix_hit_tokens": r.prefix_hit_tokens,
+            "pages_reserved": r.pages_reserved,
+            "spans": [s.as_dict() for s in r.spans],
+        }
+        if r.admitted_t is not None:
+            d["queue_wait_s"] = r.admitted_t - r.queued_t
+        if r.first_emit_t is not None:
+            d["ttft_s"] = r.first_emit_t - r.queued_t
+        if (r.last_emit_t is not None and r.first_emit_t is not None
+                and r.emitted > 1):
+            d["tpot_s"] = ((r.last_emit_t - r.first_emit_t)
+                           / (r.emitted - 1))
+        if r.retired_t is not None:
+            d["latency_s"] = r.retired_t - r.queued_t
+        return d
+
+    def requests(self) -> list[dict]:
+        return [self._describe(r) for r in self._reqs.values()]
+
+    def summary(self) -> dict:
+        """Aggregate percentiles over retired requests — exact (from raw
+        timestamps), unlike the bucket-resolution registry histograms."""
+        done = [self._describe(r) for r in self._reqs.values()
+                if r.retired_t is not None]
+        out = {"requests": len(done)}
+        for key in ("queue_wait_s", "ttft_s", "tpot_s", "latency_s"):
+            vals = sorted(d[key] for d in done if key in d)
+            if vals:
+                out[key] = {
+                    "n": len(vals),
+                    "mean": sum(vals) / len(vals),
+                    "p50": _pct(vals, 0.50),
+                    "p95": _pct(vals, 0.95),
+                    "max": vals[-1],
+                }
+        return out
+
+
+def _pct(sorted_vals: list[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(int(q * len(sorted_vals)), len(sorted_vals) - 1)
+    return sorted_vals[i]
+
+
+class NullTracer(Tracer):
+    """No-op tracer with the full :class:`Tracer` API."""
+
+    @property
+    def enabled(self) -> bool:
+        return False
+
+    def queued(self, rid):
+        pass
+
+    def admitted(self, rid, **kw):
+        pass
+
+    def span(self, rid, kind, t0, t1, **kw):
+        pass
+
+    def emit(self, rid):
+        pass
+
+    def preempted(self, rid):
+        pass
+
+    def replay(self, rid, tokens):
+        pass
+
+    def retire(self, rid, status, registry=None):
+        pass
+
+    def request(self, rid):
+        return None
+
+    def requests(self):
+        return []
+
+    def summary(self):
+        return {}

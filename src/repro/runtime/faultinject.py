@@ -89,11 +89,12 @@ class FaultInjector:
     """Seeded, plan-driven fault source. See module docstring for syntax."""
 
     def __init__(self, plan: str = "", *, seed: int = 0,
-                 slow_s: float = 0.01):
+                 slow_s: float = 0.01, registry=None):
         self.entries = parse_plan(plan)
         self.slow_s = slow_s
         self.tick = -1          # set by the server before each decode round
         self.fired: list[str] = []
+        self.registry = registry  # optional obs registry (set by the server)
         self._rng = np.random.default_rng(seed)
 
     def set_tick(self, tick: int) -> None:
@@ -113,6 +114,10 @@ class FaultInjector:
             elif not (self._rng.random() < e.prob):
                 continue
             self.fired.append(f"{e.spec()}:tick{self.tick}")
+            if self.registry is not None:
+                self.registry.counter(
+                    "faults_injected_total", "chaos faults fired, by kind",
+                ).inc(kind=kind)
             return True
         return False
 

@@ -65,13 +65,21 @@ class SchedulerStall(RuntimeError):
     text alone. Reachable by design with ``--page-growth
     --no-preemption`` when the pool exhausts and nothing can retire."""
 
-    def __init__(self, slots: list[SlotDiag], free_pages: int | None = None):
+    def __init__(self, slots: list[SlotDiag], free_pages: int | None = None,
+                 recent: list[dict] | None = None):
         self.slots = slots
         self.free_pages = free_pages
+        self.recent = recent or []  # newest scheduler-timeline records
         pool = "" if free_pages is None else f" ({free_pages} pages free)"
+        tail = ""
+        if self.recent:
+            tail = " | recent: " + ", ".join(
+                f"t{r.get('tick', '?')}:{r.get('kind', '?')}"
+                for r in self.recent
+            )
         super().__init__(
             "scheduler stalled with live slots" + pool + ": "
-            + "; ".join(d.describe() for d in slots)
+            + "; ".join(d.describe() for d in slots) + tail
         )
 
 

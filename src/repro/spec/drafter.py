@@ -45,7 +45,7 @@ class Drafter:
 
     def __init__(self, model, params, slots: int, max_len: int, *,
                  page_size: int, width: int, num_pages: int | None = None,
-                 plan=None):
+                 plan=None, registry=None):
         # under a mesh plan (runtime.sharding.MeshPlan) the draft pool is
         # split per DP replica exactly like the target's, and the packed
         # draft weights shard under the same exact-TP rules
@@ -76,6 +76,7 @@ class Drafter:
         self._snap: dict = {}
         self._round: dict[int, tuple[int, int]] = {}  # slot -> (C, kk)
         self.forwards = 0
+        self.registry = registry  # optional obs registry (set by the server)
 
         if plan is not None:
             self._cache_shd = plan.cache_shardings(self.cache)
@@ -118,6 +119,15 @@ class Drafter:
         self._prefill = jit(_prefill_fn)
 
     # -- bookkeeping --------------------------------------------------------
+
+    def _fwd(self, kind: str) -> None:
+        """One draft-model forward of ``kind`` (prefill|chunk|decode)."""
+        self.forwards += 1
+        if self.registry is not None:
+            self.registry.counter(
+                "spec_draft_forwards_total",
+                "draft-model forwards, by step kind",
+            ).inc(kind=kind)
 
     def compiles(self) -> dict:
         return {
@@ -180,7 +190,7 @@ class Drafter:
             self._put(fresh), self._put(np.zeros((self.slots,), np.int32)),
             self.cache,
         )
-        self.forwards += 1
+        self._fwd("prefill")
         for slot, fed in fed_after.items():
             self.valid[slot] = fed
 
@@ -215,7 +225,7 @@ class Drafter:
             self.params, self._put(tokens), self._put(lengths),
             self.cache,
         )
-        self.forwards += 1
+        self._fwd("chunk")
         # snapshot recurrent state at exactly the committed watermark:
         # restore-on-rejection re-enters the next round from here, so the
         # catch-up width stays <= accepted + 1 <= width
@@ -243,7 +253,7 @@ class Drafter:
                 self.params, self._put(feed), self.cache,
                 active=self._put(active),
             )
-            self.forwards += 1
+            self._fwd("decode")
             rows = np.asarray(jnp.argmax(logits, -1) if greedy else logits)
             for slot, _, _ in live:
                 drafts[slot].append(self._pick(slot, rows[slot, 0], greedy,
@@ -287,7 +297,7 @@ class Drafter:
                 self.params, self._put(tokens), self._put(lengths),
                 self.cache,
             )
-            self.forwards += 1
+            self._fwd("chunk")
 
     def _pick(self, slot, row, greedy, sampling, rngs, qdists) -> int:
         """One draft token from ``row``: the device-argmaxed token id in

@@ -77,11 +77,12 @@ class Verifier:
     """Jitted multi-token scoring + leakage-free rollback for one cache."""
 
     def __init__(self, model, params, recurrent_keys: list[str], plan=None,
-                 cache_shd=None):
+                 cache_shd=None, registry=None):
         self.params = params
         self._recurrent = list(recurrent_keys)
         self._plan = plan
         self._cache_shd = cache_shd
+        self.registry = registry  # optional obs registry (set by the server)
 
         # private closure: jit caches are keyed by the wrapped function, so
         # wrapping model.verify_step directly would share a compile count
@@ -126,6 +127,11 @@ class Verifier:
         logits, cache = self._verify(
             self.params, self._put(tokens), self._put(lengths), cache
         )
+        if self.registry is not None:
+            self.registry.counter(
+                "spec_verify_forwards_total",
+                "target-model verify forwards (incl. rollback recompute)",
+            ).inc()
         scores = np.asarray(jnp.argmax(logits, -1) if greedy else logits)
         return scores, cache, snap
 
@@ -156,6 +162,12 @@ class Verifier:
             _, cache = self._verify(
                 self.params, self._put(tokens), self._put(relens), cache
             )
+            if self.registry is not None:
+                self.registry.counter(
+                    "spec_verify_forwards_total",
+                    "target-model verify forwards (incl. rollback "
+                    "recompute)",
+                ).inc()
         else:
             cache = dict(cache)
             cache["len"] = rewind(
