@@ -13,8 +13,10 @@ from repro.kvcache.paged import (
     logical_view,
     paged_write,
     pages_for,
+    read_pages,
     restore_rows,
     rewind,
+    write_pages,
 )
 from repro.kvcache.prefix import PrefixIndex
 
@@ -27,6 +29,8 @@ __all__ = [
     "logical_view",
     "paged_write",
     "pages_for",
+    "read_pages",
     "restore_rows",
     "rewind",
+    "write_pages",
 ]

@@ -83,6 +83,32 @@ def copy_page(pool: jax.Array, src: int, dst: int) -> jax.Array:
     return pool.at[:, :, dst].set(pool[:, :, src])
 
 
+def read_pages(pool: jax.Array, ids) -> jax.Array:
+    """Gather the contents of physical pages ``ids`` from a per-layer
+    page pool laid out ``(L, 2, P, page, ...)`` -> ``(L, 2, n, page, ...)``.
+
+    This is the spill path (preempt-to-disk): the scheduler snapshots a
+    victim's pages to the host store *before* freeing them, so a later
+    re-admission can reload contents instead of replaying the sequence
+    through prefill. Like :func:`copy_page` it runs on the admission path,
+    off the jitted hot loop. Shared (refcount > 1) pages read fine — the
+    snapshot is a copy, not a claim."""
+    idx = jnp.asarray(ids, jnp.int32)
+    return jnp.take(pool, idx, axis=2)
+
+
+def write_pages(pool: jax.Array, ids, values) -> jax.Array:
+    """Scatter page contents back into physical pages ``ids`` of a pool
+    laid out ``(L, 2, P, page, ...)`` (inverse of :func:`read_pages`).
+
+    Restore-side of the spill tier: the target pages must be exclusively
+    owned by the restoring slot (the scheduler allocates FRESH pages for a
+    restore and never maps them into the prefix index), so no shared page
+    is ever overwritten."""
+    idx = jnp.asarray(ids, jnp.int32)
+    return pool.at[:, :, idx].set(jnp.asarray(values, pool.dtype))
+
+
 def paged_write(
     kv_pages: jax.Array,   # (2, P, page, KV, hd)
     k: jax.Array,          # (B, S, KV, hd)

@@ -92,7 +92,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kvcache import PagePoolGroup, PrefixIndex, copy_page, pages_for
+from repro.kvcache import (PagePoolGroup, PrefixIndex, copy_page, pages_for,
+                           read_pages, write_pages)
 from repro.models.model import _RECURRENT_KEYS, reset_slots
 from repro.obs import DEFAULT_CAP, JaxProfile, Observability, compile_counts
 from repro.obs.trace import now as _now
@@ -130,6 +131,10 @@ class Request:
     preemptions: int = 0        # times this request was preempted
     draft_on: bool = False      # drafting decision, frozen at (re)admission
     acc: "AcceptanceWindow | None" = None  # trailing draft acceptance
+    spilled: bool = False       # pages live in the host spill store; restore
+    #                             reloads them instead of replay recompute
+    queued_t: float | None = None  # service submit time (tenant-queue entry
+    #                                starts the TTFT clock, not admission)
 
 
 def sample_token(
@@ -212,7 +217,9 @@ class BatchedServer:
                  spec_window: int = 16,
                  inject: "FaultInjector | str | None" = None,
                  guard: PreemptionGuard | None = None,
-                 max_wall_s: float = 0.0, mesh=None,
+                 max_wall_s: float = 0.0,
+                 spill_store=None, spill_threshold: int = 0,
+                 slo=None, mesh=None,
                  obs: Observability | None = None,
                  trace_cap: int = DEFAULT_CAP,
                  profile: JaxProfile | None = None):
@@ -261,6 +268,21 @@ class BatchedServer:
         self.preemptions = 0        # victim preemptions (pool pressure)
         self.replays = 0            # preempted requests re-admitted
         self.replay_tokens = 0      # tokens re-prefilled by those replays
+        # -- spill tier (preempt-to-disk, see repro.serve.spill) ------------
+        self.spill = spill_store
+        self.spill_threshold = spill_threshold
+        self.spills = 0             # preempted contexts spilled to the store
+        self.spill_restores = 0     # re-admissions restored by page reload
+        self.recompute_forwards = 0  # prefill waves that carried replay rows
+        if spill_store is not None and not paged:
+            raise ValueError("spill_store requires paged=True")
+        # -- SLO loop (repro.serve.slo): the controller owns the chunk ------
+        self.slo = slo
+        self.slo_adjustments = 0
+        if slo is not None:
+            self.prefill_chunk = slo.chunk
+            slo.spec_floor = slo.base_floor = spec_floor or slo.base_floor
+            self.spec_floor = slo.spec_floor
         self.peak_concurrency = 0   # most slots simultaneously live
         self.drained = False        # run ended via SIGTERM / wall-clock drain
         self._seq_counter = 0       # admission order for the growth exemption
@@ -687,7 +709,11 @@ class BatchedServer:
                 # resets) its growth-exemption seniority
                 req.seq_no = self._seq_counter
                 self._seq_counter += 1
-            if req.replay is not None:
+            if req.spilled:
+                # preempt-to-disk re-admission: reload page contents from
+                # the host store — no replay prefill recompute happens
+                self._restore_spill(i, req)
+            elif req.replay is not None:
                 self.replays += 1
                 self.replay_tokens += len(req.replay) - req.start_len
                 self.tracer.replay(req.rid,
@@ -741,7 +767,10 @@ class BatchedServer:
         admits more concurrent requests than full reservation."""
         seq = self._seq(req)
         rep = self._rep(i)
-        prefix = self._prefix_of(i)
+        # a spilled request restores by OVERWRITING its pages with store
+        # contents, so it must own every page exclusively: never retain
+        # shared prefix pages for it
+        prefix = None if req.spilled else self._prefix_of(i)
         np_need = pages_for(self._need_rows(req), self.page_size)
         if self.page_growth:
             goal = max(
@@ -855,6 +884,11 @@ class BatchedServer:
             self._table_dirty = True
         if self.drafter is not None:
             self.drafter.release(i)  # idempotent; usually already released
+        if self.spill is not None and req.spilled:
+            # defensive: an active request was restored (spilled cleared),
+            # but never leave a retired rid's file behind
+            self.spill.drop(req.rid)
+            req.spilled = False
         self.tracer.retire(req.rid, req.status, registry=self.registry)
         self.registry.counter(
             "serve_requests_total", "requests retired, by final status",
@@ -867,7 +901,15 @@ class BatchedServer:
         (shared prefix pages are never victim-released — they only lose
         this owner's reference, see ``PageAllocator.free``), invalidate
         its draft state, and requeue it at the FRONT of the pending queue
-        with a replay sequence that restores it exactly."""
+        with a replay sequence that restores it exactly.
+
+        With a spill store attached, an eligible victim's page contents
+        are snapshotted to the host FIRST (before the pages are freed):
+        re-admission then restores by page reload instead of replaying
+        the sequence through prefill. The replay sequence is still built
+        either way — it is the length/readiness contract the scheduler
+        reasons with, and the recompute fallback if the store is gone."""
+        req.spilled = self._maybe_spill(i, req)
         req.replay = replay_sequence(req.prompt, req.out)
         req.fed = 0
         req.dfed = 0
@@ -897,6 +939,71 @@ class BatchedServer:
         if self.prefixes is not None:
             for p in self.prefixes:
                 p.audit()
+
+    def _maybe_spill(self, i: int, req: Request) -> bool:
+        """Snapshot slot ``i``'s KV page contents (and recurrent state
+        rows) into the host spill store, if ``req`` is eligible: a spill
+        store is attached, the request is fully prefilled and decoding
+        (mid-prefill victims have nothing worth saving — their replay IS
+        the remaining prefill), and the context has at least
+        ``spill_threshold`` rows (short contexts replay cheaply). Must run
+        BEFORE the allocator frees the pages."""
+        if self.spill is None or not req.out:
+            return False
+        if req.fed < len(self._seq(req)):
+            return False
+        # rows the cache holds for a caught-up decoder == len(replay):
+        # prompt + emitted[:-1] (the final token is re-fed, not stored)
+        rows = len(req.prompt) + len(req.out) - 1
+        if rows < self.spill_threshold:
+            return False
+        ids = req.pages[: pages_for(rows, self.page_size)]
+        payload = {"rows": np.int32(rows)}
+        for key in ("pages", "shared_pages"):
+            if key in self.cache:
+                payload[f"pool.{key}"] = np.asarray(
+                    read_pages(self.cache[key], ids))
+        for key in self._recurrent:
+            payload[f"state.{key}"] = np.asarray(self.cache[key][:, i])
+        self.spill.spill(req.rid, payload)
+        self.spills += 1
+        self._tl("spill", rid=req.rid, rows=rows, pages=len(ids))
+        self.registry.counter(
+            "resilience_spills_total",
+            "preempted contexts spilled to the host store",
+        ).inc(replica=self._rep(i))
+        return True
+
+    def _restore_spill(self, i: int, req: Request) -> None:
+        """Reload a spilled context into slot ``i``'s freshly allocated
+        pages: page contents scatter back by physical id, recurrent state
+        rows reinstall, and the slot's fill length jumps straight to the
+        stored row count — the request is decode-ready without a single
+        replay prefill forward (the next decode step re-feeds ``out[-1]``
+        exactly as it would after any other wave)."""
+        payload = self.spill.restore(req.rid)
+        rows = int(payload["rows"])
+        ids = req.pages[: pages_for(rows, self.page_size)]
+        for key in ("pages", "shared_pages"):
+            if key in self.cache:
+                self.cache[key] = write_pages(self.cache[key], ids,
+                                              payload[f"pool.{key}"])
+        for key in self._recurrent:
+            self.cache[key] = self.cache[key].at[:, i].set(
+                jnp.asarray(payload[f"state.{key}"]))
+        self.cache["len"] = self.cache["len"].at[i].set(jnp.int32(rows))
+        req.fed = rows  # fully "prefilled": no wave will pick this row up
+        # the restored sequence is never re-walked by a prefill wave, so
+        # it can never be indexed — mark it so dedup does not wait on it
+        req.indexed = True
+        req.spilled = False
+        self.spill.drop(req.rid)
+        self.spill_restores += 1
+        self._tl("restore", rid=req.rid, rows=rows, pages=len(ids))
+        self.registry.counter(
+            "resilience_spill_restores_total",
+            "spilled contexts restored by page reload",
+        ).inc(replica=self._rep(i))
 
     def _preempt_one(self, rep: int = 0) -> Request | None:
         """Preempt the policy victim WITHIN replica ``rep`` (lowest
@@ -1004,6 +1111,10 @@ class BatchedServer:
                 if r is not None and r.fed < len(self._seq(r))]
         if not rows:
             return drafted
+        if any(r.replay is not None for _, r in rows):
+            # replay-restore recompute (spill-restored requests never
+            # enter a wave — the spill tier's whole point)
+            self.recompute_forwards += 1
         chunk = self.prefill_chunk or self.max_len
         sizes = {}
         for i, r in rows:
@@ -1307,6 +1418,34 @@ class BatchedServer:
             diags, self.alloc.free_pages if self.paged else None,
             recent=self.timeline.tail(8))
 
+    def _slo_tick(self) -> None:
+        """Close the SLO loop once per decode tick: hand the tracer's
+        token-granular TTFT/TPOT observations to the controller and apply
+        whatever it decides — a new chunked-prefill budget (greedy streams
+        are chunk-invariant, so retuning live never changes tokens) and/or
+        a raised speculative acceptance floor (live requests' trailing
+        windows pick it up immediately)."""
+        if self.slo is None:
+            return
+        for kind, seconds in self.tracer.drain_observations():
+            self.slo.observe(kind, seconds)
+        chunk, floor = self.slo.tick()
+        if chunk != self.prefill_chunk:
+            self.prefill_chunk = chunk
+            self.slo_adjustments += 1
+            self._tl("slo", chunk=chunk, floor=round(floor, 4))
+            if self.registry.enabled:
+                self.registry.gauge(
+                    "slo_prefill_chunk",
+                    "SLO-tuned chunked-prefill budget",
+                ).set(chunk)
+        if floor != self.spec_floor:
+            self.spec_floor = floor
+            self.slo_adjustments += 1
+            for r in self.active:
+                if r is not None and r.acc is not None:
+                    r.acc.floor = floor
+
     def _drain_due(self, t0: float) -> bool:
         if self.guard is not None and self.guard.requested:
             return True
@@ -1328,16 +1467,29 @@ class BatchedServer:
             self._retire(i, r, done)
         for r in self._pending:
             r.status = "preempted"
+            if r.spilled and self.spill is not None:
+                # a spilled-but-never-restored context: its file would
+                # orphan (zero spill files after a drain is an invariant)
+                self.spill.drop(r.rid)
+                r.spilled = False
         self._tl("drain", unserved=len(self._pending))
 
     def run(self, requests: list[Request],
-            on_token: Callable[[Request, int], None] | None = None) -> dict:
+            on_token: Callable[[Request, int], None] | None = None, *,
+            feed: Callable[[], list[Request]] | None = None,
+            idle_wait_s: float = 0.002) -> dict:
         """Serve ``requests`` to completion. ``on_token(request, token)``
-        streams each decoded token to the caller as it is sampled."""
+        streams each decoded token to the caller as it is sampled.
+
+        ``feed`` turns the batch loop into a SERVICE loop: it is polled
+        every scheduler iteration for newly admitted requests (the asyncio
+        front-end hands it ``FairScheduler.drain``), and an idle server
+        waits ``idle_wait_s`` instead of exiting — the run then ends only
+        through the drain path (SIGTERM guard or ``max_wall_s``)."""
         self._on_token = on_token
         self._pending = list(requests)
         for r in self._pending:
-            self.tracer.queued(r.rid)
+            self.tracer.queued(r.rid, r.queued_t)
         done: list[Request] = []
         steps = 0
         t0 = time.time()
@@ -1350,6 +1502,10 @@ class BatchedServer:
                     self.inject.set_tick(steps)
                 if self.profile is not None:
                     self.profile.on_tick(steps)
+                if feed is not None:
+                    for r in feed():
+                        self._pending.append(r)
+                        self.tracer.queued(r.rid, r.queued_t)
                 if self._drain_due(t0):
                     self._drain(done)
                     break
@@ -1376,6 +1532,7 @@ class BatchedServer:
                            else self.step())
                 if stepped:
                     steps += 1
+                    self._slo_tick()
                 if fed or stepped:
                     continue
                 if any(r is not None and r.done for r in self.active):
@@ -1384,6 +1541,11 @@ class BatchedServer:
                     raise self._stall()
                 if self._pending:
                     continue  # slots all free: next _fill_slots admits
+                if feed is not None:
+                    # service mode: idle is not done — wait for traffic
+                    # until the guard/wall-clock drain says stop
+                    time.sleep(idle_wait_s)
+                    continue
                 break
         finally:
             self._on_token = None
@@ -1422,7 +1584,20 @@ class BatchedServer:
             "preempted_requests": sum(1 for r in done
                                       if r.status == "preempted"),
             "unserved": len(self._pending),
+            "spills": self.spills,
+            "spill_restores": self.spill_restores,
+            "recompute_forwards": self.recompute_forwards,
         }
+        if self.spill is not None:
+            stats["resilience"]["spill_store"] = self.spill.stats()
+        if self.slo is not None:
+            stats["slo"] = {
+                "adjustments": self.slo_adjustments,
+                "chunk": self.prefill_chunk,
+                "spec_floor": self.spec_floor,
+                "ticks": self.slo.ticks,
+                "history": list(self.slo.history)[-32:],
+            }
         if self.inject is not None:
             stats["resilience"]["injected"] = self.inject.summary()
         if self.paged:
@@ -1673,6 +1848,28 @@ def build_parser() -> argparse.ArgumentParser:
                          "(see repro.runtime.faultinject); with greedy "
                          "sampling the CLI re-runs the workload cleanly "
                          "and FAILS unless streams match bit-exactly")
+    ap.add_argument("--spill-dir", default="",
+                    help="preempt-to-disk tier: spill eligible preempted "
+                         "contexts' KV pages to .npz files under this "
+                         "directory and restore by page reload instead of "
+                         "replay recompute (paged mode; empty = off)")
+    ap.add_argument("--spill-threshold", type=int, default=0,
+                    help="minimum cache rows (prompt + emitted - 1) a "
+                         "preempted context must hold to spill; shorter "
+                         "contexts replay through prefill instead")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="time-to-first-token target: when the trailing "
+                         "median exceeds it (and TPOT is healthy) the SLO "
+                         "controller GROWS the chunked-prefill budget "
+                         "(0 = no target)")
+    ap.add_argument("--slo-tpot-ms", type=float, default=0.0,
+                    help="inter-token latency target: violations SHRINK "
+                         "the chunked-prefill budget (decode interleaves "
+                         "more) and raise the spec degradation floor "
+                         "(0 = no target)")
+    ap.add_argument("--slo-chunk-min", type=int, default=8,
+                    help="smallest chunked-prefill budget the SLO "
+                         "controller may tune down to")
     ap.add_argument("--max-wall-s", type=float, default=0.0,
                     help="soft deadline: drain in-flight requests (partial "
                          "streams, status=preempted, zero leaks) and exit "
@@ -1716,9 +1913,11 @@ def build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def main(argv=None):
-    args = build_parser().parse_args(argv)
-
+def build_engine(args):
+    """Build the serving engine a parsed CLI namespace describes:
+    ``(cfg, model, params, draft_params, w_bytes, mesh)``. Shared by this
+    CLI and the service front-end (``repro.serve.app``), so both launch
+    the exact same quantized execution path."""
     from repro.configs import get_config
     from repro.core import QuantPolicy, restructure
     from repro.engine import decode_weight_bytes, weight_bytes
@@ -1780,6 +1979,12 @@ def main(argv=None):
         mesh = make_mesh((d, m), ("data", "model"))
         print(f"[serve] mesh: {d} data replica(s) x {m} model shard(s) "
               f"over {d * m} {jax.devices()[0].platform} device(s)")
+    return cfg, model, params, draft_params, w_bytes, mesh
+
+
+def main(argv=None):
+    args = build_parser().parse_args(argv)
+    cfg, model, params, draft_params, w_bytes, mesh = build_engine(args)
 
     if args.prompt_lens:
         plens = [int(x) for x in args.prompt_lens.split(",")]
@@ -1801,11 +2006,30 @@ def main(argv=None):
             for i in range(args.requests)
         ]
 
+    max_len = args.shared_prefix + max(plens) + args.gen + 8
+    slo_on = args.slo_ttft_ms > 0 or args.slo_tpot_ms > 0
+
+    def make_slo():
+        if not slo_on:
+            return None
+        from repro.serve import SLOController
+        return SLOController(
+            ttft_ms=args.slo_ttft_ms, tpot_ms=args.slo_tpot_ms,
+            chunk=args.prefill_chunk or max_len,
+            chunk_min=args.slo_chunk_min, chunk_max=max_len,
+            spec_floor=args.spec_floor,
+        )
+
+    def make_spill():
+        if not args.spill_dir:
+            return None
+        from repro.serve import SpillStore
+        return SpillStore(args.spill_dir)
+
     def make_server(*, inject=None, guard=None, max_wall_s=0.0, obs=None,
                     profile=None):
         return BatchedServer(
-            model, params, args.batch,
-            args.shared_prefix + max(plens) + args.gen + 8,
+            model, params, args.batch, max_len,
             paged=args.paged, page_size=args.page_size,
             num_pages=args.num_pages or None,
             prefix_cache=args.prefix_cache,
@@ -1818,7 +2042,9 @@ def main(argv=None):
             growth_headroom=args.growth_headroom,
             preemption=args.preemption, spec_floor=args.spec_floor,
             spec_window=args.spec_window, inject=inject, guard=guard,
-            max_wall_s=max_wall_s, mesh=mesh, obs=obs,
+            max_wall_s=max_wall_s,
+            spill_store=make_spill(), spill_threshold=args.spill_threshold,
+            slo=make_slo(), mesh=mesh, obs=obs,
             trace_cap=args.trace_cap, profile=profile,
         )
 
@@ -1900,6 +2126,21 @@ def main(argv=None):
     if args.paged and stats["pages"]["leaked"]:
         print(f"[serve] FAIL: {stats['pages']['leaked']} KV pages leaked")
         return 1
+    if args.spill_dir:
+        store = stats["resilience"]["spill_store"]
+        print(f"[serve] spill tier: {store['spills']} spills, "
+              f"{store['restores']} restores, "
+              f"{stats['resilience']['recompute_forwards']} recompute "
+              f"forwards, {store['bytes_written'] / 1e6:.2f} MB written")
+        if store["orphans"]:
+            print(f"[serve] FAIL: {store['orphans']} orphaned spill "
+                  f"file(s) left in {args.spill_dir}")
+            return 1
+    if slo_on:
+        slo = stats["slo"]
+        print(f"[serve] slo: {slo['adjustments']} adjustment(s), final "
+              f"chunk={slo['chunk']} floor={slo['spec_floor']:.2f} over "
+              f"{slo['ticks']} tick(s)")
     if ref_out is not None and not drained:
         got = {r.rid: list(r.out) for r in reqs}
         if got != ref_out:

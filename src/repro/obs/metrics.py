@@ -86,7 +86,10 @@ class _Family:
         return self._children[key]
 
     def series(self) -> list[tuple[dict, object]]:
-        return [(dict(k), v) for k, v in sorted(self._children.items())]
+        # list() first: the service's /metrics route exports from the
+        # event-loop thread while the scheduler thread keeps writing, and
+        # sorting a live dict view would see a mid-iteration resize
+        return [(dict(k), v) for k, v in sorted(list(self._children.items()))]
 
 
 class Counter(_Family):
@@ -255,7 +258,9 @@ class Registry:
         if include_global and self is not _global():
             regs.append(_global())
         for reg in regs:
-            for name, fam in sorted(reg._families.items()):
+            with reg._lock:  # concurrent scrape vs. family registration
+                fams = sorted(reg._families.items())
+            for name, fam in fams:
                 if isinstance(fam, Histogram):
                     out["metrics"][name] = {
                         "type": fam.kind, "help": fam.help,
@@ -282,7 +287,9 @@ class Registry:
             regs.append(_global())
         seen: set[str] = set()
         for reg in regs:
-            for name, fam in sorted(reg._families.items()):
+            with reg._lock:  # concurrent scrape vs. family registration
+                fams = sorted(reg._families.items())
+            for name, fam in fams:
                 if name in seen:
                     continue
                 seen.add(name)

@@ -31,9 +31,11 @@ from collections import deque
 DEFAULT_CAP = 100_000
 
 # record kinds that existed in the old ``events`` string list, and how
-# they rendered there; anything else is timeline-only detail
+# they rendered there; anything else is timeline-only detail. The spill
+# tier's "spill"/"restore" render in the same "<kind>:<rid>" shape so
+# ``server.events`` keeps telling the whole preemption story.
 _LEGACY_PLAIN = ("prefill", "decode", "verify", "draft_prefill", "drain")
-_LEGACY_RID = ("preempt", "replay")
+_LEGACY_RID = ("preempt", "replay", "spill", "restore")
 
 
 class Timeline:

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 
 
 def now() -> float:
@@ -84,21 +85,29 @@ class Tracer:
 
     def __init__(self):
         self._reqs: dict[int, _Req] = {}
+        # token-granular (kind, seconds) latency observations for the SLO
+        # loop: ("ttft", submit->first token) and ("tpot", inter-token
+        # gap). Bounded so an unconsumed buffer (no SLO controller
+        # attached) cannot grow past the window.
+        self._live: deque = deque(maxlen=65536)
 
     @property
     def enabled(self) -> bool:
         return True
 
-    def _req(self, rid: int) -> _Req:
+    def _req(self, rid: int, t: float | None = None) -> _Req:
         r = self._reqs.get(rid)
         if r is None:
-            r = self._reqs[rid] = _Req(rid, now())
+            r = self._reqs[rid] = _Req(rid, now() if t is None else t)
         return r
 
     # -- lifecycle events ----------------------------------------------------
 
-    def queued(self, rid: int) -> None:
-        self._req(rid)
+    def queued(self, rid: int, t: float | None = None) -> None:
+        """``t`` backdates the queue entry (service front-end: the tenant
+        queue wait belongs in TTFT, so submit time, not admission-queue
+        entry, starts the clock)."""
+        self._req(rid, t)
 
     def admitted(self, rid: int, *, replica: int = 0,
                  prefix_hit_tokens: int = 0, pages: int = 0) -> None:
@@ -128,7 +137,17 @@ class Tracer:
         t = now()
         if r.first_emit_t is None:
             r.first_emit_t = t
+            self._live.append(("ttft", t - r.queued_t))
+        else:
+            self._live.append(("tpot", t - r.last_emit_t))
         r.last_emit_t = t
+
+    def drain_observations(self) -> list[tuple[str, float]]:
+        """Hand the buffered token-granular latency observations to the
+        SLO loop and clear the buffer."""
+        out = list(self._live)
+        self._live.clear()
+        return out
 
     def preempted(self, rid: int) -> None:
         r = self._req(rid)
@@ -222,6 +241,7 @@ class Tracer:
                     "mean": sum(vals) / len(vals),
                     "p50": _pct(vals, 0.50),
                     "p95": _pct(vals, 0.95),
+                    "p99": _pct(vals, 0.99),
                     "max": vals[-1],
                 }
         return out
@@ -241,7 +261,7 @@ class NullTracer(Tracer):
     def enabled(self) -> bool:
         return False
 
-    def queued(self, rid):
+    def queued(self, rid, t=None):
         pass
 
     def admitted(self, rid, **kw):
@@ -252,6 +272,9 @@ class NullTracer(Tracer):
 
     def emit(self, rid):
         pass
+
+    def drain_observations(self):
+        return []
 
     def preempted(self, rid):
         pass

@@ -1,0 +1,28 @@
+"""Service layer over the batched engine: asyncio HTTP/SSE front-end,
+per-tenant weighted-fair admission, the SLO feedback controller, and the
+preempt-to-disk spill store.
+
+``FairScheduler``/``SLOController``/``SpillStore`` are pure host-side
+modules importable without jax; ``ServeApp`` (the asyncio front-end)
+pulls in the engine and is exported lazily.
+"""
+from repro.serve.slo import SLOController, tune_chunk, tune_spec_floor
+from repro.serve.spill import SpillStore
+from repro.serve.tenants import FairScheduler, default_cost
+
+__all__ = [
+    "FairScheduler",
+    "SLOController",
+    "ServeApp",
+    "SpillStore",
+    "default_cost",
+    "tune_chunk",
+    "tune_spec_floor",
+]
+
+
+def __getattr__(name):
+    if name == "ServeApp":  # lazy: importing the app pulls in jax
+        from repro.serve.app import ServeApp
+        return ServeApp
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

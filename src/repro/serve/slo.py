@@ -1,0 +1,138 @@
+"""SLO feedback loop: tune the chunked-prefill budget (and the spec
+degradation floor) against TTFT/TPOT targets.
+
+The scheduler calls :meth:`SLOController.observe` with the tracer's
+per-token latency observations (``ttft`` = queue entry -> first emitted
+token, ``tpot`` = gap between consecutive emitted tokens) and
+:meth:`SLOController.tick` once per decode tick. The tick compares the
+trailing medians against the ``--slo-ttft-ms/--slo-tpot-ms`` targets and
+adjusts two knobs the engine already honors live:
+
+* ``prefill_chunk`` — a TPOT violation means decoding slots are starved
+  behind long prefill waves, so the chunk SHRINKS (more decode ticks
+  interleave between prompt chunks); a TTFT violation with healthy TPOT
+  means prompts sit in prefill too long, so the chunk GROWS. Greedy
+  streams are invariant to the chunk size (pinned by the chunked-prefill
+  tests), so retuning mid-run never changes tokens — only their timing.
+* ``spec_floor`` — under a TPOT violation the speculative acceptance
+  floor RISES, so low-acceptance drafting (whose misses inflate
+  inter-token gaps with wasted verify work) degrades to plain decode
+  sooner.
+
+All decisions are pure functions of (knob, observed/target ratios):
+:func:`tune_chunk` and :func:`tune_spec_floor` never read a clock and the
+controller never timestamps anything itself — observations arrive as
+(kind, seconds) pairs from the caller — so every decision is
+unit-testable without wall time.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+# one tick's multiplicative step is clamped so a burst of outliers cannot
+# swing the budget more than 4x in either direction
+_MAX_STEP = 4.0
+
+
+def _median(xs) -> float:
+    s = sorted(xs)
+    n = len(s)
+    if not n:
+        return 0.0
+    return s[n // 2] if n % 2 else 0.5 * (s[n // 2 - 1] + s[n // 2])
+
+
+def tune_chunk(chunk: int, ttft_ratio: float, tpot_ratio: float,
+               lo: int, hi: int) -> int:
+    """One pure control step for the chunked-prefill budget.
+
+    ``*_ratio`` is observed/target (> 1 means the SLO is violated; pass
+    0 for "no target" or "no data"). TPOT dominates: shrinking to protect
+    inter-token gaps wins over growing to protect TTFT, because a starved
+    decoder hurts every active stream while a slow first token hurts one.
+    The result is clamped to ``[lo, hi]`` and, at a fixed TPOT ratio, is
+    weakly monotone non-decreasing in ``ttft_ratio``.
+    """
+    if hi < lo:
+        raise ValueError(f"invalid chunk range [{lo}, {hi}]")
+    chunk = min(max(chunk, lo), hi)
+    if tpot_ratio > 1.0:
+        chunk = int(chunk / min(tpot_ratio, _MAX_STEP))
+    elif ttft_ratio > 1.0:
+        chunk = int(round(chunk * min(ttft_ratio, _MAX_STEP)))
+    return min(max(chunk, lo), hi)
+
+
+def tune_spec_floor(floor: float, tpot_ratio: float,
+                    cap: float = 0.95) -> float:
+    """One pure control step for the speculative acceptance floor.
+
+    A TPOT violation raises the floor (capped) so marginal drafting
+    degrades to plain decode; once TPOT recovers the floor decays back
+    toward its configured base in the controller. ``floor <= 0`` (spec
+    degradation disabled) is left untouched.
+    """
+    if floor <= 0.0:
+        return floor
+    if tpot_ratio > 1.0:
+        return min(floor * min(tpot_ratio, _MAX_STEP), cap)
+    return floor
+
+
+class SLOController:
+    """Trailing-window feedback controller for one ``BatchedServer``.
+
+    Pure in the injectable-clock sense: it owns no clock, only a bounded
+    window of caller-supplied observations. ``tick()`` returns the
+    (chunk, spec_floor) pair the engine should run with next tick and
+    records a history entry whenever either knob moved.
+    """
+
+    def __init__(self, *, ttft_ms: float = 0.0, tpot_ms: float = 0.0,
+                 chunk: int, chunk_min: int = 8, chunk_max: int | None = None,
+                 spec_floor: float = 0.0, window: int = 64):
+        if chunk <= 0:
+            raise ValueError("SLO control needs a finite initial chunk")
+        self.ttft_ms = ttft_ms
+        self.tpot_ms = tpot_ms
+        self.chunk_min = min(chunk_min, chunk)
+        self.chunk_max = max(chunk_max if chunk_max is not None else chunk,
+                             chunk)
+        self.chunk = chunk
+        self.base_floor = spec_floor
+        self.spec_floor = spec_floor
+        self._obs = {"ttft": deque(maxlen=window),
+                     "tpot": deque(maxlen=window)}
+        self.ticks = 0
+        self.history: list[dict] = []
+
+    def observe(self, kind: str, seconds: float) -> None:
+        q = self._obs.get(kind)
+        if q is not None:
+            q.append(seconds)
+
+    def _ratio(self, kind: str, target_ms: float) -> float:
+        if target_ms <= 0 or not self._obs[kind]:
+            return 0.0
+        return _median(self._obs[kind]) * 1e3 / target_ms
+
+    def tick(self) -> tuple[int, float]:
+        self.ticks += 1
+        ttft_r = self._ratio("ttft", self.ttft_ms)
+        tpot_r = self._ratio("tpot", self.tpot_ms)
+        chunk = tune_chunk(self.chunk, ttft_r, tpot_r,
+                           self.chunk_min, self.chunk_max)
+        floor = tune_spec_floor(self.spec_floor, tpot_r)
+        if tpot_r and tpot_r <= 1.0 and floor > self.base_floor:
+            # TPOT healthy again: relax the degradation floor halfway
+            # back toward its configured base each tick
+            floor = max(self.base_floor, 0.5 * (floor + self.base_floor))
+        if chunk != self.chunk or floor != self.spec_floor:
+            self.history.append({"tick": self.ticks,
+                                 "ttft_ratio": round(ttft_r, 3),
+                                 "tpot_ratio": round(tpot_r, 3),
+                                 "chunk": chunk,
+                                 "spec_floor": round(floor, 4)})
+        self.chunk = chunk
+        self.spec_floor = floor
+        return chunk, floor

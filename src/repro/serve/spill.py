@@ -1,0 +1,76 @@
+"""Preempt-to-disk tier: spill a preempted context's KV pages to a
+host-side store and restore them by page reload instead of replaying the
+whole sequence through prefill.
+
+The engine-side policy lives in ``launch/serve.py`` (only fully-prefilled
+decoding victims at or above ``--spill-threshold`` rows spill; everything
+else takes the PR 6 recompute-replay path). This module is just the
+store: one ``.npz`` file per request id holding the request's page
+contents for every paged pool leaf plus the per-slot recurrent state
+rows, written with numpy on the host — device arrays never touch disk
+directly.
+
+Lifecycle: ``spill(rid, payload)`` at preemption, ``restore(rid)`` at
+re-admission (the engine then drops the file), ``drop(rid)`` on
+retirement/drain for anything still spilled. ``files()`` lists what is
+left on disk, so "zero orphaned spill files" is a checkable invariant at
+the end of every run.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+
+import numpy as np
+
+
+class SpillStore:
+    """Host-side page store, one compressed-free ``.npz`` per request."""
+
+    def __init__(self, root: str | os.PathLike):
+        self.root = pathlib.Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.spills = 0
+        self.restores = 0
+        self.drops = 0
+        self.bytes_written = 0
+
+    def path(self, rid: int) -> pathlib.Path:
+        return self.root / f"req_{int(rid)}.npz"
+
+    def spill(self, rid: int, payload: dict) -> None:
+        """Persist ``payload`` (str -> ndarray) for ``rid``. Overwrites a
+        stale entry for the same rid (a re-preempted restore)."""
+        p = self.path(rid)
+        np.savez(p, **{k: np.asarray(v) for k, v in payload.items()})
+        self.spills += 1
+        self.bytes_written += p.stat().st_size
+
+    def restore(self, rid: int) -> dict:
+        with np.load(self.path(rid)) as z:
+            out = {k: z[k] for k in z.files}
+        self.restores += 1
+        return out
+
+    def drop(self, rid: int) -> bool:
+        p = self.path(rid)
+        if p.exists():
+            p.unlink()
+            self.drops += 1
+            return True
+        return False
+
+    def has(self, rid: int) -> bool:
+        return self.path(rid).exists()
+
+    def files(self) -> list[str]:
+        return sorted(str(p) for p in self.root.glob("req_*.npz"))
+
+    def stats(self) -> dict:
+        return {
+            "spills": self.spills,
+            "restores": self.restores,
+            "drops": self.drops,
+            "bytes_written": self.bytes_written,
+            "orphans": len(self.files()),
+        }

@@ -1,0 +1,284 @@
+"""Tenant fair-share (DRR) and SLO-controller properties.
+
+These are the pure-function halves of the service front-end — no engine,
+no clock (a fake injectable counter stands in), no threads. What they
+pin:
+
+* NO STARVATION: a backlogged tenant's head-of-line request is released
+  within ``ceil(cost / (quantum * weight))`` drain rounds regardless of
+  the competing load,
+* WEIGHTED SHARES: over a persistent backlog, released work tracks
+  ``weight`` to within one deficit quantum (+ one max request cost),
+* DETERMINISM: the release order is a pure function of the submission
+  sequence — same submissions, same order, every time,
+* the submit clock stamps ``queued_t`` (TTFT starts at submission, not
+  admission) and drives per-tenant wait stats,
+* ``tune_chunk`` is clamped to ``[lo, hi]``, weakly monotone
+  non-decreasing in the TTFT ratio at fixed TPOT, and TPOT-dominant
+  (a violated inter-token target shrinks the chunk even when TTFT is
+  also violated); ``tune_spec_floor`` raises only under TPOT violation,
+  caps below 1.0, and never touches a disabled (<= 0) floor,
+* ``SLOController.tick`` moves the budget in the documented direction
+  from real observation streams and records history only on change.
+
+The real-hypothesis variants ride the property-tests CI job; offline
+containers fall back to the deterministic stub.
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    from hypothesis_stub import hypothesis, st
+
+from repro.serve import FairScheduler, SLOController, default_cost
+from repro.serve.slo import tune_chunk, tune_spec_floor
+
+
+class _Item:
+    """Stand-in for a serve Request: just a cost and a queued_t slot."""
+
+    def __init__(self, cost):
+        self.prompt = [0] * int(cost)
+        self.max_new = 0
+        self.queued_t = None
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _drr(quantum=8.0):
+    clock = _FakeClock()
+    return FairScheduler(quantum=quantum, clock=clock), clock
+
+
+# ---------------------------------------------------------------------------
+# DRR: starvation freedom, weighted shares, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_submit_stamps_queued_t_and_orders_fifo():
+    fair, clock = _drr()
+    a, b = _Item(4), _Item(4)
+    clock.t = 1.0
+    fair.submit("t", a)
+    clock.t = 2.0
+    fair.submit("t", b)
+    assert a.queued_t == 1.0 and b.queued_t == 2.0
+    assert fair.backlog == 2
+    assert fair.drain(rounds=10) == [a, b]  # FIFO within a tenant
+    assert fair.backlog == 0
+    st_ = fair.stats()["tenants"]["t"]
+    assert st_["released"] == 2 and st_["backlog"] == 0
+
+
+def test_invalid_args_rejected():
+    with pytest.raises(ValueError):
+        FairScheduler(quantum=0)
+    fair, _ = _drr()
+    with pytest.raises(ValueError):
+        fair.submit("t", _Item(1), weight=0.0)
+
+
+def test_no_starvation_bound():
+    """A weight-1 tenant behind a firehose tenant still releases its
+    head request within ceil(cost / quantum) rounds."""
+    fair, _ = _drr(quantum=8.0)
+    slow = _Item(24)  # needs ceil(24/8) = 3 rounds of deficit
+    fair.submit("meek", slow, weight=1.0)
+    for i in range(100):
+        fair.submit("firehose", _Item(8), weight=10.0)
+    released = []
+    rounds = 0
+    while slow not in released:
+        released += fair.drain(rounds=1)
+        rounds += 1
+        assert rounds <= 3, "meek tenant starved past its DRR bound"
+    assert rounds == 3
+
+
+def test_weighted_shares_track_weights():
+    """Persistent backlog: released cost per tenant tracks weight to
+    within one quantum*weight + one max request cost."""
+    fair, _ = _drr(quantum=8.0)
+    costs = {"a": 1.0, "b": 3.0}
+    for name, w in costs.items():
+        for _ in range(200):
+            fair.submit(name, _Item(4), weight=w)
+    rounds = 20
+    fair.drain(rounds=rounds)
+    stats = fair.stats()["tenants"]
+    for name, w in costs.items():
+        assert stats[name]["backlog"] > 0, "backlog must persist for shares"
+        ideal = rounds * 8.0 * w
+        slack = max(4.0, 8.0 * w)
+        assert abs(stats[name]["released_cost"] - ideal) <= slack, (
+            name, stats[name]["released_cost"], ideal)
+
+
+def test_deterministic_release_order():
+    def run():
+        fair, clock = _drr(quantum=6.0)
+        rng = np.random.default_rng(7)
+        items = []
+        for i in range(60):
+            it = _Item(int(rng.integers(1, 12)))
+            it.rid = i
+            clock.t = float(i)
+            fair.submit(f"t{int(rng.integers(0, 4))}", it,
+                        weight=float(rng.integers(1, 4)))
+            items.append(it)
+        order = []
+        while fair.backlog:
+            order += [it.rid for it in fair.drain(rounds=1)]
+        return order
+
+    first = run()
+    assert first == run() == run()
+    assert sorted(first) == list(range(60))  # everyone released exactly once
+
+
+def test_default_cost_is_prompt_plus_generation():
+    it = _Item(5)
+    it.max_new = 7
+    assert default_cost(it) == 12.0
+
+
+@hypothesis.given(st.integers(min_value=0, max_value=10_000),
+                  st.integers(min_value=1, max_value=16),
+                  st.integers(min_value=1, max_value=120))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_drr_property_no_loss_no_duplicates(seed, tenants, submissions):
+    """Random tenants/weights/costs: every submitted item is released
+    exactly once, in an order that replays identically, and no tenant
+    exceeds the starvation bound for its head-of-line item."""
+    def run():
+        fair, clock = _drr(quantum=5.0)
+        rng = np.random.default_rng(seed)
+        items = []
+        for i in range(submissions):
+            it = _Item(int(rng.integers(1, 20)))
+            it.rid = i
+            clock.t = float(i)
+            fair.submit(f"t{int(rng.integers(0, tenants))}", it,
+                        weight=float(rng.integers(1, 5)))
+            items.append(it)
+        order = []
+        guard = 0
+        while fair.backlog:
+            got = fair.drain(rounds=1)
+            assert got or fair.backlog == 0 or guard < 10_000
+            order += [it.rid for it in got]
+            guard += 1
+        return order
+
+    a = run()
+    assert a == run()
+    assert sorted(a) == list(range(submissions))
+
+
+# ---------------------------------------------------------------------------
+# SLO controller: pure control-step pins
+# ---------------------------------------------------------------------------
+
+
+def test_tune_chunk_directions():
+    # TPOT violated -> shrink (dominates a TTFT violation)
+    assert tune_chunk(64, 0.0, 2.0, 8, 128) == 32
+    assert tune_chunk(64, 3.0, 2.0, 8, 128) == 32
+    # TTFT violated, TPOT healthy -> grow
+    assert tune_chunk(16, 2.0, 0.5, 8, 128) == 32
+    # both healthy -> hold
+    assert tune_chunk(64, 0.9, 0.9, 8, 128) == 64
+    # steps clamp at 4x per tick and at the range edges
+    assert tune_chunk(64, 0.0, 100.0, 8, 128) == 16
+    assert tune_chunk(8, 0.0, 100.0, 8, 128) == 8
+    assert tune_chunk(64, 100.0, 0.0, 8, 128) == 128
+    with pytest.raises(ValueError):
+        tune_chunk(64, 0.0, 0.0, 100, 8)
+
+
+def test_tune_spec_floor_directions():
+    assert tune_spec_floor(0.5, 2.0) == pytest.approx(0.95)  # 1.0, capped
+    assert tune_spec_floor(0.4, 1.5) == pytest.approx(0.6)
+    assert tune_spec_floor(0.5, 0.5) == 0.5      # healthy: unchanged here
+    assert tune_spec_floor(0.0, 10.0) == 0.0     # disabled floor stays off
+
+
+@hypothesis.given(st.integers(min_value=8, max_value=256),
+                  st.floats(min_value=0.0, max_value=10.0),
+                  st.floats(min_value=0.0, max_value=10.0),
+                  st.floats(min_value=0.0, max_value=10.0))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_tune_chunk_clamped_and_monotone(chunk, ttft_a, ttft_b, tpot):
+    """Output always lands in [lo, hi]; at fixed TPOT ratio the result
+    is weakly monotone non-decreasing in the TTFT ratio."""
+    lo, hi = 8, 256
+    a = tune_chunk(chunk, min(ttft_a, ttft_b), tpot, lo, hi)
+    b = tune_chunk(chunk, max(ttft_a, ttft_b), tpot, lo, hi)
+    assert lo <= a <= hi and lo <= b <= hi
+    assert a <= b, (a, b)
+
+
+def test_controller_shrinks_under_tpot_pressure_and_recovers():
+    c = SLOController(ttft_ms=0.0, tpot_ms=10.0, chunk=64,
+                      chunk_min=8, chunk_max=64)
+    for _ in range(8):
+        c.observe("tpot", 0.050)  # 5x the target
+    chunk, _ = c.tick()
+    assert chunk == 16  # 64 / 4 (max step)
+    chunk, _ = c.tick()
+    assert chunk == 8   # clamped at chunk_min
+    # history recorded only the two moves
+    assert [h["chunk"] for h in c.history] == [16, 8]
+    # recovery: healthy observations displace the bad window
+    for _ in range(64):
+        c.observe("tpot", 0.001)
+    chunk, _ = c.tick()
+    assert chunk == 8  # healthy TPOT alone never grows the chunk back
+    c.observe("ttft", 1.0)  # ... but a TTFT violation now does
+    c.ttft_ms = 100.0
+    chunk, _ = c.tick()
+    assert chunk > 8
+
+
+def test_controller_grows_chunk_under_ttft_pressure():
+    c = SLOController(ttft_ms=100.0, tpot_ms=0.0, chunk=16,
+                      chunk_min=8, chunk_max=128)
+    for _ in range(4):
+        c.observe("ttft", 0.300)  # 3x target
+    chunk, _ = c.tick()
+    assert chunk == 48
+    assert c.history and c.history[-1]["ttft_ratio"] == pytest.approx(3.0)
+
+
+def test_controller_floor_raises_then_relaxes():
+    c = SLOController(tpot_ms=10.0, chunk=32, spec_floor=0.2)
+    for _ in range(8):
+        c.observe("tpot", 0.030)
+    _, floor = c.tick()
+    assert floor == pytest.approx(0.6)  # 0.2 * 3x ratio
+    for _ in range(64):
+        c.observe("tpot", 0.005)  # healthy again
+    _, floor = c.tick()
+    assert floor == pytest.approx(0.4)  # halfway back toward base
+    _, floor = c.tick()
+    assert floor == pytest.approx(0.3)
+
+
+def test_controller_no_targets_never_moves():
+    c = SLOController(chunk=32, chunk_min=8, chunk_max=128)
+    for _ in range(16):
+        c.observe("ttft", 9.9)
+        c.observe("tpot", 9.9)
+        assert c.tick() == (32, 0.0)
+    assert c.history == []
+    with pytest.raises(ValueError):
+        SLOController(chunk=0)

@@ -20,6 +20,10 @@ EVERY operation:
   returned to the pool (shared pages only lose a reference),
 * ``audit()`` — the structural self-check the serving runtime runs after
   every preemption — passes after EVERY operation,
+* the SPILL tier's allocator-level contract: spilling an owner returns
+  all its pages to the pool (only the page count survives, on the host
+  store), and a later restore lands exclusively on fresh refcount-1
+  pages — never on a page another owner or the prefix index still reads,
 * releasing every owner returns the pool to zero pages in use.
 """
 import numpy as np
@@ -40,6 +44,7 @@ def _random_walk(seed: int, num_pages: int, ops: int):
     rng = np.random.default_rng(seed)
     alloc = PageAllocator(num_pages)
     owners: list[list[int]] = []   # each entry = one owner's page list
+    spilled: list[int] = []        # page counts of spilled-out owners
 
     def check():
         assert alloc.free_pages + alloc.in_use == num_pages
@@ -60,7 +65,7 @@ def _random_walk(seed: int, num_pages: int, ops: int):
         alloc.audit()  # structural check: free list vs refcount ledger
 
     for _ in range(ops):
-        op = rng.integers(0, 7)
+        op = rng.integers(0, 9)
         if op == 0:  # alloc
             n = int(rng.integers(0, max(num_pages // 2, 1)) )
             if alloc.can_alloc(n):
@@ -142,6 +147,27 @@ def _random_walk(seed: int, num_pages: int, ops: int):
                 1 for p in pages
                 if not any(p in o for o in owners)
             )
+        elif op == 7 and owners:  # spill-to-disk: pages freed, rows kept
+            # the serve path's _maybe_spill: a preempted owner's page
+            # CONTENTS move to the host store and every page returns to
+            # the pool (shared ones just lose this owner's reference) —
+            # only the page COUNT must survive for the restore
+            idx = int(rng.integers(0, len(owners)))
+            pages = owners.pop(idx)
+            spilled.append(len(pages))
+            alloc.free(pages)
+        elif op == 8 and spilled:  # restore: reload into FRESH pages only
+            n = spilled[-1]
+            if alloc.can_alloc(n):
+                spilled.pop()
+                fresh = alloc.alloc(n)
+                # restore overwrites page contents, so the target pages
+                # must be exclusively owned and never a live page some
+                # other request (or the prefix index) still reads
+                flat = {p for o in owners for p in o}
+                assert not (set(fresh) & flat), "restore reused a live page"
+                assert all(alloc.refcount(p) == 1 for p in fresh)
+                owners.append(fresh)
         check()
     while owners:
         assert alloc.free(owners.pop()) >= 0

@@ -26,18 +26,18 @@ deterministic fault-injection harness. What these tests pin:
 * SIGTERM (via PreemptionGuard) and ``max_wall_s`` drain the server:
   partial streams retire with ``status="preempted"`` and nothing leaks.
 """
-import dataclasses
 import os
 import signal
 
 import jax
 import numpy as np
 import pytest
+from serve_helpers import make_requests as _requests
+from serve_helpers import serve_once as _serve
+from serve_helpers import tiny_model as _tiny_model
 
-from repro.configs import get_config
 from repro.kvcache.allocator import OutOfPages, PageAllocator
 from repro.launch.serve import BatchedServer, Request
-from repro.models import build_model
 from repro.runtime.fault import PreemptionGuard, run_with_retries
 from repro.runtime.faultinject import FaultInjector, TransientFault
 from repro.runtime.resilience import (
@@ -46,32 +46,6 @@ from repro.runtime.resilience import (
     pick_victim,
     replay_sequence,
 )
-
-
-def _tiny_model(arch="llama32-1b", n_layers=2, seed=0):
-    cfg = get_config(arch).reduced()
-    cfg = dataclasses.replace(cfg, n_layers=n_layers)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
-    return cfg, model, params
-
-
-def _requests(cfg, lens, gens, seed0=100, priorities=None):
-    if isinstance(gens, int):
-        gens = [gens] * len(lens)
-    return [
-        Request(i, np.random.default_rng(seed0 + i).integers(
-            0, cfg.vocab_size, ln, dtype=np.int32), g,
-            priority=(priorities[i] if priorities else 0))
-        for i, (ln, g) in enumerate(zip(lens, gens))
-    ]
-
-
-def _serve(model, params, reqs, **kw):
-    server = BatchedServer(model, params, **kw)
-    stats = server.run(reqs)
-    stats["_events"] = server.events
-    return {r.rid: r.out for r in reqs}, stats
 
 
 # ---------------------------------------------------------------------------

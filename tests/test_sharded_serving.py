@@ -11,12 +11,10 @@ parallelism splits the batch slots and the page pool into replica-local
 ranges; each replica's admission, prefix index, COW traffic, and
 preemption victims stay inside its own range.
 """
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
+from serve_helpers import run_module, run_python
 
 from repro.kvcache.allocator import OutOfPages, PagePoolGroup
 
@@ -131,16 +129,6 @@ def test_serve_specs_scale_with_mesh_instance():
 # subprocess: bit-identical streams across mesh shapes
 # ---------------------------------------------------------------------------
 
-def _run(sub):
-    return subprocess.run(
-        [sys.executable, "-c", sub], capture_output=True, text=True,
-        timeout=600, cwd="/root/repo",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
-    )
-
-
 _STREAMS = """
     import os
     assert "--xla_force_host_platform_device_count=8" in os.environ["XLA_FLAGS"]
@@ -210,7 +198,7 @@ def test_streams_bit_identical_llama():
     """Greedy llama streams: unsharded == 1x1 == 2x2, plain and
     speculative, with paged KV + prefix cache; decode compiles once on
     the mesh path; zero leaks in target and draft pools."""
-    r = _run(textwrap.dedent(_STREAMS % {"arch": "llama32-1b"}))
+    r = run_python(textwrap.dedent(_STREAMS % {"arch": "llama32-1b"}))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK llama32-1b" in r.stdout
 
@@ -218,7 +206,7 @@ def test_streams_bit_identical_llama():
 def test_streams_bit_identical_zamba():
     """Same contract for the recurrent hybrid (ssm/conv rows ride the
     cache through verify rollback's restore + re-verify on the mesh)."""
-    r = _run(textwrap.dedent(_STREAMS % {"arch": "zamba2-1.2b"}))
+    r = run_python(textwrap.dedent(_STREAMS % {"arch": "zamba2-1.2b"}))
     assert r.returncode == 0, r.stderr[-3000:]
     assert "OK zamba2-1.2b" in r.stdout
 
@@ -228,17 +216,11 @@ def test_chaos_on_mesh_cli():
     speculation + an injected mid-decode pool fault must still reproduce
     the clean meshed streams bit-exactly and leak nothing (exit 0 covers
     every gate in serve.main)."""
-    r = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve", "--arch", "llama32-1b",
-         "--reduced", "--bits", "4", "--engine", "packed", "--batch", "4",
-         "--requests", "8", "--prompt-len", "12", "--gen", "8", "--paged",
-         "--page-size", "8", "--prefix-cache", "--shared-prefix", "16",
-         "--speculate", "4", "--page-growth", "--inject", "oop@tick2",
-         "--mesh", "2x2"],
-        capture_output=True, text=True, timeout=600, cwd="/root/repo",
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu"),
-             "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
-    )
+    r = run_module("repro.launch.serve", [
+        "--arch", "llama32-1b", "--reduced", "--bits", "4",
+        "--engine", "packed", "--batch", "4", "--requests", "8",
+        "--prompt-len", "12", "--gen", "8", "--paged", "--page-size", "8",
+        "--prefix-cache", "--shared-prefix", "16", "--speculate", "4",
+        "--page-growth", "--inject", "oop@tick2", "--mesh", "2x2"])
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
     assert "chaos OK" in r.stdout
