@@ -7,76 +7,21 @@ held-out samples, then quantize with/without SplitQuantV2 and replay the
 paper's table. The signature to reproduce (paper §4.2): INT8 ≈ FP for both;
 INT4 baseline degraded, SplitQuantV2 recovers to ≈ FP; INT2 ≈ chance for
 both. Also checks §4.1 (FP split preserves outputs exactly).
+
+Thin wrapper: the train/eval machinery lives in :mod:`repro.eval` (the
+serving-path evaluators and the CI quality gate use the same library);
+this script keeps the historical ``table1/*`` row names.
 """
 from __future__ import annotations
 
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_config
-from repro.core import QuantPolicy, quantize_model, restructure
-from repro.data.pipeline import DataLoader, SyntheticLM
-from repro.models import build_model
-from repro.optim import adamw
-
-
-def train_small_lm(steps=260, batch=16, seq=64, seed=0):
-    cfg = get_config("llama32-1b").reduced()
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(seed))
-    opt = adamw.init_opt_state(params)
-    opt_cfg = adamw.AdamWConfig(peak_lr=2e-3, warmup=20, total_steps=steps)
-    loader = DataLoader(SyntheticLM(cfg.vocab_size, seed=7), batch, seq, seed=seed)
-
-    @jax.jit
-    def step(params, opt, batch):
-        (loss, m), g = jax.value_and_grad(model.train_loss, has_aux=True)(
-            params, batch
-        )
-        params, opt, _ = adamw.apply_updates(opt_cfg, params, g, opt)
-        return params, opt, loss
-
-    for s in range(steps):
-        b = loader.batch_at(s)
-        params, opt, loss = step(params, opt,
-                                 {k: jnp.asarray(v) for k, v in b.items()})
-    return cfg, model, params, float(loss)
-
-
-def mcq_eval(cfg, model, params, n_problems=200, seed=123):
-    """4-way MCQ: which continuation token is most likely after a context
-    sampled from the training distribution? Distractors are random tokens.
-    Accuracy = fraction where the model ranks the true token highest."""
-    src = SyntheticLM(cfg.vocab_size, seed=7)
-    rng = np.random.default_rng(seed)
-    ctx_len = 32
-    correct = 0
-
-    @jax.jit
-    def last_logits(params, tokens):
-        from repro.models import transformer as tfm
-
-        x = tfm.embed_tokens(cfg, params, tokens)
-        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
-                               tokens.shape).astype(jnp.int32)
-        h, _, _ = tfm.decoder_forward(cfg, params, x, pos)
-        return tfm.logits_fn(cfg, params, h[:, -1:])
-
-    seqs = np.stack([src.sample(np.random.default_rng((seed, i)), ctx_len + 1)
-                     for i in range(n_problems)])
-    logits = np.asarray(last_logits(params, jnp.asarray(seqs[:, :-1])))[:, 0]
-    for i in range(n_problems):
-        truth = seqs[i, -1]
-        options = [truth] + list(
-            rng.choice(cfg.vocab_size, 3, replace=False)
-        )
-        scores = [logits[i, o] for o in options]
-        if int(np.argmax(scores)) == 0:
-            correct += 1
-    return correct / n_problems
+from repro.core import quantize_model
+from repro.core.split import split_fp
+from repro.eval import mcq_eval, train_small_lm
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -89,14 +34,6 @@ def run() -> list[tuple[str, float, str]]:
     rows.append(("table1/acc_fp", acc_fp, "original floating point"))
 
     # §4.1 functionality preservation: FP split == original, exactly
-    qm = restructure(params, QuantPolicy(bits=4, min_size=256))
-    from repro.core.split import split_fp
-
-    ok = True
-    for pth, qt in list(qm.qleaves.items())[:4]:
-        w = None  # reconstruct original from planes is the cheap check
-    # direct check on a weight: planes sum == original
-    from repro.models import transformer as tfm
     w = np.asarray(params["layers"]["attn"]["wq"][0])
     planes, _ = split_fp(jnp.asarray(w))
     exact = bool((np.asarray(planes.sum(0)) == w).all())

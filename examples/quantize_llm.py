@@ -4,14 +4,22 @@ pass (policy exclusions included) on the real config shapes at reduced
 depth so it runs on CPU in seconds.
 
     PYTHONPATH=src python examples/quantize_llm.py --arch deepseek-moe-16b --bits 4
+
+``--quant-report out.json`` additionally writes the ranked per-layer
+quality report (baseline-vs-split SQNR, clipping, outlier mass — worst
+layer first; see :class:`repro.core.QuantReport`).
 """
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.core import QuantPolicy, restructure, sqnr_db
+from repro.core import (
+    QuantPolicy,
+    build_quant_report,
+    restructure,
+    sqnr_db,
+)
 from repro.models import build_model
 
 
@@ -20,24 +28,22 @@ def main():
     ap.add_argument("--arch", default="llama32-1b", choices=list(ALL_ARCHS))
     ap.add_argument("--bits", type=int, default=4)
     ap.add_argument("--packed", action="store_true")
+    ap.add_argument("--quant-report", default="",
+                    help="write the ranked per-layer QuantReport JSON "
+                         "artifact to this path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    qm = restructure(params, QuantPolicy(bits=args.bits, packed=args.packed,
-                                         min_size=1024))
+    policy = QuantPolicy(bits=args.bits, packed=args.packed, min_size=1024)
+    qm = restructure(params, policy)
     eff = qm.materialize()
 
     print(f"{args.arch} (reduced): {n_params/1e6:.2f}M params, "
           f"{len(qm.qleaves)} tensors split+quantized, "
           f"{len(qm.passthrough)} excluded by policy")
-    flat_o = dict(jax.tree_util.tree_flatten_with_path(params)[0])
-    for path, orig in list(flat_o.items()):
-        name = "/".join(str(getattr(p, "key", "")) for p in path)
-        if name in qm.qleaves:
-            w_hat = None
     # per-leaf SQNR
     from repro.core.apply import _path_str
     flat_e, _ = jax.tree_util.tree_flatten_with_path(eff)
@@ -50,6 +56,21 @@ def main():
     sz = qm.size_bytes()
     print(f"storage: quantized {sz['quantized']} B + passthrough "
           f"{sz['passthrough']} B = {sz['total']/(n_params*4):.3f} of fp32")
+
+    if args.quant_report:
+        rep = build_quant_report(params, policy)
+        rep.save(args.quant_report)
+        s = rep.summary()
+        print(f"quant report -> {args.quant_report}: {s['layers']} layers, "
+              f"mean SQNR gain {s['mean_sqnr_gain_db']:+.2f} dB, worst "
+              f"layer {s['worst_layer']} "
+              f"({s['worst_layer_sqnr_split_db']:.2f} dB after split)")
+        print("worst 5 layers (post-split SQNR ascending):")
+        for r in rep.worst(5):
+            print(f"  {r.layer:42s} base {r.sqnr_base_db:6.2f} dB -> "
+                  f"split {r.sqnr_split_db:6.2f} dB  "
+                  f"(clip {r.clip_frac_base:.4f}, outliers "
+                  f"{r.outlier_frac:.3f})")
 
 
 if __name__ == "__main__":

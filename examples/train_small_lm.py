@@ -3,17 +3,15 @@ the paper's Table-1 signature on it.
 
     PYTHONPATH=src python examples/train_small_lm.py [--steps 260]
 
-Pipeline: synthetic-language pretrain (repro.launch.train machinery) →
-SplitQuantV2 restructuring → INT8/4/2 eval with and without the split →
-table printout. Expected: INT8 flat, INT4 recovered by SplitQuantV2,
-INT2 dead (paper §4.2).
+Pipeline: synthetic-language pretrain (repro.eval.train) → SplitQuantV2
+restructuring → INT8/4/2 eval with and without the split → table
+printout. Expected: INT8 flat, INT4 recovered by SplitQuantV2, INT2 dead
+(paper §4.2).
 """
 import argparse
-import sys
 
-sys.path.insert(0, "benchmarks") if "benchmarks" not in sys.path else None
-
-from benchmarks import table1_accuracy as t1
+from repro.core import quantize_model
+from repro.eval import mcq_eval, train_small_lm
 
 
 def main():
@@ -21,16 +19,15 @@ def main():
     ap.add_argument("--steps", type=int, default=260)
     args = ap.parse_args()
 
-    cfg, model, params, loss = t1.train_small_lm(steps=args.steps)
+    cfg, model, params, loss = train_small_lm(steps=args.steps)
     print(f"trained llama32-1b (reduced) {args.steps} steps; loss={loss:.3f}")
-    acc_fp = t1.mcq_eval(cfg, model, params)
+    acc_fp = mcq_eval(cfg, model, params)
     print(f"\n{'':16s}{'baseline':>10s}{'splitquantv2':>14s}")
     print(f"{'original':16s}{acc_fp:10.3f}{acc_fp:14.3f}")
-    from repro.core import quantize_model
 
     for bits in (8, 4, 2):
-        a_b = t1.mcq_eval(cfg, model, quantize_model(params, bits, split=False))
-        a_s = t1.mcq_eval(cfg, model, quantize_model(params, bits, split=True))
+        a_b = mcq_eval(cfg, model, quantize_model(params, bits, split=False))
+        a_s = mcq_eval(cfg, model, quantize_model(params, bits, split=True))
         print(f"{'INT%d' % bits:16s}{a_b:10.3f}{a_s:14.3f}")
     print("\n(expect: INT8 ≈ original for both; INT4 baseline degraded and "
           "SplitQuantV2 recovered; INT2 ≈ chance=0.25 for both)")

@@ -22,6 +22,7 @@ from repro.core.quantize import (
     quantize_tensor,
     unpack_codes,
 )
+from repro.core.report import LayerQuantStats, QuantReport, build_quant_report
 from repro.core.split import (
     PackedSplitQTensor,
     SplitQTensor,
@@ -30,6 +31,7 @@ from repro.core.split import (
     split_quantize,
     split_quantize_packed,
     sqnr_db,
+    tensor_quant_stats,
 )
 
 __all__ = [
@@ -40,4 +42,6 @@ __all__ = [
     "pack_codes", "quantize_tensor", "unpack_codes",
     "PackedSplitQTensor", "SplitQTensor", "split_error_stats", "split_fp",
     "split_quantize", "split_quantize_packed", "sqnr_db",
+    "tensor_quant_stats", "LayerQuantStats", "QuantReport",
+    "build_quant_report",
 ]

@@ -333,6 +333,53 @@ def split_error_stats(w: jax.Array, bits: int, k: int = 3) -> dict[str, jax.Arra
     }
 
 
+@functools.partial(jax.jit, static_argnames=("bits", "k"))
+def tensor_quant_stats(w: jax.Array, bits: int, k: int = 3) -> dict[str, jax.Array]:
+    """Everything the per-layer quant report needs from ONE tensor.
+
+    Extends :func:`split_error_stats` with the attribution signals that
+    explain *why* a layer's SQNR looks the way it does: the fraction of
+    values the baseline quantizer saturates (``clip_frac_base``), the
+    population of the outer k-means clusters (``outlier_frac`` — the mass
+    SplitQuantV2 peels off into their own planes), and the range-resolution
+    win of the middle cluster vs the full tensor (``range_gain`` ≈ the
+    paper's 10–20× scale-factor claim). Shares one clustering pass between
+    the error metrics and the attribution stats."""
+    wf = w.astype(jnp.float32)
+    qp = compute_qparams(wf, bits)
+    raw = jnp.round(qp.scale * wf) + qp.zero
+    clip_frac = jnp.mean(((raw < qp.qmin) | (raw > qp.qmax)).astype(jnp.float32))
+    base = dequantize(quantize(wf, qp), qp)
+
+    ids, info = split_masks(wf, k=k)
+    scales, zeros = plane_qparams_from_ids(wf, ids, k, bits)
+    # packed-formula dequant (bit-identical to the k-plane sum)
+    s = scales[ids]
+    z = zeros[ids]
+    q = jnp.clip(jnp.round(s * wf) + z, -(2 ** (bits - 1)), 2 ** (bits - 1) - 1)
+    sp = (q - z) / s
+
+    total = jnp.float32(wf.size)
+    counts = info.counts.astype(jnp.float32)
+    # k-means boundaries are sorted, so clusters 0 and k-1 hold the tails
+    outlier_frac = (counts[0] + counts[-1]) / total
+    full_span = jnp.max(wf) - jnp.min(wf)
+    # middle cluster = densest; its (S) vs the full-tensor scale is the
+    # per-weight resolution multiplier the split buys
+    mid = jnp.argmax(counts)
+    range_gain = scales[mid] / qp.scale
+    return {
+        "sqnr_base_db": sqnr_db(wf, base),
+        "sqnr_split_db": sqnr_db(wf, sp),
+        "mse_base": jnp.mean(jnp.square(wf - base)),
+        "mse_split": jnp.mean(jnp.square(wf - sp)),
+        "clip_frac_base": clip_frac,
+        "outlier_frac": outlier_frac,
+        "range_gain": range_gain,
+        "cluster_counts": info.counts,
+    }
+
+
 def choose_k(w: jax.Array, bits: int, max_k: int = 3, min_gain_db: float = 3.0) -> int:
     """Dynamic per-layer k (paper §5 future work): smallest k whose marginal
     SQNR gain over k-1 exceeds ``min_gain_db``. Host-side helper (concrete)."""

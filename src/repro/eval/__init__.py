@@ -1,0 +1,28 @@
+"""Quality evaluation: the paper's accuracy loop as a library.
+
+The paper's headline result is a QUALITY claim (INT4 SplitQuantV2
+recovering fp accuracy on ARC), so quality measurement lives next to the
+serving stack, not in a bench script: ``train`` pretrains the tiny
+offline LM, ``tasks`` builds the ARC-style MCQ problems and perplexity
+sequences and scores bare-model forwards, and ``serving`` runs the SAME
+tasks through the real :class:`repro.launch.serve.BatchedServer` path —
+packed engine, paged KV, continuous batching — so every engine, kernel
+or sharding change is inside the measured loop. ``sweep`` is the
+accuracy-vs-bits CLI that appends ``quality/*`` rows to the persistent
+bench trajectory (``BENCH_quant_engine.json``).
+"""
+from repro.eval.serving import serve_mcq_accuracy, serve_perplexity
+from repro.eval.tasks import (
+    MCQProblem,
+    eval_sequences,
+    mcq_eval,
+    mcq_problems,
+    perplexity_eval,
+)
+from repro.eval.train import train_small_lm
+
+__all__ = [
+    "MCQProblem", "eval_sequences", "mcq_eval", "mcq_problems",
+    "perplexity_eval", "serve_mcq_accuracy", "serve_perplexity",
+    "train_small_lm",
+]

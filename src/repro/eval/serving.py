@@ -1,0 +1,96 @@
+"""Serving-path evaluators: the same tasks, through the real engine.
+
+``benchmarks/table1_accuracy.py`` scores fake-quant forwards; these run
+the IDENTICAL problem sets through :class:`repro.launch.serve.
+BatchedServer` — packed Pallas kernels, continuous batching, optionally
+paged KV — so the accuracy number covers the deployment path, not a
+proxy of it. Two hooks on the server make that possible without touching
+its jitted functions: ``capture_logits=True`` keeps the host logits row
+behind every emitted token, and ``Request.force`` teacher-forces the
+emission (perplexity scores the model's distribution over a HELD-OUT
+continuation, so the served tokens must be the corpus's, not the
+model's).
+
+Engine/quality invariant: for any params tree, serving-path MCQ accuracy
+equals bare-model MCQ accuracy on the same problems — pinned by
+tests/test_eval.py, which is exactly the gate that catches a packed
+kernel or scheduler change silently perturbing logits.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.eval.tasks import MCQProblem, score_mcq
+
+
+def _run_in_batches(model, params, all_reqs, *, slots: int, max_len: int,
+                    server_kw: dict):
+    """One server, every request: the scheduler streams the full request
+    list through ``slots`` batch slots (that's the continuous-batching
+    point), so one BatchedServer instance — and one compile per bucket —
+    serves the whole evaluation."""
+    from repro.launch.serve import BatchedServer
+
+    server = BatchedServer(model, params, slots, max_len,
+                           capture_logits=True, **server_kw)
+    stats = server.run(all_reqs)
+    if stats["requests"] != len(all_reqs):
+        raise RuntimeError(
+            f"eval server retired {stats['requests']}/{len(all_reqs)} "
+            "requests")
+    return stats
+
+
+def serve_mcq_accuracy(model, params, problems: list[MCQProblem], *,
+                       slots: int = 8, **server_kw) -> float:
+    """MCQ accuracy through the serving path: one request per problem,
+    ``max_new=1``, scored on the captured last-context-position logits
+    row (the same quantity the bare evaluator reads)."""
+    from repro.launch.serve import Request
+
+    ctx_max = max(len(p.context) for p in problems)
+    max_len = ctx_max + 1 + 8
+    reqs = [Request(i, np.asarray(p.context, np.int32), 1)
+            for i, p in enumerate(problems)]
+    _run_in_batches(model, params, reqs, slots=slots, max_len=max_len,
+                    server_kw=server_kw)
+    correct = 0
+    for r in reqs:
+        assert r.logits is not None and len(r.logits) == 1, r.rid
+        correct += score_mcq(r.logits[0], problems[r.rid])
+    return correct / len(problems)
+
+
+def serve_perplexity(model, params, seqs: np.ndarray, *, ctx_len: int = 8,
+                     slots: int = 8, **server_kw) -> dict:
+    """Perplexity of ``seqs[:, ctx_len:]`` given the first ``ctx_len``
+    tokens, through the serving path: the continuation is teacher-forced
+    (``Request.force``) while ``capture_logits`` keeps the distribution
+    the model held before each forced token. Returns ``{"ppl", "nll",
+    "tokens"}`` — same contract as the bare
+    :func:`repro.eval.tasks.perplexity_eval`."""
+    from repro.launch.serve import Request
+
+    if ctx_len < 1 or ctx_len >= seqs.shape[1]:
+        raise ValueError(f"ctx_len={ctx_len} must be in [1, "
+                         f"{seqs.shape[1] - 1})")
+    gen = seqs.shape[1] - ctx_len
+    max_len = seqs.shape[1] + 8
+    reqs = [
+        Request(i, np.asarray(s[:ctx_len], np.int32), gen,
+                force=np.asarray(s[ctx_len:], np.int32))
+        for i, s in enumerate(seqs)
+    ]
+    _run_in_batches(model, params, reqs, slots=slots, max_len=max_len,
+                    server_kw=server_kw)
+    nll, count = 0.0, 0
+    for r in reqs:
+        assert r.logits is not None and len(r.logits) == gen, r.rid
+        for j, row in enumerate(r.logits):
+            row = np.asarray(row, np.float64)
+            m = row.max()
+            lse = m + np.log(np.sum(np.exp(row - m)))
+            nll += -(row[int(r.force[j])] - lse)
+            count += 1
+    return {"ppl": float(np.exp(nll / max(count, 1))),
+            "nll": nll / max(count, 1), "tokens": count}

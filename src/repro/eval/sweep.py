@@ -1,0 +1,163 @@
+"""Accuracy-vs-bits sweep through the serving path (the quality bench).
+
+    PYTHONPATH=src python -m repro.eval.sweep --steps 260 --engine packed
+
+Trains the tiny offline LM, then measures MCQ accuracy and held-out
+perplexity at fp and at INT{8,4,2} x {linear baseline, SplitQuantV2} —
+every number produced by :mod:`repro.eval.serving` evaluators running
+through the real ``BatchedServer`` engine path. Appends one
+``quality``-kind record of ``quality/*`` rows to the persistent bench
+trajectory (``BENCH_quant_engine.json``), so the accuracy trajectory
+rides next to the perf trajectory and the CI quality gate can assert the
+paper's Table-1 signature on the latest record.
+
+``--quant-report PATH`` additionally writes the per-layer
+:class:`repro.core.QuantReport` artifacts (one per swept bit width,
+worst layer first) — the attribution companion to the task-level rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.core import QuantPolicy, build_quant_report, restructure
+from repro.data.pipeline import SyntheticLM
+from repro.eval.serving import serve_mcq_accuracy, serve_perplexity
+from repro.eval.tasks import eval_sequences, mcq_problems
+from repro.eval.train import DATA_SEED, train_small_lm
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[3] / (
+    "BENCH_quant_engine.json"
+)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=260,
+                    help="tiny-LM pretrain steps (the pinned recipe)")
+    ap.add_argument("--engine", default="packed",
+                    choices=("fake", "packed", "planes"),
+                    help="quantized execution path under the server")
+    ap.add_argument("--bits", default="8,4,2",
+                    help="comma-separated bit widths to sweep")
+    ap.add_argument("--mcq", type=int, default=200,
+                    help="4-way MCQ problems per accuracy cell")
+    ap.add_argument("--ppl-seqs", type=int, default=16,
+                    help="held-out sequences per perplexity cell")
+    ap.add_argument("--ppl-len", type=int, default=48,
+                    help="tokens per perplexity sequence")
+    ap.add_argument("--ppl-ctx", type=int, default=8,
+                    help="context tokens given for free (not scored)")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="server batch slots the evaluators run over")
+    ap.add_argument("--out", default=str(BENCH_PATH),
+                    help="bench trajectory JSON to append the record to")
+    ap.add_argument("--quant-report", default="",
+                    help="write per-layer QuantReport artifacts (one JSON "
+                         "with an entry per bit width) to this path")
+    return ap
+
+
+def _quantize(params, bits: int, split: bool, engine: str):
+    qm = restructure(params, QuantPolicy(bits=bits, split=split,
+                                         packed=engine == "packed"))
+    if engine == "fake":
+        return qm.materialize()
+    return qm.as_executable(group=True)
+
+
+def run_sweep(args) -> tuple[list[tuple[str, float, str]], dict]:
+    """Returns ``(rows, record)``: printable bench rows plus the JSON
+    record appended to the trajectory."""
+    t0 = time.time()
+    bit_widths = [int(b) for b in args.bits.split(",") if b]
+    cfg, model, params, loss = train_small_lm(steps=args.steps)
+    problems = mcq_problems(cfg.vocab_size, args.mcq)
+    seqs = eval_sequences(SyntheticLM(cfg.vocab_size, seed=DATA_SEED),
+                          args.ppl_seqs, args.ppl_len)
+
+    rows: list[tuple[str, float, str]] = [
+        ("quality/train_loss", loss,
+         f"tiny llama32-1b (reduced), {args.steps} steps"),
+    ]
+    acc: dict[str, float] = {}
+    ppl: dict[str, float] = {}
+
+    def cell(tag: str, p, note: str):
+        a = serve_mcq_accuracy(model, p, problems, slots=args.slots)
+        px = serve_perplexity(model, p, seqs, ctx_len=args.ppl_ctx,
+                              slots=args.slots)
+        acc[tag], ppl[tag] = a, px["ppl"]
+        rows.append((f"quality/acc_{tag}", a, note))
+        rows.append((f"quality/ppl_{tag}", px["ppl"], note))
+        print(f"[sweep] {tag:16s} acc={a:.3f} ppl={px['ppl']:.3f} ({note})")
+
+    cell("fp", params, "unquantized serving path")
+    reports = {}
+    for bits in bit_widths:
+        cell(f"int{bits}_baseline",
+             _quantize(params, bits, False, args.engine),
+             f"linear INT{bits}, {args.engine} engine")
+        cell(f"int{bits}_split",
+             _quantize(params, bits, True, args.engine),
+             f"SplitQuantV2 INT{bits}, {args.engine} engine")
+        rep = build_quant_report(params, QuantPolicy(
+            bits=bits, split=True, packed=args.engine == "packed"))
+        reports[f"int{bits}"] = rep.to_json()
+    if 4 in bit_widths:
+        rows.append(("quality/int4_split_recovery",
+                     acc["int4_split"] - acc["int4_baseline"],
+                     "the paper's headline: SplitQuantV2's accuracy win "
+                     "over the linear baseline at INT4"))
+    rows.append(("quality/wall_s", time.time() - t0, "total sweep time"))
+
+    record = {
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "kind": "quality",
+        "engine": args.engine,
+        "train": {"steps": args.steps, "loss": loss},
+        "tasks": {"mcq_problems": args.mcq, "ppl_seqs": args.ppl_seqs,
+                  "ppl_len": args.ppl_len, "ppl_ctx": args.ppl_ctx},
+        "accuracy": acc,
+        "perplexity": ppl,
+        "quant_summaries": {k: v["summary"] for k, v in reports.items()},
+        "rows": [{"name": n, "value": v, "note": d} for n, v, d in rows],
+    }
+    if args.quant_report:
+        with open(args.quant_report, "w") as f:
+            json.dump(reports, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[sweep] quant reports -> {args.quant_report}")
+    return rows, record
+
+
+def append_record(path: pathlib.Path, record: dict) -> int:
+    """Append into the shared ``{"schema": 2, "runs": [...]}`` trajectory
+    file (the same shape ``benchmarks/kernel_bench.py`` maintains)."""
+    runs = []
+    if path.exists():
+        try:
+            prev = json.loads(path.read_text())
+            runs = prev.get("runs", [prev] if "serve" in prev else [])
+        except (json.JSONDecodeError, OSError):
+            runs = []
+    runs.append(record)
+    path.write_text(json.dumps({"schema": 2, "runs": runs}, indent=2))
+    return len(runs)
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    rows, record = run_sweep(args)
+    out = pathlib.Path(args.out)
+    n = append_record(out, record)
+    for r in rows:
+        print(r)
+    print(f"[sweep] {out.name}: {n} run(s) recorded")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

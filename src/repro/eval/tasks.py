@@ -1,0 +1,127 @@
+"""Evaluation tasks: ARC-style 4-way MCQ and perplexity.
+
+Task construction is separated from scoring so the bare-model evaluators
+here and the serving-path evaluators (:mod:`repro.eval.serving`) score
+the IDENTICAL problem sets — the packed-engine-through-the-server number
+is comparable to the fake-quant number because both saw the same
+contexts, options and held-out sequences.
+
+Determinism contract: problem sets depend only on ``(vocab_size, seed,
+n_problems, ctx_len)``. ``mcq_problems`` reproduces the original
+``benchmarks/table1_accuracy.py`` RNG consumption order exactly, so
+accuracies are bit-for-bit comparable across the refactor.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import SyntheticLM
+from repro.eval.train import DATA_SEED
+
+
+@dataclasses.dataclass(frozen=True)
+class MCQProblem:
+    """One 4-way next-token problem: option index 0 is the truth."""
+
+    context: np.ndarray         # (ctx_len,) int32 prompt tokens
+    options: tuple[int, ...]    # 4 candidate next tokens, truth first
+
+
+def mcq_problems(vocab_size: int, n_problems: int = 200, seed: int = 123,
+                 ctx_len: int = 32,
+                 data_seed: int = DATA_SEED) -> list[MCQProblem]:
+    """Held-out 4-way MCQ set: which continuation token is most likely
+    after a context sampled from the training distribution? Distractors
+    are random tokens."""
+    src = SyntheticLM(vocab_size, seed=data_seed)
+    rng = np.random.default_rng(seed)
+    problems = []
+    for i in range(n_problems):
+        s = src.sample(np.random.default_rng((seed, i)), ctx_len + 1)
+        truth = int(s[-1])
+        options = (truth,
+                   *(int(o) for o in rng.choice(vocab_size, 3,
+                                                replace=False)))
+        problems.append(MCQProblem(np.asarray(s[:-1], np.int32), options))
+    return problems
+
+
+def score_mcq(logits_row: np.ndarray, problem: MCQProblem) -> bool:
+    """True when the model ranks the truth above all distractors."""
+    scores = [float(logits_row[o]) for o in problem.options]
+    return int(np.argmax(scores)) == 0
+
+
+def eval_sequences(source, n: int, seq_len: int,
+                   seed: int = 1234) -> np.ndarray:
+    """(n, seq_len + 1) held-out token sequences for perplexity, from
+    either corpus type: ``ByteCorpus`` slices windows, ``SyntheticLM``
+    (or anything with ``sample``) draws per-sequence streams."""
+    rng = np.random.default_rng(seed)
+    if hasattr(source, "windows"):
+        return source.windows(rng, n, seq_len)
+    return np.stack([
+        source.sample(np.random.default_rng((seed, i)), seq_len + 1)
+        for i in range(n)
+    ]).astype(np.int32)
+
+
+def _last_logits_fn(cfg):
+    """Jitted bare-model forward returning last-position logits (B, V)."""
+    from repro.models import transformer as tfm
+
+    @jax.jit
+    def last_logits(params, tokens):
+        x = tfm.embed_tokens(cfg, params, tokens)
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                               tokens.shape).astype(jnp.int32)
+        h, _, _ = tfm.decoder_forward(cfg, params, x, pos)
+        return tfm.logits_fn(cfg, params, h[:, -1:])
+
+    return last_logits
+
+
+def mcq_eval(cfg, model, params, n_problems: int = 200,
+             seed: int = 123, ctx_len: int = 32) -> float:
+    """Bare-model MCQ accuracy (one batched forward, no serving stack) —
+    the fake-quant evaluation the paper's Table 1 reports."""
+    problems = mcq_problems(cfg.vocab_size, n_problems, seed=seed,
+                            ctx_len=ctx_len)
+    contexts = np.stack([p.context for p in problems])
+    logits = np.asarray(
+        _last_logits_fn(cfg)(params, jnp.asarray(contexts)))[:, 0]
+    correct = sum(score_mcq(logits[i], p) for i, p in enumerate(problems))
+    return correct / n_problems
+
+
+def perplexity_eval(cfg, model, params, seqs: np.ndarray,
+                    ctx_len: int = 8) -> dict:
+    """Bare-model perplexity of ``seqs[:, ctx_len:]`` given the first
+    ``ctx_len`` tokens: one full forward per batch, log-softmax scored at
+    every continuation position. Returns ``{"ppl", "nll", "tokens"}``."""
+    from repro.models import transformer as tfm
+
+    @jax.jit
+    def all_logits(params, tokens):
+        x = tfm.embed_tokens(cfg, params, tokens)
+        pos = jnp.broadcast_to(jnp.arange(tokens.shape[1])[None],
+                               tokens.shape).astype(jnp.int32)
+        h, _, _ = tfm.decoder_forward(cfg, params, x, pos)
+        return tfm.logits_fn(cfg, params, h)
+
+    tokens = jnp.asarray(seqs[:, :-1])
+    logits = np.asarray(all_logits(params, tokens), np.float64)
+    nll, count = 0.0, 0
+    for b in range(seqs.shape[0]):
+        for j in range(ctx_len - 1, seqs.shape[1] - 1):
+            row = logits[b, j]
+            m = row.max()
+            lse = m + np.log(np.sum(np.exp(row - m)))
+            nll += -(row[seqs[b, j + 1]] - lse)
+            count += 1
+    return {"ppl": float(np.exp(nll / max(count, 1))),
+            "nll": nll / max(count, 1), "tokens": count}

@@ -135,6 +135,13 @@ class Request:
     #                             reloads them instead of replay recompute
     queued_t: float | None = None  # service submit time (tenant-queue entry
     #                                starts the TTFT clock, not admission)
+    force: np.ndarray | None = None  # teacher forcing (eval): emit
+    #                             force[len(out)] instead of sampling, while
+    #                             the model still scores every position —
+    #                             perplexity through the real serving path
+    logits: list | None = None  # capture_logits=True: host (V,) logits row
+    #                             behind each emitted token, append order ==
+    #                             out order (the eval scorers read these)
 
 
 def sample_token(
@@ -165,6 +172,11 @@ def _bucket(n: int, minimum: int) -> int:
     while b < n:
         b *= 2
     return b
+
+
+# divergence magnitudes span many decades (INT8 KL ~1e-5, INT2 KL ~10), so
+# the probe histograms bucket by powers of ten, not the latency buckets
+PROBE_BUCKETS = tuple(10.0 ** e for e in range(-8, 3))
 
 
 class BatchedServer:
@@ -222,7 +234,9 @@ class BatchedServer:
                  slo=None, mesh=None,
                  obs: Observability | None = None,
                  trace_cap: int = DEFAULT_CAP,
-                 profile: JaxProfile | None = None):
+                 profile: JaxProfile | None = None,
+                 quality_probe: int = 0, probe_params=None,
+                 capture_logits: bool = False):
         self.model = model
         self.params = params
         self.slots = batch_slots
@@ -437,6 +451,41 @@ class BatchedServer:
             self._prefill = jax.jit(_prefill_fn,
                                     out_shardings=(None, self._cache_shd))
 
+        # -- quality observability (see module docstring) --------------------
+        # capture_logits: the eval path asks for the host logits row behind
+        # every emitted token; force (per request) teacher-forces the
+        # emission. Neither touches the jitted functions.
+        self.capture_logits = capture_logits
+        # quality_probe=N: every N decode/verify ticks, replay each live
+        # row's context through an fp-reference forward and record the
+        # logit divergence (KL, top-1 agreement, max-abs-diff) between the
+        # reference and the quantized logits THE SERVER JUST COMPUTED. The
+        # probe owns a dedicated 1-slot dense cache and its own jit: it
+        # never reads or writes the serving cache, never touches
+        # self._prefill / self._decode (whose compile counts the stats
+        # report), and only consumes host copies of serving logits — the
+        # enabled-vs-disabled streams are bit-identical by construction.
+        self.quality_probe = quality_probe
+        self.probe_samples = 0
+        self.probe_agreements = 0
+        self._probe_tick = 0
+        if quality_probe:
+            if probe_params is None:
+                raise ValueError("quality_probe requires probe_params "
+                                 "(the fp reference weight tree)")
+            self._probe_params = probe_params
+            self._probe_cache = model.init_cache(1, max_len)
+
+            def _probe_fn(params, tokens, lengths, cache):
+                fresh = jnp.ones((tokens.shape[0],), bool)
+                starts = jnp.zeros((tokens.shape[0],), jnp.int32)
+                cache = reset_slots(cache, fresh, starts)
+                return model.prefill(
+                    params, {"tokens": tokens, "lengths": lengths}, cache
+                )
+
+            self._probe_prefill = jax.jit(_probe_fn)
+
     # -- sampling / streaming -----------------------------------------------
 
     def _pick_tokens(self, logits) -> Callable[[int], int]:
@@ -447,13 +496,33 @@ class BatchedServer:
         Each request draws from its OWN stream seeded by (server seed,
         rid): the sampled tokens depend only on the request and the model,
         not on which slot it landed in, what its neighbours were, or the
-        order the scheduler admitted it."""
-        if self.sampling["temperature"] <= 0.0:
+        order the scheduler admitted it.
+
+        Eval hooks: ``capture_logits`` appends the host row behind each
+        pick to the request's ``logits`` list, and a request's ``force``
+        array teacher-forces the emitted token — both need the full rows
+        on the host, so the device-argmax fast path only runs when
+        neither is in play (serving streams stay untouched)."""
+        eval_hooks = self.capture_logits or any(
+            r is not None and r.force is not None for r in self.active)
+        if self.sampling["temperature"] <= 0.0 and not eval_hooks:
             toks = np.asarray(jnp.argmax(logits[:, 0], -1))
             return lambda i: int(toks[i])
         rows = np.asarray(logits[:, 0])
-        return lambda i: sample_token(rows[i], **self.sampling,
-                                      rng=self.active[i].rng)
+
+        def pick(i: int) -> int:
+            r = self.active[i]
+            if self.capture_logits:
+                if r.logits is None:
+                    r.logits = []
+                r.logits.append(rows[i].copy())
+            if r.force is not None and len(r.out) < len(r.force):
+                return int(r.force[len(r.out)])
+            if self.sampling["temperature"] <= 0.0:
+                return int(np.argmax(rows[i]))
+            return sample_token(rows[i], **self.sampling, rng=r.rng)
+
+        return pick
 
     def _emit(self, req: Request, tok: int):
         req.out.append(tok)
@@ -493,6 +562,73 @@ class BatchedServer:
             self.registry.counter(
                 "serve_tokens_total", "tokens emitted, by replica",
             ).inc(emitted, replica=self._rep(i))
+
+    # -- online divergence probe (quality observability) ---------------------
+
+    def _probe_due(self) -> bool:
+        """Tick the probe clock (one tick per decode/verify round) and
+        decide whether this round is a probed one."""
+        if not self.quality_probe:
+            return False
+        self._probe_tick += 1
+        return self._probe_tick % self.quality_probe == 0
+
+    def _probe_forward(self, seq: np.ndarray) -> np.ndarray:
+        """fp-reference logits after ``seq``: one B=1 prefill over the
+        probe's private dense cache, bucketed so the shadow jit compiles
+        once per power-of-two length like the serving prefill."""
+        lb = min(_bucket(len(seq), self.bucket_min), self.max_len)
+        tokens = np.zeros((1, lb), np.int32)
+        tokens[0, : len(seq)] = seq
+        lengths = np.array([len(seq)], np.int32)
+        logits, self._probe_cache = self._probe_prefill(
+            self._probe_params, jnp.asarray(tokens), jnp.asarray(lengths),
+            self._probe_cache,
+        )
+        return np.asarray(logits[0, 0])
+
+    def _probe_row(self, r: Request, q_row: np.ndarray) -> None:
+        """Compare the quantized serving distribution for request ``r``'s
+        next token (``q_row``, already on the host) against the fp
+        reference over the same context, and file the divergence into the
+        registry/timeline. Host-side only — nothing here can perturb the
+        serving streams."""
+        seq = np.concatenate([r.prompt, np.asarray(r.out, np.int32)])
+        if len(seq) > self.max_len:
+            return
+        fp = self._probe_forward(seq).astype(np.float64)
+        q = np.asarray(q_row, np.float64)
+        m = fp.max()
+        logp_fp = fp - (m + np.log(np.sum(np.exp(fp - m))))
+        mq = q.max()
+        logp_q = q - (mq + np.log(np.sum(np.exp(q - mq))))
+        kl = float(np.sum(np.exp(logp_fp) * (logp_fp - logp_q)))
+        agree = int(np.argmax(fp)) == int(np.argmax(q))
+        mad = float(np.max(np.abs(fp - q)))
+        self.probe_samples += 1
+        self.probe_agreements += int(agree)
+        if self.registry.enabled:
+            reg = self.registry
+            reg.histogram(
+                "quality_probe_kl",
+                "KL(fp || quantized) of next-token logits at probed "
+                "decode positions", buckets=PROBE_BUCKETS,
+            ).observe(max(kl, 0.0))
+            reg.histogram(
+                "quality_probe_max_abs_diff",
+                "max |logit_fp - logit_quantized| at probed positions",
+                buckets=PROBE_BUCKETS,
+            ).observe(mad)
+            reg.counter(
+                "quality_probe_samples_total", "decode positions probed "
+                "against the fp reference").inc()
+            if agree:
+                reg.counter(
+                    "quality_probe_top1_agree_total",
+                    "probed positions where fp and quantized argmax "
+                    "agree").inc()
+        self._tl("probe", rid=r.rid, kl=round(kl, 6), agree=agree,
+                 max_abs_diff=round(mad, 6))
 
     # -- slot management ----------------------------------------------------
 
@@ -1224,6 +1360,11 @@ class BatchedServer:
         logits, self.cache = self._call("decode", _step)
         t1 = _now()
         self._tl("decode", rows=int(active.sum()))
+        if self._probe_due():
+            rows_host = np.asarray(logits[:, 0])
+            for i, r in enumerate(self.active):
+                if active[i]:
+                    self._probe_row(r, rows_host[i])
         pick = self._pick_tokens(logits)
         for i, r in enumerate(self.active):
             if active[i]:
@@ -1324,9 +1465,12 @@ class BatchedServer:
                 self._cow_guard(i, r, int(base[i]), 1 + len(di))
         self._sync_table()
 
+        probe_now = self._probe_due()
+
         def _score():
             return self.verifier.score(self.cache, tokens, lengths,
-                                       greedy=greedy)
+                                       greedy=greedy,
+                                       keep_logits0=probe_now)
 
         t0 = _now()
         scores, self.cache, snap = self._call("verify", _score)
@@ -1334,6 +1478,13 @@ class BatchedServer:
         self._tl("verify", rows=len(rows), drafting=len(jobs),
                  k=self.speculate,
                  degraded=self.spec.degraded_rounds - deg0)
+        if probe_now:
+            # position 0 of the verify chunk is the target distribution
+            # after the last emitted token — the same quantity step()
+            # probes in plain mode
+            logits0 = self.verifier.last_logits0
+            for i, r in rows:
+                self._probe_row(r, logits0[i])
         self.spec.rounds += 1
         self.spec.target_forwards += 1
         # host-side acceptance per request, then one batched rollback
@@ -1486,6 +1637,11 @@ class BatchedServer:
         front-end hands it ``FairScheduler.drain``), and an idle server
         waits ``idle_wait_s`` instead of exiting — the run then ends only
         through the drain path (SIGTERM guard or ``max_wall_s``)."""
+        if self.speculate and any(r.force is not None for r in requests):
+            raise ValueError(
+                "teacher forcing (Request.force) is incompatible with "
+                "speculative decoding: drafts would verify against the "
+                "model's own continuation, not the forced one")
         self._on_token = on_token
         self._pending = list(requests)
         for r in self._pending:
@@ -1645,6 +1801,15 @@ class BatchedServer:
                 # the draft pool must drain like the target pool: a draft
                 # page alive after every request retired is a real leak
                 "draft_pages_leaked": self.drafter.alloc.in_use,
+            }
+        if self.quality_probe:
+            stats["probe"] = {
+                "every": self.quality_probe,
+                "samples": self.probe_samples,
+                "top1_agreements": self.probe_agreements,
+                "top1_agreement_rate": (
+                    self.probe_agreements / max(self.probe_samples, 1)
+                ),
             }
         self._export_metrics(stats, cc)
         stats["obs"] = {
@@ -1903,6 +2068,18 @@ def build_parser() -> argparse.ArgumentParser:
                          "ticks")
     ap.add_argument("--profile-ticks", type=int, default=8,
                     help="decode ticks the --jax-profile trace spans")
+    ap.add_argument("--quality-probe", type=int, default=0,
+                    help="every N decode ticks, replay each live row's "
+                         "context through an fp-reference forward and "
+                         "record quantized-vs-fp logit divergence (KL, "
+                         "top-1 agreement, max-abs-diff) into the "
+                         "registry; greedy streams are bit-identical "
+                         "probe-on vs probe-off (0 = off)")
+    ap.add_argument("--quant-report", default="",
+                    help="write the ranked per-layer quantization-quality "
+                         "report (SQNR base vs split, clipping, outlier "
+                         "mass — worst layer first) to this JSON path and "
+                         "file its gauges into the metrics registry")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy argmax (default); > 0 samples")
     ap.add_argument("--top-k", type=int, default=0,
@@ -1929,6 +2106,26 @@ def build_engine(args):
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     w_bytes = decode_weight_bytes(params, tie_embeddings=cfg.tie_embeddings)
+    # fp reference hooks are captured BEFORE quantization rebinds params:
+    # the probe needs the unquantized tree, and the quant report measures
+    # the fp weights the quantizer is about to compress
+    probe_params = params if getattr(args, "quality_probe", 0) else None
+    if getattr(args, "quant_report", ""):
+        from repro.core import build_quant_report
+        from repro.obs.metrics import global_registry
+        t0 = time.time()
+        rep = build_quant_report(params, QuantPolicy(
+            bits=args.bits or 4, split=args.split,
+            packed=args.engine == "packed",
+        ))
+        rep.record(global_registry())
+        rep.save(args.quant_report)
+        s = rep.summary()
+        print(f"[serve] quant report -> {args.quant_report} "
+              f"({s['layers']} layers, mean SQNR gain "
+              f"{s['mean_sqnr_gain_db']:+.2f} dB, worst layer "
+              f"{s['worst_layer']} at {s['worst_layer_sqnr_split_db']:.2f} "
+              f"dB, {time.time() - t0:.1f}s)")
     draft_params = None
     if args.speculate:
         # the drafter quantizes the SAME weights the target serves —
@@ -1979,12 +2176,13 @@ def build_engine(args):
         mesh = make_mesh((d, m), ("data", "model"))
         print(f"[serve] mesh: {d} data replica(s) x {m} model shard(s) "
               f"over {d * m} {jax.devices()[0].platform} device(s)")
-    return cfg, model, params, draft_params, w_bytes, mesh
+    return cfg, model, params, draft_params, w_bytes, mesh, probe_params
 
 
 def main(argv=None):
     args = build_parser().parse_args(argv)
-    cfg, model, params, draft_params, w_bytes, mesh = build_engine(args)
+    (cfg, model, params, draft_params, w_bytes, mesh,
+     probe_params) = build_engine(args)
 
     if args.prompt_lens:
         plens = [int(x) for x in args.prompt_lens.split(",")]
@@ -2046,6 +2244,7 @@ def main(argv=None):
             spill_store=make_spill(), spill_threshold=args.spill_threshold,
             slo=make_slo(), mesh=mesh, obs=obs,
             trace_cap=args.trace_cap, profile=profile,
+            quality_probe=args.quality_probe, probe_params=probe_params,
         )
 
     greedy = args.temperature <= 0.0
@@ -2098,6 +2297,14 @@ def main(argv=None):
               f"tpot p50={req_sum.get('tpot_s', {}).get('p50', 0) * 1e3:.1f}"
               f"ms | queue p50="
               f"{req_sum.get('queue_wait_s', {}).get('p50', 0) * 1e3:.1f}ms")
+    if args.quality_probe:
+        pr = stats["probe"]
+        print(f"[serve] quality probe: {pr['samples']} positions probed "
+              f"(every {pr['every']} ticks), top-1 agreement "
+              f"{pr['top1_agreement_rate']:.3f}")
+        if stats["decode_steps"] >= args.quality_probe and not pr["samples"]:
+            print("[serve] FAIL: probe enabled but zero positions probed")
+            return 1
     if server.timeline.dropped:
         print(f"[serve] FAIL: {server.timeline.dropped} timeline records "
               f"dropped (ring cap {server.timeline.cap}; raise "

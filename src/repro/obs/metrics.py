@@ -194,6 +194,31 @@ class Histogram(_Family):
         return self.buckets[-1]
 
 
+# Quantiles summarized per histogram series in Registry.snapshot(): the
+# stats builder and bench rows read p50/p90/p99 without re-deriving them
+# from raw bucket counts at every call site.
+SNAPSHOT_QUANTILES: tuple[float, ...] = (0.5, 0.9, 0.99)
+
+
+def _series_quantiles(buckets: tuple[float, ...], h: "_HistValue") -> dict:
+    """Bucket-resolution quantile summaries for one histogram series."""
+    out = {}
+    for q in SNAPSHOT_QUANTILES:
+        if h.count == 0:
+            out[f"p{int(q * 100)}"] = 0.0
+            continue
+        rank = q * h.count
+        seen = 0
+        val = buckets[-1]
+        for j, c in enumerate(h.counts):
+            seen += c
+            if seen >= rank and c:
+                val = buckets[j] if j < len(buckets) else buckets[-1]
+                break
+        out[f"p{int(q * 100)}"] = val
+    return out
+
+
 class Registry:
     """Named metric families with get-or-create accessors.
 
@@ -227,6 +252,43 @@ class Registry:
                   buckets: tuple[float, ...] = DEFAULT_TIME_BUCKETS
                   ) -> Histogram:
         return self._get(Histogram, name, help, buckets=buckets)
+
+    def merge(self, other: "Registry") -> None:
+        """Fold ``other``'s series into this registry.
+
+        Counters and histograms accumulate (bucket-wise for histograms —
+        both sides must share bucket edges); gauges take ``other``'s value
+        (last write wins, matching repeated ``set``). This is how
+        quant-time metrics recorded into the global registry *before* a
+        server exists surface in the service's per-run ``/metrics`` export
+        without double-counting on repeated scrapes: the service merges
+        once at startup, then exports with ``include_global=False`` — or
+        callers simply re-merge into a fresh registry per export."""
+        if not other.enabled:
+            return
+        with other._lock:
+            fams = list(other._families.items())
+        for name, fam in fams:
+            if isinstance(fam, Histogram):
+                mine = self.histogram(name, fam.help, buckets=fam.buckets)
+                if mine.buckets != fam.buckets:
+                    raise ValueError(
+                        f"histogram {name}: bucket edges differ; refusing "
+                        f"to merge misaligned distributions")
+                for lbl, h in fam.series():
+                    dst = mine._child(lbl)
+                    for j, c in enumerate(h.counts):
+                        dst.counts[j] += c
+                    dst.sum += h.sum
+                    dst.count += h.count
+            elif isinstance(fam, Counter):
+                mine = self.counter(name, fam.help)
+                for lbl, v in fam.series():
+                    mine.inc(v, **lbl)
+            else:
+                mine = self.gauge(name, fam.help)
+                for lbl, v in fam.series():
+                    mine.set(v, **lbl)
 
     # -- reads ---------------------------------------------------------------
 
@@ -267,7 +329,8 @@ class Registry:
                         "buckets": list(fam.buckets),
                         "series": [
                             {"labels": lbl, "counts": list(h.counts),
-                             "sum": h.sum, "count": h.count}
+                             "sum": h.sum, "count": h.count,
+                             "quantiles": _series_quantiles(fam.buckets, h)}
                             for lbl, h in fam.series()
                         ],
                     }
@@ -346,6 +409,9 @@ class NullRegistry(Registry):
 
     def histogram(self, name: str, help: str = "", buckets=None):
         return self._null_counter
+
+    def merge(self, other: "Registry") -> None:
+        pass
 
     def snapshot(self, include_global: bool = True) -> dict:
         return {"const_labels": {}, "metrics": {}}

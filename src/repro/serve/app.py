@@ -356,8 +356,8 @@ def _make_service(args, *, guard=None):
     """(engine, app) for a parsed service CLI namespace."""
     from repro.launch import serve as launch
 
-    cfg, model, params, draft_params, w_bytes, mesh = launch.build_engine(
-        args)
+    (cfg, model, params, draft_params, w_bytes, mesh,
+     probe_params) = launch.build_engine(args)
     plens = ([int(x) for x in args.prompt_lens.split(",")]
              if args.prompt_lens else [args.prompt_len])
     max_len = args.shared_prefix + max(plens) + args.gen + 8
@@ -395,6 +395,7 @@ def _make_service(args, *, guard=None):
         guard=guard, max_wall_s=args.max_wall_s,
         spill_store=spill, spill_threshold=args.spill_threshold,
         slo=slo, mesh=mesh, obs=obs, trace_cap=args.trace_cap,
+        quality_probe=args.quality_probe, probe_params=probe_params,
     )
     app = ServeApp(server, fair=FairScheduler(quantum=args.quantum),
                    host=args.host, port=args.port)

@@ -1,0 +1,365 @@
+"""Quantization-quality observability: quant reports, online divergence
+probes, serving-path evaluators, and the HF checkpoint importer.
+
+The contracts under test (this tentpole):
+
+* the online probe is PURE OBSERVATION — greedy streams and compile
+  counts are bit-identical with the probe on and off, plain and
+  speculative, both cache families, while the probe-on run files a
+  nonzero number of divergence samples into real histograms,
+* the serving-path evaluators reproduce bare-model numbers exactly
+  (MCQ) / to float tolerance (perplexity), and the packed INT8 engine
+  scores what fake-quant scores on a trained LM,
+* the per-layer quant report obeys the paper's invariant (splitting
+  never hurts SQNR), ranks worst-first, and round-trips through the
+  registry's Prometheus exposition,
+* histogram quantile summaries and ``Registry.merge`` are exact and
+  survive a ``parse_prometheus`` round-trip,
+* HF-named safetensors checkpoints import bitwise onto the config zoo
+  (orientation, norm offset, and layer stacking all inverted correctly),
+  and malformed checkpoints fail loudly.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.hf_import import (
+    export_hf_state,
+    import_hf_checkpoint,
+    import_hf_state,
+    read_safetensors,
+    write_safetensors,
+)
+from repro.configs import get_config
+from repro.core import QuantPolicy, build_quant_report, restructure
+from repro.eval import (
+    mcq_eval,
+    mcq_problems,
+    perplexity_eval,
+    serve_mcq_accuracy,
+    serve_perplexity,
+    train_small_lm,
+)
+from repro.eval.tasks import eval_sequences
+from repro.data.pipeline import SyntheticLM
+from repro.eval.train import DATA_SEED
+from repro.launch.serve import BatchedServer, Request
+from repro.models import build_model
+from repro.obs import NullRegistry, Registry, parse_prometheus
+
+
+def _tiny_model(arch="llama32-1b", n_layers=2, seed=0):
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return cfg, model, params
+
+
+def _requests(cfg, lens, gen, seed0=100):
+    return [
+        Request(i, np.random.default_rng(seed0 + i).integers(
+            0, cfg.vocab_size, ln, dtype=np.int32), gen)
+        for i, ln in enumerate(lens)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Online divergence probe: non-perturbing, and actually measuring
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch,n_layers", [("llama32-1b", 2),
+                                           ("zamba2-1.2b", 4)])
+@pytest.mark.parametrize("speculate", [0, 3])
+def test_probe_streams_bit_identical_and_divergence_nonzero(arch, n_layers,
+                                                            speculate):
+    """The acceptance pin: serving a packed-INT4 engine with
+    ``quality_probe`` on and off yields identical greedy streams and
+    compile counts, while the probe-on run records a nonzero KL
+    distribution against the fp reference."""
+    cfg, model, fp_params = _tiny_model(arch, n_layers=n_layers)
+    qparams = restructure(fp_params, QuantPolicy(bits=4, packed=True)
+                          ).as_executable(group=True)
+    draft = (restructure(fp_params, QuantPolicy(bits=2, packed=True))
+             .as_executable(group=True) if speculate else None)
+    kw = dict(batch_slots=2, max_len=32, paged=True, page_size=4,
+              num_pages=24, speculate=speculate, draft_params=draft)
+    lens, gen = [6, 11, 4, 9], 5
+
+    def serve(probe):
+        reqs = _requests(cfg, lens, gen)
+        server = BatchedServer(
+            model, qparams, quality_probe=probe,
+            probe_params=fp_params if probe else None, **kw)
+        stats = server.run(reqs)
+        return ({r.rid: r.out for r in reqs}, stats["decode_compiles"],
+                stats["prefill_compiles"], stats, server)
+
+    off = serve(0)
+    on = serve(2)
+    assert on[0] == off[0], (arch, speculate)        # streams bit-identical
+    assert on[1:3] == off[1:3], (arch, speculate)    # no extra compiles
+    pr = on[3]["probe"]
+    assert "probe" not in off[3]
+    assert pr["every"] == 2 and pr["samples"] > 0
+    assert 0.0 <= pr["top1_agreement_rate"] <= 1.0
+    reg = on[4].registry
+    kl = reg.histogram("quality_probe_kl")
+    total = sum(h.count for _, h in kl.series())
+    assert total == pr["samples"]
+    # INT4 vs fp genuinely diverges: the KL mass is nonzero
+    assert sum(h.sum for _, h in kl.series()) > 0
+    mad = reg.histogram("quality_probe_max_abs_diff")
+    assert sum(h.count for _, h in mad.series()) == pr["samples"]
+    assert reg.total("quality_probe_samples_total") == pr["samples"]
+    assert reg.total("quality_probe_top1_agree_total") == (
+        pr["top1_agreements"])
+    # probed positions land in the timeline for per-request attribution
+    probes = [e for e in on[4].timeline.records() if e["kind"] == "probe"]
+    assert len(probes) == pr["samples"]
+    assert all(e["kl"] >= 0 and e["agree"] in (0, 1) for e in probes)
+
+
+def test_probe_requires_reference_params():
+    cfg, model, params = _tiny_model()
+    with pytest.raises(ValueError, match="probe_params"):
+        BatchedServer(model, params, batch_slots=2, max_len=32,
+                      quality_probe=4)
+
+
+# ---------------------------------------------------------------------------
+# Serving-path evaluators == bare-model evaluators
+# ---------------------------------------------------------------------------
+
+
+def test_serving_mcq_matches_bare_mcq_exactly():
+    """Teacher-forced capture through the real engine selects the same
+    argmax options as the bare batched forward: identical accuracy."""
+    cfg, model, params = _tiny_model()
+    n = 60
+    bare = mcq_eval(cfg, model, params, n_problems=n)
+    served = serve_mcq_accuracy(
+        model, params, mcq_problems(cfg.vocab_size, n), slots=4)
+    assert served == bare
+
+
+def test_serving_perplexity_matches_bare_perplexity():
+    cfg, model, params = _tiny_model()
+    seqs = eval_sequences(SyntheticLM(cfg.vocab_size, seed=DATA_SEED),
+                          8, 24)
+    bare = perplexity_eval(cfg, model, params, seqs, ctx_len=8)
+    served = serve_perplexity(model, params, seqs, ctx_len=8, slots=4)
+    assert served["tokens"] == bare["tokens"]
+    assert abs(served["nll"] - bare["nll"]) < 1e-3
+
+
+def test_teacher_forcing_rejected_under_speculation():
+    """Forced continuations would silently diverge from the verifier's
+    accept/reject bookkeeping — refused up front."""
+    cfg, model, params = _tiny_model()
+    draft = restructure(params, QuantPolicy(bits=4, packed=True)
+                        ).as_executable(group=True)
+    server = BatchedServer(model, params, batch_slots=2, max_len=32,
+                           paged=True, page_size=4, num_pages=24,
+                           speculate=3, draft_params=draft)
+    reqs = [Request(0, np.arange(4, dtype=np.int32), 4,
+                    force=np.array([1, 2, 3, 4], np.int32))]
+    with pytest.raises(ValueError, match="force"):
+        server.run(reqs)
+
+
+@pytest.fixture(scope="module")
+def trained_lm():
+    """One short pretrain shared by the engine-agreement tests (enough
+    steps to be decisively above chance, small enough for CPU CI)."""
+    return train_small_lm(steps=120)
+
+
+def test_packed_int8_serving_matches_fake_quant(trained_lm):
+    """The packed INT8 engine and materialized fake-quant weights score
+    the same trained model within noise — the engine path itself does not
+    cost accuracy."""
+    cfg, model, params, _ = trained_lm
+    problems = mcq_problems(cfg.vocab_size, 100)
+    accs = {}
+    for tag, engine in (("fake", "materialize"), ("packed", "exec")):
+        qm = restructure(params, QuantPolicy(bits=8, split=True,
+                                             packed=engine == "exec"))
+        p = (qm.materialize() if engine == "materialize"
+             else qm.as_executable(group=True))
+        accs[tag] = serve_mcq_accuracy(model, p, problems, slots=4)
+    fp = serve_mcq_accuracy(model, params, problems, slots=4)
+    assert fp > 0.30                      # trained: decisively above chance
+    assert abs(accs["packed"] - accs["fake"]) <= 0.02
+    assert abs(accs["packed"] - fp) <= 0.05   # INT8 ~ fp (paper Table 1)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer quant report
+# ---------------------------------------------------------------------------
+
+
+def test_quant_report_invariants_and_prometheus_roundtrip(tmp_path):
+    cfg, model, params = _tiny_model()
+    rep = build_quant_report(params, QuantPolicy(bits=4, packed=True))
+    assert rep.layers
+    for r in rep.layers:
+        # the paper's core claim, asserted per layer: splitting never hurts
+        assert r.sqnr_split_db >= r.sqnr_base_db - 1e-6, r.layer
+        assert 0.0 <= r.clip_frac_base <= 1.0
+        assert 0.0 <= r.outlier_frac <= 1.0
+    ranked = rep.ranked()
+    assert [r.sqnr_split_db for r in ranked] == sorted(
+        r.sqnr_split_db for r in ranked)
+    s = rep.summary()
+    assert s["layers"] == len(rep.layers)
+    assert s["worst_layer"] == ranked[0].layer
+
+    out = tmp_path / "report.json"
+    rep.save(out)
+    import json
+    blob = json.loads(out.read_text())
+    assert blob["schema"] == 1 and len(blob["layers"]) == len(rep.layers)
+
+    reg = Registry(const_labels={"family": cfg.name})
+    rep.record(reg)
+    parsed = parse_prometheus(reg.to_prometheus())
+    sq = {(lbl["layer"], lbl["split"]): v
+          for lbl, v in parsed["quant_layer_sqnr_db"]}
+    for r in rep.layers:
+        assert sq[(r.layer, "0")] == pytest.approx(r.sqnr_base_db)
+        assert sq[(r.layer, "1")] == pytest.approx(r.sqnr_split_db)
+    assert parsed["quant_layers_total"][0][1] == len(rep.layers)
+
+
+# ---------------------------------------------------------------------------
+# Registry: quantile summaries + merge
+# ---------------------------------------------------------------------------
+
+
+def test_histogram_quantiles_in_snapshot():
+    reg = Registry()
+    h = reg.histogram("t", buckets=(1.0, 2.0, 4.0, 8.0))
+    for v in [0.5] * 50 + [3.0] * 45 + [7.0] * 5:
+        h.observe(v)
+    assert h.quantile(0.5) == 1.0
+    assert h.quantile(0.99) == 8.0
+    snap = reg.snapshot()["metrics"]["t"]["series"][0]
+    assert snap["quantiles"] == {"p50": 1.0, "p90": 4.0, "p99": 8.0}
+
+
+def test_registry_merge_exact_and_roundtrip():
+    def make(n):
+        r = Registry()
+        r.counter("c").inc(n, kind="x")
+        r.gauge("g").set(n)
+        h = r.histogram("h", buckets=(1.0, 10.0))
+        for v in range(n):
+            h.observe(float(v))
+        return r
+
+    a, b = make(3), make(5)
+    a.merge(b)
+    assert a.value("c", kind="x") == 8
+    assert a.value("g") == 5            # gauges: last write wins
+    h = a.histogram("h")
+    assert sum(hh.count for _, hh in h.series()) == 8
+    # merged state survives the text exposition round-trip
+    parsed = parse_prometheus(a.to_prometheus(include_global=False))
+    assert dict(parsed["c"][0][0]) == {"kind": "x"}
+    assert parsed["c"][0][1] == 8
+    counts = {lbl["le"]: v for lbl, v in parsed["h_bucket"]}
+    assert counts["+Inf"] == 8
+
+    with pytest.raises(ValueError, match="bucket"):
+        bad = Registry()
+        bad.histogram("h", buckets=(2.0, 3.0))
+        a.merge(bad)
+
+    null = NullRegistry()
+    null.merge(a)                        # inert, not an error
+    assert not null.enabled
+    c = Registry()
+    c.merge(null)                        # merging a disabled source: no-op
+    assert c.to_prometheus(include_global=False).strip() == ""
+
+
+# ---------------------------------------------------------------------------
+# HF checkpoint import
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama32-1b", "qwen3-0.6b"])
+def test_hf_import_roundtrip_bitwise(arch, tmp_path):
+    """init → HF names → safetensors bytes → import reproduces the exact
+    tree (structure and bits), hence the exact forward."""
+    cfg, model, params = _tiny_model(arch)
+    path = tmp_path / "model.safetensors"
+    write_safetensors(path, export_hf_state(params, cfg),
+                      metadata={"format": "pt"})
+    imported = import_hf_checkpoint(path, cfg)
+    flat_a = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat_b = jax.tree_util.tree_flatten_with_path(imported)[0]
+    assert [k for k, _ in flat_a] == [k for k, _ in flat_b]
+    for (k, x), (_, y) in zip(flat_a, flat_b):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), (arch, k)
+    toks = np.arange(6, dtype=np.int32)[None]
+    lens = np.array([6], np.int32)
+    la, _ = model.prefill(params, {"tokens": toks, "lengths": lens},
+                          model.init_cache(1, 16))
+    lb, _ = model.prefill(imported, {"tokens": toks, "lengths": lens},
+                          model.init_cache(1, 16))
+    assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_hf_import_failure_modes(tmp_path):
+    cfg, _, params = _tiny_model()
+    state = export_hf_state(params, cfg)
+
+    missing = dict(state)
+    del missing["model.layers.0.self_attn.q_proj.weight"]
+    with pytest.raises(KeyError, match="q_proj"):
+        import_hf_state(missing, cfg)
+
+    extra = dict(state)
+    extra["model.layers.0.self_attn.rotary_emb.inv_freq"] = np.zeros(
+        4, np.float32)                   # known-harmless HF extra: ignored
+    extra["some.unknown.weight"] = np.zeros(4, np.float32)
+    with pytest.raises(ValueError, match="unmapped"):
+        import_hf_state(extra, cfg)
+    import_hf_state(extra, cfg, strict=False)   # opt-out accepts it
+
+    wrong = dict(state)
+    wrong["model.norm.weight"] = np.zeros(3, np.float32)
+    with pytest.raises(ValueError, match="shape"):
+        import_hf_state(wrong, cfg)
+
+    hybrid = get_config("zamba2-1.2b").reduced()
+    with pytest.raises(NotImplementedError, match="family"):
+        import_hf_state(state, hybrid)
+
+    with pytest.raises(ValueError, match="safetensors"):
+        p = tmp_path / "short.safetensors"
+        p.write_bytes(b"abc")
+        read_safetensors(p)
+
+
+def test_safetensors_dtype_fidelity(tmp_path):
+    """f16/bf16/int tensors survive the byte-level round trip."""
+    import ml_dtypes
+    tensors = {
+        "a": np.arange(6, dtype=np.float16).reshape(2, 3),
+        "b": np.arange(4, dtype=np.int64),
+        "c": np.linspace(-1, 1, 8, dtype=np.float32).astype(
+            ml_dtypes.bfloat16),
+    }
+    p = tmp_path / "t.safetensors"
+    write_safetensors(p, tensors)
+    back = read_safetensors(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        assert back[k].dtype == tensors[k].dtype
+        assert np.array_equal(back[k], tensors[k])
